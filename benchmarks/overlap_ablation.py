@@ -1,0 +1,99 @@
+"""Paper Fig. 13 analogue: is a *hybrid* top-level engine worth it?
+
+The paper replaces the top hierarchy level with an RT-core triangle scene
+and finds the OptiX overhead negates the benefit (§5.4).  TPUs have no
+second compute engine (DESIGN.md §2.1), so the faithful analogue asks the
+same *design question* with TPU-available mechanisms:
+
+  (a) unified      — top level scanned inside the same query pass (ours);
+  (b) two-phase    — the query pass plus a separate dispatched call over
+                     its results (models handing the top level to a
+                     different engine: extra dispatch + intermediate
+                     materialization — the OptiX-overhead analogue);
+  (c) hybrid-index — replace the top-level scan with a sparse-table O(1)
+                     lookup structure (a different index for the top —
+                     the closest analogue of the BVH top): we report its
+                     *extra build cost* and the top level's size, which
+                     bound the best case.
+
+Expected reproduction of the paper's negative result: (b) never beats (a)
+— the top level is tiny and VMEM/cache-resident, so there is nothing for
+a second engine to win back, and its dispatch overhead is pure loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, make_input_array, make_queries, time_fn
+from repro.core.api import RMQ
+from repro.core.baselines import SparseTable
+from repro.core.hierarchy import build_hierarchy
+from repro.core.plan import make_plan
+from repro.core.query import _rmq_batch
+
+
+def run(n=2**22, m=2**13, c=128, t=64):
+    x = jnp.asarray(make_input_array(n))
+    plan = make_plan(n, c=c, t=t)
+    h = build_hierarchy(x, plan)
+    ls, rs = make_queries(n, m, "mixed")
+    lsj, rsj = jnp.asarray(ls), jnp.asarray(rs)
+
+    # (a) unified
+    rmq = RMQ(hierarchy=h, backend="jax")
+    t_unified = time_fn(lambda: rmq.query(lsj, rsj))
+
+    # (b) two-phase: full pass + a separate dispatched combine step
+    @jax.jit
+    def phase1(ls, rs):
+        mvals, _ = _rmq_batch(plan, h.base, h.upper, None, ls, rs,
+                              track_pos=False)
+        return mvals
+
+    @jax.jit
+    def phase2(vals):  # stands in for the separate top-engine dispatch
+        return jnp.minimum(vals, jnp.inf)
+
+    t_twophase = time_fn(lambda: phase2(phase1(lsj, rsj)))
+
+    # (c) hybrid-index: sparse-table top (core/hybrid.py), larger t so
+    # the O(1) top replaces a whole level (paper §4.5 implication (1))
+    from repro.core.hybrid import HybridRMQ
+
+    hyb = HybridRMQ.build(x, c=c, t=max(t * 16, 1024))
+    t_hybrid = time_fn(lambda: hyb.query(lsj, rsj))
+    top_off, top_len = plan.offsets[-1], plan.padded_lens[-1]
+    top = h.upper[top_off : top_off + top_len]
+    t_hybrid_build = time_fn(lambda: SparseTable.build(top).table, repeats=3)
+
+    return {
+        "unified_ns": t_unified / m * 1e9,
+        "two_phase_ns": t_twophase / m * 1e9,
+        "hybrid_ns": t_hybrid / m * 1e9,
+        "hybrid_levels": hyb.plan.num_levels,
+        "unified_levels": plan.num_levels,
+        "top_sparse_build_ms": t_hybrid_build * 1e3,
+        "top_len": int(top_len),
+    }
+
+
+def main():
+    r = run()
+    print("name,us_per_call,derived")
+    print(csv_row("overlap_unified", r["unified_ns"] / 1e3, ""))
+    print(csv_row("overlap_two_phase", r["two_phase_ns"] / 1e3,
+                  f"overhead={r['two_phase_ns']/r['unified_ns']:.2f}x"))
+    print(csv_row("overlap_hybrid_sparse_top", r["hybrid_ns"] / 1e3,
+                  f"levels={r['hybrid_levels']}vs{r['unified_levels']}"
+                  f"|vs_unified={r['hybrid_ns']/r['unified_ns']:.2f}x"))
+    print(csv_row("overlap_top_sparse_build", r["top_sparse_build_ms"] * 1e3,
+                  f"top_len={r['top_len']}"))
+    # the paper's negative result: the separate-engine dispatch adds
+    # overhead instead of speedup
+    assert r["two_phase_ns"] >= r["unified_ns"] * 0.95, r
+
+
+if __name__ == "__main__":
+    main()

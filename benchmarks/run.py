@@ -1,0 +1,40 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract; the
+roofline module additionally writes results/roofline.{md,json} from the
+dry-run artifacts when present.
+"""
+
+import sys
+import traceback
+
+MODULES = [
+    ("memory_footprint", "Fig. 15 memory footprint"),
+    ("construction", "Fig. 17 construction time"),
+    ("throughput", "Fig. 16 RMQ throughput by range class"),
+    ("tuning", "Fig. 12 (c, t) tuning"),
+    ("query_assignment", "Fig. 14 multi-load vs WLQ"),
+    ("coalesced_access", "Fig. 4 access coalescing microbench"),
+    ("overlap_ablation", "Fig. 13 hybrid top-level ablation"),
+    ("roofline", "LM framework roofline (from dry-run artifacts)"),
+]
+
+
+def main() -> None:
+    failures = []
+    for mod_name, desc in MODULES:
+        print(f"# === {mod_name}: {desc} ===", flush=True)
+        try:
+            mod = __import__(f"benchmarks.{mod_name}",
+                             fromlist=["main"])
+            mod.main()
+        except Exception as e:
+            failures.append((mod_name, e))
+            print(f"# FAILED {mod_name}: {e}")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

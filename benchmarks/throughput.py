@@ -1,0 +1,79 @@
+"""Paper Fig. 16: average time per RMQ for batched queries.
+
+Runs all methods × range-size classes (small/medium/large/mixed) over a
+range of n.  Checks the paper's relative claims:
+
+* GPU-RMQ beats Full Scan by orders of magnitude on large ranges;
+* GPU-RMQ's time per query is nearly range-size independent (paper §5.8),
+  unlike Full Scan (linear in range size);
+* the hierarchy stays within a small factor of the O(1)-query sparse
+  table while using ~100× less auxiliary memory.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, make_input_array, make_queries, time_fn
+from repro.core.api import RMQ
+from repro.core.baselines import FullScan, SparseTable
+
+
+def run(sizes=(2**18, 2**20, 2**22), m=2**14, kinds=("small", "medium",
+                                                     "large", "mixed")):
+    rows = []
+    for n in sizes:
+        x = jnp.asarray(make_input_array(n))
+        rmq = RMQ.build(x, c=128, t=64, backend="jax")
+        sparse = SparseTable.build(x)
+        full = FullScan.build(x)
+        for kind in kinds:
+            ls, rs = make_queries(n, m, kind)
+            lsj, rsj = jnp.asarray(ls), jnp.asarray(rs)
+            t_ours = time_fn(lambda: rmq.query(lsj, rsj)) / m
+            t_sparse = time_fn(lambda: sparse.query_batch(lsj, rsj)) / m
+            # full scan is slow: fewer queries
+            mf = min(m, 512)
+            lf, rf = jnp.asarray(ls[:mf]), jnp.asarray(rs[:mf])
+            t_full = time_fn(lambda: full.query_batch(lf, rf),
+                             repeats=3) / mf
+            rows.append({
+                "n": n, "kind": kind,
+                "ours_ns": t_ours * 1e9,
+                "sparse_ns": t_sparse * 1e9,
+                "full_ns": t_full * 1e9,
+            })
+    return rows
+
+
+def main():
+    rows = run()
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(csv_row(
+            f"throughput_n{r['n']}_{r['kind']}",
+            r["ours_ns"] / 1e3,
+            f"sparse={r['sparse_ns']:.0f}ns|full={r['full_ns']:.0f}ns"
+            f"|vs_full={r['full_ns']/r['ours_ns']:.1f}x",
+        ))
+    # paper-shape claims
+    big = [r for r in rows if r["n"] == max(x["n"] for x in rows)]
+    large = next(r for r in big if r["kind"] == "large")
+    small = next(r for r in big if r["kind"] == "small")
+    assert large["full_ns"] / large["ours_ns"] > 50, (
+        "hierarchy must beat full scan by >50x on large ranges at 4M",
+        large,
+    )
+    # range-size independence (paper §5.8: GPU-RMQ behaves almost
+    # identically across range sizes once n is large)
+    ratio_ours = large["ours_ns"] / small["ours_ns"]
+    assert ratio_ours < 10, ratio_ours
+    # NOTE (hardware adaptation): the paper's Full GPU Scan slows with
+    # range size because CUDA threads exit early per-query; a fixed-shape
+    # masked scan on SIMD hardware does O(n) work per query regardless,
+    # so range dependence does NOT reproduce for the full-scan baseline
+    # here — recorded in EXPERIMENTS.md instead of asserted.
+
+
+if __name__ == "__main__":
+    main()

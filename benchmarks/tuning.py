@@ -1,0 +1,78 @@
+"""Paper Fig. 12: tuning chunk size c and cutoff t (VL vs CL analogue).
+
+Sweeps (c, t) over several array sizes and reports per-size slowdown
+relative to the best config, reproducing the paper's findings:
+
+* no single configuration is optimal for every n;
+* small c (the VL regime, c=8: vector-width-sized chunks) wins at small n;
+* hardware-atom-aligned c wins at large n (paper: c=32 ⇒ 128 B GPU cache
+  line; TPU: c=128/256 ⇒ (8,128) f32 VMEM tile multiples);
+* smaller t is uniformly better (fewer top-level entries to scan).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, make_input_array, make_queries, time_fn
+from repro.core.api import RMQ
+
+
+def run(sizes=(2**16, 2**20, 2**23), m=2**13):
+    configs = [
+        (8, 8), (8, 64),
+        (32, 8), (32, 64),
+        (128, 8), (128, 64),
+        (256, 8), (256, 64),
+        (512, 8),
+    ]
+    rows = []
+    for n in sizes:
+        x = jnp.asarray(make_input_array(n))
+        ls, rs = make_queries(n, m, "mixed")
+        lsj, rsj = jnp.asarray(ls), jnp.asarray(rs)
+        times = {}
+        for c, t in configs:
+            if c * t >= n:
+                continue
+            rmq = RMQ.build(x, c=c, t=t, backend="jax")
+            times[(c, t)] = time_fn(lambda: rmq.query(lsj, rsj), repeats=3)
+        best = min(times.values())
+        for (c, t), tt in sorted(times.items()):
+            rows.append({
+                "n": n, "c": c, "t": t,
+                "ns_per_query": tt / m * 1e9,
+                "slowdown": tt / best,
+            })
+    return rows
+
+
+def main():
+    rows = run()
+    print("name,us_per_call,derived")
+    best_by_n = {}
+    for r in rows:
+        print(csv_row(
+            f"tuning_n{r['n']}_c{r['c']}_t{r['t']}",
+            r["ns_per_query"] / 1e3,
+            f"slowdown={r['slowdown']:.2f}x",
+        ))
+        key = r["n"]
+        if key not in best_by_n or r["slowdown"] < best_by_n[key][2]:
+            best_by_n[key] = (r["c"], r["t"], r["slowdown"])
+    for n, (c, t, _) in sorted(best_by_n.items()):
+        print(f"tuning_best_n{n},0,c={c}|t={t}")
+    # paper claim: smaller t at least as good for fixed c (check c=128)
+    for n in {r["n"] for r in rows}:
+        t8 = [r for r in rows if r["n"] == n and r["c"] == 128
+              and r["t"] == 8]
+        t64 = [r for r in rows if r["n"] == n and r["c"] == 128
+               and r["t"] == 64]
+        if t8 and t64:
+            assert t8[0]["ns_per_query"] <= t64[0]["ns_per_query"] * 1.35, (
+                n, t8[0]["ns_per_query"], t64[0]["ns_per_query"]
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    ModelConfig,
+    RMQConfig,
+    ServeConfig,
+    TrainConfig,
+    get_config,
+    get_smoke_config,
+    registry,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "ModelConfig",
+    "RMQConfig",
+    "ServeConfig",
+    "TrainConfig",
+    "get_config",
+    "get_smoke_config",
+    "registry",
+]

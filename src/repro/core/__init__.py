@@ -1,0 +1,33 @@
+"""GPU-RMQ core: hierarchical range-minimum structure, TPU-adapted.
+
+Public API:
+
+    from repro.core import RMQ, make_plan, build_hierarchy
+
+    rmq = RMQ.build(x, c=128, t=64)           # value-only
+    vals = rmq.query(ls, rs)                  # batched RMQ_value
+    rmq = RMQ.build(x, with_positions=True)
+    pos  = rmq.query_index(ls, rs)            # batched RMQ_index (leftmost)
+"""
+
+from repro.core.api import RMQ
+from repro.core.hierarchy import Hierarchy, build_hierarchy
+from repro.core.plan import HierarchyPlan, make_plan
+from repro.core.query import (
+    rmq_index,
+    rmq_index_batch,
+    rmq_value,
+    rmq_value_batch,
+)
+
+__all__ = [
+    "RMQ",
+    "Hierarchy",
+    "HierarchyPlan",
+    "build_hierarchy",
+    "make_plan",
+    "rmq_value",
+    "rmq_value_batch",
+    "rmq_index",
+    "rmq_index_batch",
+]

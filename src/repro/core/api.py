@@ -1,0 +1,92 @@
+"""User-facing RMQ facade: backend selection (pure JAX vs. Pallas kernels).
+
+``backend="auto"`` uses the Pallas query/build kernels when running on TPU
+and the pure-JAX reference elsewhere (the kernels also run under
+``interpret=True`` on CPU, which the test suite exercises; interpret mode is
+a correctness tool, not a performance path, so "auto" avoids it at runtime).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hierarchy import Hierarchy, build_hierarchy
+from repro.core.plan import HierarchyPlan, make_plan
+from repro.core.query import rmq_index_batch, rmq_value_batch
+
+__all__ = ["RMQ"]
+
+
+def _default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "jax"
+
+
+@dataclasses.dataclass(frozen=True)
+class RMQ:
+    """A built range-minimum index over a static array (paper §4)."""
+
+    hierarchy: Hierarchy
+    backend: str
+
+    # -- construction -----------------------------------------------------
+    @staticmethod
+    def build(
+        x,
+        c: int = 128,
+        t: int = 64,
+        with_positions: bool = False,
+        backend: str = "auto",
+        plan: Optional[HierarchyPlan] = None,
+    ) -> "RMQ":
+        x = jnp.asarray(x)
+        if x.dtype not in (jnp.float32, jnp.bfloat16, jnp.float64):
+            x = x.astype(jnp.float32)
+        if plan is None:
+            plan = make_plan(int(x.shape[0]), c=c, t=t)
+        if backend == "auto":
+            backend = _default_backend()
+        if backend == "pallas":
+            from repro.kernels.hierarchy_build import ops as build_ops
+
+            h = build_ops.build_hierarchy_pallas(
+                x, plan, with_positions=with_positions
+            )
+        elif backend == "jax":
+            h = build_hierarchy(x, plan, with_positions=with_positions)
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+        return RMQ(hierarchy=h, backend=backend)
+
+    # -- queries ----------------------------------------------------------
+    def query(self, ls, rs) -> jax.Array:
+        """Batched ``RMQ_value`` over inclusive ranges."""
+        ls, rs = jnp.asarray(ls), jnp.asarray(rs)
+        if self.backend == "pallas":
+            from repro.kernels.rmq_scan import ops as scan_ops
+
+            return scan_ops.rmq_value_batch_pallas(self.hierarchy, ls, rs)
+        return rmq_value_batch(self.hierarchy, ls, rs)
+
+    def query_index(self, ls, rs) -> jax.Array:
+        """Batched ``RMQ_index`` (leftmost minimum) over inclusive ranges."""
+        ls, rs = jnp.asarray(ls), jnp.asarray(rs)
+        if self.backend == "pallas":
+            from repro.kernels.rmq_scan import ops as scan_ops
+
+            return scan_ops.rmq_index_batch_pallas(self.hierarchy, ls, rs)
+        return rmq_index_batch(self.hierarchy, ls, rs)
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def plan(self) -> HierarchyPlan:
+        return self.hierarchy.plan
+
+    def memory_bytes(self) -> int:
+        return self.hierarchy.memory_bytes()
+
+    def auxiliary_bytes(self) -> int:
+        return self.hierarchy.auxiliary_bytes()

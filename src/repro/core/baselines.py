@@ -1,0 +1,164 @@
+"""Baseline RMQ methods the paper compares against (§5.2), in JAX.
+
+The paper's GPU baselines (LCA, RTXRMQ) are CUDA/OptiX artifacts that do
+not transfer to TPU mechanically (Euler-tour pointer chasing; RT-core BVH).
+We implement baselines that occupy the *same design points* the paper uses
+them to represent:
+
+* ``FullScan``        — no preprocessing, O(range) per query
+                        (== the paper's "Full GPU Scan").
+* ``SparseTable``     — O(n log n) memory, O(1) per query: the classic
+                        memory-heavy end of the space/time trade-off, the
+                        profile the paper attributes to LCA (§2.1, Fig. 15).
+* ``TwoLevelBlocks``  — 2n/c + n memory, O(c + n/c) query: the low-memory /
+                        modest-throughput profile of CPU HRMQ-style block
+                        decompositions (a GPU-RMQ hierarchy capped at two
+                        levels, which is exactly Fischer–Heun's first stage).
+
+All three share the batched ``(ls, rs) -> values`` interface of
+``repro.core.query`` so the benchmark harness treats every method uniformly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hierarchy import build_hierarchy
+from repro.core.plan import make_plan
+from repro.core.query import rmq_value_batch
+
+__all__ = ["FullScan", "SparseTable", "TwoLevelBlocks"]
+
+
+# --------------------------------------------------------------------------
+# Full scan
+# --------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FullScan:
+    """One masked min over the whole array per query (paper: Full GPU Scan)."""
+
+    x: jax.Array
+
+    @staticmethod
+    def build(x: jax.Array) -> "FullScan":
+        return FullScan(x=x)
+
+    def memory_bytes(self) -> int:
+        return self.x.size * self.x.dtype.itemsize
+
+    def auxiliary_bytes(self) -> int:
+        return 0
+
+    def query_batch(self, ls: jax.Array, rs: jax.Array) -> jax.Array:
+        return _full_scan_batch(self.x, ls, rs)
+
+
+@jax.jit
+def _full_scan_batch(x, ls, rs):
+    n = x.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+
+    def one(l, r):
+        mask = (idx >= l) & (idx <= r)
+        return jnp.min(jnp.where(mask, x, jnp.inf))
+
+    # lax.map keeps peak memory at O(n) instead of O(batch * n).
+    return jax.lax.map(lambda q: one(q[0], q[1]),
+                       jnp.stack([ls, rs], axis=1),
+                       batch_size=256)
+
+
+# --------------------------------------------------------------------------
+# Sparse table (memory-heavy / O(1) query — the LCA design point)
+# --------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SparseTable:
+    """``table[j, i] = min(x[i : i + 2^j])`` — O(n log n) memory, O(1) query.
+
+    Mirrors the memory profile the paper criticizes in LCA/RTXRMQ: the
+    auxiliary structure is a large multiple of the input (log2(n) times),
+    which is what makes it infeasible for n >= 2^29 on a 24 GB GPU (Fig. 15).
+    """
+
+    table: jax.Array  # (num_levels, n)
+    n: int = dataclasses.field(metadata=dict(static=True))
+
+    @staticmethod
+    def build(x: jax.Array) -> "SparseTable":
+        n = int(x.shape[0])
+        num_levels = max(1, n.bit_length())  # j = 0 .. floor(log2(n))
+        rows = [x]
+        for j in range(1, num_levels):
+            prev = rows[-1]
+            half = 1 << (j - 1)
+            shifted = jnp.concatenate(
+                [prev[half:], jnp.full((half,), jnp.inf, dtype=x.dtype)]
+            )
+            rows.append(jnp.minimum(prev, shifted))
+        return SparseTable(table=jnp.stack(rows), n=n)
+
+    def memory_bytes(self) -> int:
+        return (
+            self.table.size * self.table.dtype.itemsize
+        )
+
+    def auxiliary_bytes(self) -> int:
+        return self.memory_bytes() - self.n * self.table.dtype.itemsize
+
+    def query_batch(self, ls: jax.Array, rs: jax.Array) -> jax.Array:
+        return _sparse_table_batch(self.table, ls, rs)
+
+
+@jax.jit
+def _sparse_table_batch(table, ls, rs):
+    def one(l, r):
+        span = r - l + 1
+        # floor(log2(span)) without host math.
+        j = (31 - jax.lax.clz(span.astype(jnp.int32))).astype(jnp.int32)
+        left = table[j, l]
+        right = table[j, r + 1 - (1 << j.astype(jnp.uint32)).astype(jnp.int32)]
+        return jnp.minimum(left, right)
+
+    return jax.vmap(one)(ls.astype(jnp.int32), rs.astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Two-level block decomposition (the HRMQ design point)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TwoLevelBlocks:
+    """GPU-RMQ hierarchy capped at exactly two levels.
+
+    With block size c, a query scans two partial blocks (O(c)) plus the
+    block-minima array (O(n/c)) — the sqrt-decomposition design point of
+    CPU block-based RMQ structures.
+    """
+
+    hierarchy: object
+
+    @staticmethod
+    def build(x: jax.Array, c: int = 256) -> "TwoLevelBlocks":
+        n = int(x.shape[0])
+        # Force at most two levels: pick t so the first reduction already
+        # satisfies the cutoff ceil(n/c) <= c*t.
+        t = max(1, math.ceil(math.ceil(n / c) / c))
+        plan = make_plan(n, c=c, t=t)
+        assert plan.num_levels <= 2
+        h = build_hierarchy(x, plan)
+        return TwoLevelBlocks(hierarchy=h)
+
+    def memory_bytes(self) -> int:
+        return self.hierarchy.memory_bytes()
+
+    def auxiliary_bytes(self) -> int:
+        return self.hierarchy.auxiliary_bytes()
+
+    def query_batch(self, ls: jax.Array, rs: jax.Array) -> jax.Array:
+        return rmq_value_batch(self.hierarchy, ls, rs)

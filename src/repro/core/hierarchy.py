@@ -1,0 +1,138 @@
+"""Construction of the GPU-RMQ minima hierarchy (paper §4.1, §4.4).
+
+Construction is a sequence of chunked min-reductions, one per level, built
+bottom-up.  On the GPU the paper assigns a warp group to each chunk and
+reduces with warp shuffles; on TPU each level build is a single dense
+``(m, c) -> (m,)`` reduction that XLA maps onto the VPU (and which the
+``kernels/hierarchy_build`` Pallas kernel tiles explicitly through VMEM).
+
+All upper levels live in one contiguous buffer (paper: "To further reduce
+allocation complexity, we store all precomputed layers in a single,
+contiguous buffer").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan import HierarchyPlan, make_plan
+
+__all__ = ["Hierarchy", "build_hierarchy", "make_plan"]
+
+# Sentinel position for padding entries (never selected because the padded
+# value is +inf and real values are finite).
+_PAD_POS = jnp.iinfo(jnp.int32).max
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Hierarchy:
+    """Device-resident minima hierarchy.
+
+    ``base`` is the original input array (level 0, unpadded).  ``upper``
+    holds levels 1..L-1 concatenated, each padded to a multiple of ``c``
+    with ``+inf``.  ``upper_pos`` (optional, for RMQ_index) stores for each
+    summary entry the position *in the original array* of its minimum,
+    leftmost on ties.
+    """
+
+    base: jax.Array
+    upper: jax.Array
+    upper_pos: Optional[jax.Array]
+    plan: HierarchyPlan = dataclasses.field(
+        metadata=dict(static=True)
+    )
+
+    @property
+    def with_positions(self) -> bool:
+        return self.upper_pos is not None
+
+    def memory_bytes(self) -> int:
+        """Total bytes of the structure (input + auxiliary)."""
+        total = self.base.size * self.base.dtype.itemsize
+        total += self.upper.size * self.upper.dtype.itemsize
+        if self.upper_pos is not None:
+            total += self.upper_pos.size * self.upper_pos.dtype.itemsize
+        return total
+
+    def auxiliary_bytes(self) -> int:
+        total = self.upper.size * self.upper.dtype.itemsize
+        if self.upper_pos is not None:
+            total += self.upper_pos.size * self.upper_pos.dtype.itemsize
+        return total
+
+
+def _pad_to(x: jax.Array, length: int, fill) -> jax.Array:
+    pad = length - x.shape[0]
+    if pad == 0:
+        return x
+    return jnp.pad(x, (0, pad), constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "with_positions"))
+def build_hierarchy(
+    x: jax.Array,
+    plan: HierarchyPlan,
+    with_positions: bool = False,
+) -> Hierarchy:
+    """Build the hierarchy for input ``x`` according to ``plan``.
+
+    Pure-JAX reference construction; the Pallas build kernel in
+    ``repro.kernels.hierarchy_build`` computes the same levels tile-by-tile
+    through VMEM and is validated against this function.
+    """
+    if x.ndim != 1:
+        raise ValueError(f"input must be rank-1, got shape {x.shape}")
+    if x.shape[0] != plan.n:
+        raise ValueError(f"plan is for n={plan.n}, input has n={x.shape[0]}")
+
+    c = plan.c
+    pos_dtype = jnp.int32 if plan.n < 2**31 else jnp.int64
+
+    levels_v = []
+    levels_p = []
+    cur_v = x
+    cur_p = (
+        jnp.arange(plan.n, dtype=pos_dtype) if with_positions else None
+    )
+    for k in range(1, plan.num_levels):
+        padded_len = plan.padded_lens[k - 1]
+        # The reduction consumes ceil(len/c)*c entries; pad the current
+        # level out to exactly c * padded-next-len before reshaping.
+        want = plan.level_lens[k] * c
+        inf = jnp.array(jnp.inf, dtype=cur_v.dtype)
+        v = _pad_to(cur_v, want, inf).reshape(-1, c)
+        idx = jnp.argmin(v, axis=1)
+        nxt_v = jnp.take_along_axis(v, idx[:, None], axis=1)[:, 0]
+        nxt_p = None
+        if with_positions:
+            base_positions = (
+                cur_p
+                if k > 1
+                else jnp.arange(plan.n, dtype=pos_dtype)
+            )
+            p = _pad_to(base_positions, want, jnp.array(_PAD_POS, pos_dtype))
+            p = p.reshape(-1, c)
+            nxt_p = jnp.take_along_axis(p, idx[:, None], axis=1)[:, 0]
+        # Store padded to a multiple of c.
+        nxt_v = _pad_to(nxt_v, padded_len, inf)
+        levels_v.append(nxt_v)
+        if with_positions:
+            nxt_p = _pad_to(nxt_p, padded_len, jnp.array(_PAD_POS, pos_dtype))
+            levels_p.append(nxt_p)
+        cur_v = nxt_v[: plan.level_lens[k]]
+        cur_p = nxt_p[: plan.level_lens[k]] if with_positions else None
+
+    if levels_v:
+        upper = jnp.concatenate(levels_v)
+        upper_pos = jnp.concatenate(levels_p) if with_positions else None
+    else:
+        upper = jnp.zeros((0,), dtype=x.dtype)
+        upper_pos = jnp.zeros((0,), dtype=pos_dtype) if with_positions else None
+
+    return Hierarchy(base=x, upper=upper, upper_pos=upper_pos, plan=plan)

@@ -1,0 +1,125 @@
+"""Hybrid RMQ: hierarchy lower levels + O(1) sparse-table top (paper §4.5).
+
+The paper's §4.5 replaces the top-level linear scan with a different index
+engine (an RT-core triangle scene).  The portable version of that design
+question is: *does a constant-time index over the top level beat scanning
+it?*  This module implements the hybrid faithfully with a sparse table:
+
+* levels 0..L-2: the standard boundary-chunk walk (identical cost);
+* top level: one O(1) sparse-table lookup instead of an O(c·t) scan.
+
+Trade-off surface (mirrors the paper's Fig. 13 analysis):
+* extra memory: the top level has T <= c·t entries ⇒ table is
+  T·log2(T) entries — tiny in absolute terms but up to log2(T)× the top
+  level itself;
+* extra build: one log2(T)-pass table build after the hierarchy build;
+* query win: replaces the ct-entry masked scan with 2 loads — only pays
+  off when c·t is large (exactly the paper's conclusion: with a small,
+  cache/VMEM-resident top level there is little to win back, which is why
+  RT cores lost; with a LARGE t — which the hybrid enables, paper §4.5
+  implication (1) — the hybrid frontier shifts).
+
+``HybridRMQ`` supports RMQ_value (the paper's hybrid is value-only too:
+RTXRMQ triangles encode values).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines import SparseTable
+from repro.core.hierarchy import Hierarchy, build_hierarchy
+from repro.core.plan import HierarchyPlan, make_plan
+
+__all__ = ["HybridRMQ"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridRMQ:
+    """Minima hierarchy with a sparse-table top level."""
+
+    hierarchy: Hierarchy
+    top_table: SparseTable
+
+    @staticmethod
+    def build(x, c: int = 128, t: int = 1024) -> "HybridRMQ":
+        """Note the default t is 16x the scan version's: the O(1) top
+        makes large tops free at query time (paper §4.5 implication (1)),
+        which in turn removes one hierarchy level."""
+        x = jnp.asarray(x, jnp.float32)
+        plan = make_plan(int(x.shape[0]), c=c, t=t)
+        h = build_hierarchy(x, plan)
+        if plan.num_levels == 1:
+            top = x
+        else:
+            off, padded = plan.level_slice(plan.num_levels - 1)
+            top = h.upper[off : off + plan.top_len]
+        return HybridRMQ(hierarchy=h, top_table=SparseTable.build(top))
+
+    @property
+    def plan(self) -> HierarchyPlan:
+        return self.hierarchy.plan
+
+    def auxiliary_bytes(self) -> int:
+        return (
+            self.hierarchy.auxiliary_bytes()
+            + self.top_table.auxiliary_bytes()
+        )
+
+    def query(self, ls, rs) -> jax.Array:
+        ls = jnp.asarray(ls, jnp.int32)
+        rs = jnp.asarray(rs, jnp.int32)
+        return _hybrid_batch(
+            self.plan, self.hierarchy.base, self.hierarchy.upper,
+            self.top_table.table, ls, rs,
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _hybrid_batch(plan, base, upper, top_table, ls, rs):
+    return jax.vmap(
+        lambda l, r: _hybrid_single(plan, base, upper, top_table, l, r)
+    )(ls, rs)
+
+
+def _hybrid_single(plan: HierarchyPlan, base, upper, top_table, l, r):
+    """Branch-free walk for levels 0..L-2 + O(1) table lookup at the top."""
+    from repro.kernels.rmq_scan.ref import _window
+
+    c = plan.c
+    l = l.astype(jnp.int32)
+    r = (r + 1).astype(jnp.int32)
+    m = jnp.float32(jnp.inf)
+
+    for level in range(plan.num_levels - 1):
+        if level == 0:
+            arr = base
+        else:
+            off, padded = plan.level_slice(level)
+            arr = jax.lax.slice(upper, (off,), (off + padded,))
+        next_l = ((l + c - 1) // c) * c
+        prev_r = (r // c) * c
+        m2, _ = _window(arr, None, (l // c) * c, l,
+                        jnp.minimum(next_l, r), c, False)
+        m = jnp.minimum(m, m2)
+        m2, _ = _window(arr, None, prev_r, jnp.maximum(prev_r, l), r, c,
+                        False)
+        m = jnp.minimum(m, m2)
+        l = (l + c - 1) // c
+        r = r // c
+
+    # --- O(1) top: sparse table on [l, r) (empty range -> +inf) ---------
+    nonempty = r > l
+    rr = jnp.maximum(r - 1, l)          # inclusive, clamped
+    span = rr - l + 1
+    j = (31 - jax.lax.clz(span.astype(jnp.int32))).astype(jnp.int32)
+    left = top_table[j, l]
+    right = top_table[j, rr + 1 - (1 << j.astype(jnp.uint32)).astype(
+        jnp.int32)]
+    top_min = jnp.minimum(left, right)
+    return jnp.where(nonempty, jnp.minimum(m, top_min), m)

@@ -1,0 +1,140 @@
+"""Static geometry of a GPU-RMQ minima hierarchy (paper §4.1).
+
+The hierarchy layout is fully determined by ``(n, c, t)``:
+
+* ``n`` — input array length (level 0 is the input itself).
+* ``c`` — chunk size: each level-(k+1) entry summarizes ``c`` adjacent
+  level-k entries. Power of two, as in the paper.
+* ``t`` — build cutoff: we stop adding levels once the topmost level holds
+  at most ``c * t`` entries (i.e. at most ``t`` chunks), so the final scan
+  touches at most ``c * t`` entries.
+
+Everything in this module is *static* Python metadata (hashable, usable as a
+``jax.jit`` static argument).  Device arrays never appear here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+__all__ = ["HierarchyPlan", "make_plan"]
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _round_up(a: int, b: int) -> int:
+    return _ceil_div(a, b) * b
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchyPlan:
+    """Immutable description of the level geometry.
+
+    Attributes
+    ----------
+    n:            logical input length (level 0).
+    c:            chunk size (power of two).
+    t:            build cutoff threshold (max chunks on the top level).
+    level_lens:   logical length of every level, ``level_lens[0] == n``.
+    padded_lens:  each level's stored length, rounded up to a multiple of
+                  ``c`` (upper levels only are materialized; the base array
+                  is stored unpadded).
+    offsets:      start offset of each *upper* level (k >= 1) inside the
+                  single contiguous ``upper`` buffer (paper: "we store all
+                  precomputed layers in a single, contiguous buffer").
+    """
+
+    n: int
+    c: int
+    t: int
+    level_lens: Tuple[int, ...]
+    padded_lens: Tuple[int, ...]
+    offsets: Tuple[int, ...]
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.level_lens)
+
+    @property
+    def num_upper_levels(self) -> int:
+        return self.num_levels - 1
+
+    @property
+    def upper_size(self) -> int:
+        """Total entries in the contiguous upper buffer."""
+        if self.num_levels == 1:
+            return 0
+        return self.offsets[-1] + self.padded_lens[-1]
+
+    @property
+    def top_len(self) -> int:
+        """Logical length of the topmost level."""
+        return self.level_lens[-1]
+
+    @property
+    def top_padded_len(self) -> int:
+        if self.num_levels == 1:
+            return self.level_lens[0]
+        return self.padded_lens[-1]
+
+    def level_slice(self, level: int) -> Tuple[int, int]:
+        """(offset, padded_len) of an upper level inside the upper buffer."""
+        if level < 1 or level >= self.num_levels:
+            raise ValueError(f"level {level} is not an upper level")
+        return self.offsets[level - 1], self.padded_lens[level - 1]
+
+    # -- paper §4.1 analytical bounds ------------------------------------
+    def max_scanned_entries(self) -> int:
+        """Worst-case scanned entries: ``c*t + 2c*log_c(n)`` (paper §4.1)."""
+        return self.c * self.t + 2 * self.c * max(self.num_levels - 1, 0)
+
+    def memory_bound_entries(self) -> float:
+        """Upper bound on auxiliary entries: ``n / (c - 1)`` (paper §4.1)."""
+        return self.n / (self.c - 1)
+
+    def auxiliary_entries(self) -> int:
+        """Actual auxiliary entries materialized (excludes the input)."""
+        return self.upper_size
+
+    def overhead_fraction(self) -> float:
+        """Auxiliary memory as a fraction of the input array."""
+        return self.auxiliary_entries() / max(self.n, 1)
+
+
+def make_plan(n: int, c: int = 128, t: int = 64) -> HierarchyPlan:
+    """Compute the level geometry for an input of length ``n``.
+
+    Levels are added bottom-up until the topmost level holds at most
+    ``c * t`` entries.  For ``n <= c * t`` the plan degenerates to a single
+    level (pure scan), which is both correct and what the paper's cutoff
+    implies.
+    """
+    if n <= 0:
+        raise ValueError(f"n must be positive, got {n}")
+    if c < 2 or (c & (c - 1)) != 0:
+        raise ValueError(f"chunk size c must be a power of two >= 2, got {c}")
+    if t < 1:
+        raise ValueError(f"threshold t must be >= 1, got {t}")
+
+    level_lens = [n]
+    while level_lens[-1] > c * t:
+        level_lens.append(_ceil_div(level_lens[-1], c))
+
+    padded = [_round_up(m, c) for m in level_lens[1:]]
+    offsets = []
+    acc = 0
+    for p in padded:
+        offsets.append(acc)
+        acc += p
+
+    return HierarchyPlan(
+        n=n,
+        c=c,
+        t=t,
+        level_lens=tuple(level_lens),
+        padded_lens=tuple(padded),
+        offsets=tuple(offsets),
+    )

@@ -1,0 +1,201 @@
+"""Batched hierarchical RMQ answering (paper §4.2–§4.4), pure-JAX reference.
+
+This mirrors the paper's Listing 2 with JAX-compatible control flow: the
+level walk is unrolled over the *static* number of levels from the
+``HierarchyPlan``; the data-dependent early exit (``r - l <= 2c``) becomes a
+``done`` predicate that masks later levels to no-ops.
+
+Scans are fixed-size masked windows:
+
+* boundary scans (levels we pass through) read one aligned ``c``-wide window
+  on each side — exactly the paper's "random but cache-aligned chunk
+  accesses";
+* the stop-level scan reads a ``2c`` window starting at ``l`` (the paper
+  guarantees ``r - l <= 2c`` there);
+* the top level is scanned in full (``<= c*t`` entries), masked to
+  ``[l, r)``.
+
+This module is the *oracle* for the Pallas query kernel
+(``repro.kernels.rmq_scan``) and is itself fast enough to serve as the
+production path on non-TPU backends.
+
+Query convention: ``(l, r)`` are **inclusive** bounds, ``0 <= l <= r < n``,
+matching the paper's problem statement (§2.1).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hierarchy import Hierarchy
+from repro.core.plan import HierarchyPlan
+
+__all__ = ["rmq_value", "rmq_index", "rmq_value_batch", "rmq_index_batch"]
+
+_POS_INF_I32 = jnp.iinfo(jnp.int32).max
+
+
+def _merge(m, p, m2, p2):
+    """Combine two (min-value, leftmost-position) candidates."""
+    take2 = (m2 < m) | ((m2 == m) & (p2 < p))
+    return jnp.where(take2, m2, m), jnp.where(take2, p2, p)
+
+
+def _masked_window_scan(arr, pos_arr, start, lo, hi, window, track_pos):
+    """min over ``arr[i]`` for ``i in [lo, hi) ∩ [start, start+window)``.
+
+    ``start`` is clamped by ``dynamic_slice`` semantics; masking uses the
+    *absolute* indices of the slice actually read, so clamping is safe.
+    Returns ``(min_value, min_position)`` with +inf / INT32_MAX identities.
+    """
+    n = arr.shape[0]
+    window = min(window, n)
+    start = jnp.clip(start, 0, max(n - window, 0)).astype(jnp.int32)
+    vals = jax.lax.dynamic_slice(arr, (start,), (window,))
+    idx = start + jnp.arange(window, dtype=jnp.int32)
+    mask = (idx >= lo) & (idx < hi)
+    inf = jnp.array(jnp.inf, dtype=arr.dtype)
+    masked = jnp.where(mask, vals, inf)
+    m = jnp.min(masked)
+    if track_pos:
+        if pos_arr is None:
+            pos = idx  # level 0: position is the index itself
+        else:
+            pos = jax.lax.dynamic_slice(pos_arr, (start,), (window,))
+        cand = jnp.where(mask & (masked == m), pos, _POS_INF_I32)
+        p = jnp.min(cand).astype(jnp.int32)
+    else:
+        p = jnp.array(_POS_INF_I32, dtype=jnp.int32)
+    return m, p
+
+
+def _rmq_single(
+    plan: HierarchyPlan,
+    base: jax.Array,
+    upper: jax.Array,
+    upper_pos,
+    l: jax.Array,
+    r: jax.Array,
+    track_pos: bool,
+) -> Tuple[jax.Array, jax.Array]:
+    """Answer a single RMQ; vmapped over the batch by the public API."""
+    c = plan.c
+    inf = jnp.array(jnp.inf, dtype=base.dtype)
+    m = inf
+    p = jnp.array(_POS_INF_I32, dtype=jnp.int32)
+    l = l.astype(jnp.int32)
+    r = (r + 1).astype(jnp.int32)  # make exclusive, as in Listing 2
+    done = jnp.array(False)
+
+    def level_arrays(level: int):
+        if level == 0:
+            return base, (None if upper_pos is None else None), plan.n
+        off, padded = plan.level_slice(level)
+        vals = jax.lax.slice(upper, (off,), (off + padded,))
+        pos = (
+            None
+            if upper_pos is None
+            else jax.lax.slice(upper_pos, (off,), (off + padded,))
+        )
+        return vals, pos, plan.level_lens[level]
+
+    for level in range(plan.num_levels):
+        arr, pos_arr, _ = level_arrays(level)
+        is_last = level == plan.num_levels - 1
+
+        if is_last:
+            stop_here = ~done
+        else:
+            stop_here = (~done) & ((r - l) <= 2 * c)
+
+        # --- stop-level scan -------------------------------------------
+        if is_last:
+            # Scan the whole (small) top level, masked to [l, r).
+            idx = jnp.arange(arr.shape[0], dtype=jnp.int32)
+            mask = stop_here & (idx >= l) & (idx < r)
+            masked = jnp.where(mask, arr, inf)
+            sm = jnp.min(masked)
+            if track_pos:
+                if pos_arr is None:
+                    pos = idx
+                else:
+                    pos = pos_arr
+                cand = jnp.where(mask & (masked == sm), pos, _POS_INF_I32)
+                sp = jnp.min(cand).astype(jnp.int32)
+            else:
+                sp = jnp.array(_POS_INF_I32, dtype=jnp.int32)
+        else:
+            # r - l <= 2c here, so a 2c window starting at l covers [l, r).
+            sm, sp = _masked_window_scan(
+                arr, pos_arr, l, l, jnp.where(stop_here, r, l), 2 * c,
+                track_pos,
+            )
+        m, p = _merge(m, p, jnp.where(stop_here, sm, inf),
+                      jnp.where(stop_here, sp, _POS_INF_I32))
+        done = done | stop_here
+
+        if is_last:
+            break
+
+        # --- boundary scans + ascend ------------------------------------
+        advance = ~done
+        next_l = ((l + c - 1) // c) * c  # next multiple of c >= l
+        prev_r = (r // c) * c            # largest multiple of c <= r
+
+        # Left partial chunk: [l, next_l) ⊂ [next_l - c, next_l).
+        lm, lp = _masked_window_scan(
+            arr, pos_arr, next_l - c, l, jnp.where(advance, next_l, l),
+            c, track_pos,
+        )
+        # Right partial chunk: [prev_r, r) ⊂ [prev_r, prev_r + c).
+        rm, rp = _masked_window_scan(
+            arr, pos_arr, prev_r, jnp.where(advance, prev_r, r), r,
+            c, track_pos,
+        )
+        m, p = _merge(m, p, jnp.where(advance, lm, inf),
+                      jnp.where(advance, lp, _POS_INF_I32))
+        m, p = _merge(m, p, jnp.where(advance, rm, inf),
+                      jnp.where(advance, rp, _POS_INF_I32))
+
+        l = jnp.where(advance, next_l // c, l)
+        r = jnp.where(advance, prev_r // c, r)
+
+    return m, p
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "track_pos"))
+def _rmq_batch(plan, base, upper, upper_pos, ls, rs, track_pos: bool = True):
+    fn = functools.partial(_rmq_single, plan, base, upper, upper_pos,
+                           track_pos=track_pos)
+    return jax.vmap(lambda l, r: fn(l=l, r=r))(ls, rs)
+
+
+def rmq_value_batch(h: Hierarchy, ls: jax.Array, rs: jax.Array) -> jax.Array:
+    """``RMQ_value`` for a batch of inclusive ranges."""
+    m, _ = _rmq_batch(h.plan, h.base, h.upper, None, ls, rs, track_pos=False)
+    return m
+
+
+def rmq_index_batch(h: Hierarchy, ls: jax.Array, rs: jax.Array) -> jax.Array:
+    """``RMQ_index`` (leftmost minimum position) for a batch of ranges."""
+    if not h.with_positions:
+        raise ValueError(
+            "hierarchy was built without positions; "
+            "use build_hierarchy(..., with_positions=True)"
+        )
+    _, p = _rmq_batch(h.plan, h.base, h.upper, h.upper_pos, ls, rs,
+                      track_pos=True)
+    return p
+
+
+def rmq_value(h: Hierarchy, l, r) -> jax.Array:
+    """Single-query convenience wrapper."""
+    return rmq_value_batch(h, jnp.asarray([l]), jnp.asarray([r]))[0]
+
+
+def rmq_index(h: Hierarchy, l, r) -> jax.Array:
+    return rmq_index_batch(h, jnp.asarray([l]), jnp.asarray([r]))[0]

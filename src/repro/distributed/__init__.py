@@ -1,0 +1,15 @@
+from repro.distributed.shardings import (
+    batch_shardings,
+    cache_shardings,
+    make_sharder,
+    param_shardings,
+    train_state_shardings,
+)
+
+__all__ = [
+    "batch_shardings",
+    "cache_shardings",
+    "make_sharder",
+    "param_shardings",
+    "train_state_shardings",
+]

@@ -1,0 +1,124 @@
+"""Fault tolerance: heartbeats, straggler detection, elastic re-mesh.
+
+This module is hardware-independent host logic; the CPU test-suite
+exercises it with simulated hosts and injected failures, and the same code
+paths drive a real multi-host deployment (the heartbeat transport would be
+the only swap — here an in-memory dict stands in for a kv-store).
+
+Components:
+
+* ``HeartbeatMonitor`` — hosts report per-step completion timestamps;
+  ``stragglers()`` flags hosts slower than ``threshold ×`` the fleet
+  median over a sliding window; ``dead()`` flags hosts silent for
+  ``timeout`` seconds.  Policy hooks decide warn / exclude.
+* ``plan_remesh`` — given surviving host count, pick the largest
+  production mesh that fits ((2,16,16) → (1,16,16) → (8,16) ...), keeping
+  the ``model`` axis intact (tensor-sharded weights must keep their axis;
+  only data-parallel width shrinks — capacity degrades, math doesn't).
+* ``ElasticTrainDriver`` (in launch/train.py) composes these with the
+  checkpoint manager: on failure → remesh → restore latest checkpoint with
+  the new mesh's shardings → reshard the data pipeline → continue.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    num_hosts: int
+    straggler_threshold: float = 2.0     # × median step time
+    dead_timeout: float = 60.0           # seconds of silence
+    window: int = 16
+
+    def __post_init__(self):
+        self._beats: Dict[int, List[Tuple[int, float]]] = {
+            h: [] for h in range(self.num_hosts)
+        }
+        self._excluded: set = set()
+
+    def report(self, host: int, step: int, t: Optional[float] = None):
+        if host in self._excluded:
+            return
+        self._beats[host].append((step, t if t is not None else time.time()))
+        self._beats[host] = self._beats[host][-self.window :]
+
+    def step_times(self, host: int) -> List[float]:
+        beats = self._beats[host]
+        return [b[1] - a[1] for a, b in zip(beats, beats[1:])]
+
+    def stragglers(self) -> List[int]:
+        per_host = {
+            h: (sum(ts) / len(ts))
+            for h, ts in ((h, self.step_times(h))
+                          for h in self._beats if h not in self._excluded)
+            if ts
+        }
+        if len(per_host) < 2:
+            return []
+        med = sorted(per_host.values())[len(per_host) // 2]
+        return [
+            h for h, t in per_host.items()
+            if t > self.straggler_threshold * med
+        ]
+
+    def dead(self, now: Optional[float] = None) -> List[int]:
+        now = now if now is not None else time.time()
+        out = []
+        for h, beats in self._beats.items():
+            if h in self._excluded:
+                continue
+            if not beats or now - beats[-1][1] > self.dead_timeout:
+                out.append(h)
+        return out
+
+    def exclude(self, host: int):
+        self._excluded.add(host)
+
+    @property
+    def active_hosts(self) -> int:
+        return self.num_hosts - len(self._excluded)
+
+
+# Production mesh ladder: preserve the model axis, shrink data parallelism.
+_MESH_LADDER: Sequence[Tuple[Tuple[int, ...], Tuple[str, ...]]] = (
+    ((2, 16, 16), ("pod", "data", "model")),
+    ((1, 16, 16), ("pod", "data", "model")),
+    ((16, 16), ("data", "model")),
+    ((8, 16), ("data", "model")),
+    ((4, 16), ("data", "model")),
+    ((2, 16), ("data", "model")),
+    ((1, 16), ("data", "model")),
+)
+
+
+def plan_remesh(available_chips: int,
+                require_model: int = 16) -> Tuple[Tuple[int, ...],
+                                                  Tuple[str, ...]]:
+    """Largest ladder entry that fits the surviving chip count."""
+    for shape, axes in _MESH_LADDER:
+        chips = 1
+        for s in shape:
+            chips *= s
+        model = shape[axes.index("model")]
+        if chips <= available_chips and model == require_model:
+            return shape, axes
+    raise RuntimeError(
+        f"cannot build a mesh with model={require_model} from "
+        f"{available_chips} chips"
+    )
+
+
+def global_batch_for(shape: Tuple[int, ...], axes: Tuple[str, ...],
+                     per_replica_batch: int) -> int:
+    """Data-parallel width × per-replica batch (elastic batch policy:
+    keep per-replica batch fixed, let global batch scale with survivors —
+    the alternative fixed-global policy is a flag in launch/train.py)."""
+    dp = 1
+    for s, a in zip(shape, axes):
+        if a in ("pod", "data"):
+            dp *= s
+    return dp * per_replica_batch

@@ -1,0 +1,260 @@
+"""MaxText-style logical sharding rules for params, activations, caches.
+
+Logical axes:
+* ``fsdp``   — weight sharding across the data-parallel axes
+               (("pod", "data") on the multi-pod mesh, ("data",) otherwise);
+               ZeRO-3: optimizer state inherits the same specs.
+* ``tensor`` — the ``model`` mesh axis: attention heads / FFN width /
+               MoE expert width / vocab.
+* ``dp``     — activation batch dim across ("pod", "data").
+* decode caches shard their *sequence* axis over ``model`` (context
+  parallelism): kv-head counts (8, 5, ...) rarely divide a 16-wide tensor
+  axis, sequence length always does. See DESIGN.md §5.
+
+Rules match on the *suffix* of the flattened parameter path; stacked layer
+params (leading L dim from scan) automatically get a ``None`` prepended.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return fsdp_axes(mesh)
+
+
+# (path-suffix regex, spec builder) — first match wins. ``F`` = fsdp axes.
+def _rules(F):
+    T = "model"
+    return [
+        # embeddings / head
+        (r"embed/w$",               P(T, F)),
+        (r"lm_head/w$",             P(F, T)),
+        # attention (GQA)
+        (r"attn/(q|k|v)/w$",        P(F, T)),
+        (r"attn/(q|k|v)/b$",        P(T)),
+        (r"attn/o/w$",              P(T, F)),
+        # attention (MLA)
+        (r"attn/q_a/w$",            P(F, None)),
+        (r"attn/q_b/w$",            P(None, T)),
+        (r"attn/kv_a/w$",           P(F, None)),
+        (r"attn/kv_b/w$",           P(None, T)),
+        # dense mlp
+        (r"mlp/(gate|up)/w$",       P(F, T)),
+        (r"mlp/down/w$",            P(T, F)),
+        # moe
+        (r"moe/router$",            P(F, None)),
+        (r"moe/w_(gate|up)$",       P(None, F, T)),
+        (r"moe/w_down$",            P(None, T, F)),
+        (r"moe/shared/(gate|up)/w$", P(F, T)),
+        (r"moe/shared/down/w$",     P(T, F)),
+        (r"moe/shared_gate$",       P(F, None)),
+        # ssm (FSDP only; TP-over-heads is a recorded hillclimb candidate)
+        (r"ssm/in_proj/w$",         P(F, None)),
+        (r"ssm/out_proj/w$",        P(None, F)),
+        (r"ssm/conv_w$",            P(None, None)),
+        # everything 1-D (norms, biases, scalars) replicated
+        (r".*",                     P()),
+    ]
+
+
+def _spec_for(path: str, ndim: int, rules) -> P:
+    for pat, spec in rules:
+        if re.search(pat, path):
+            parts = tuple(spec)
+            if path.startswith("layers/") and len(parts) < ndim:
+                parts = (None,) * (ndim - len(parts)) + parts
+            if len(parts) < ndim:
+                parts = parts + (None,) * (ndim - len(parts))
+            if len(parts) > ndim:
+                # rule written for unstacked weights; trim leading Nones
+                parts = parts[len(parts) - ndim:]
+            return P(*parts)
+    return P()
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def all_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+
+
+def param_shardings(mesh: Mesh, params_like: Any,
+                    layout: str = "tp_sp") -> Any:
+    """Pytree of NamedShardings matching ``params_like``.
+
+    layout:
+    * ``tp_sp`` — tensor parallelism over ``model`` + FSDP over data axes
+      (+ Megatron-SP activations via make_sharder). Right for MoE/huge
+      models where per-device batch stays >= a few sequences.
+    * ``fsdp``  — pure ZeRO-3: every large weight sharded over ALL mesh
+      axes on its largest dim, batch sharded over all axes too; no tensor
+      parallelism. Wins for big *dense* models at small per-device batch:
+      weight gathers (GiB/layer) beat activation reshards (tens of
+      GiB/layer) — measured 7x collective reduction on
+      command-r-plus-104b train_4k (§Perf H2 iter 5).
+    """
+    rules = _rules(fsdp_axes(mesh))
+    combined = all_axes(mesh)
+
+    def assign(path, leaf):
+        if layout == "fsdp":
+            nd = len(leaf.shape)
+            p_str = _path_str(path)
+            if nd >= 2 and "moe/w_" not in p_str:
+                # shard the largest dim over all axes (guarded below)
+                big = max(range(nd), key=lambda i: leaf.shape[i])
+                parts = [None] * nd
+                parts[big] = combined
+                spec = P(*parts)
+            else:
+                spec = _spec_for(p_str, nd, rules)
+        else:
+            spec = _spec_for(_path_str(path), len(leaf.shape), rules)
+        # divisibility guard: drop sharding on axes that don't divide
+        parts = list(spec)
+        for i, ax in enumerate(parts):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            if leaf.shape[i] % size != 0:
+                parts[i] = None
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(assign, params_like)
+
+
+def train_state_shardings(mesh: Mesh, state_like: Any,
+                          layout: str = "tp_sp") -> Any:
+    """ZeRO-3: m/v shard exactly like their params; step replicated."""
+    from repro.train.train_step import TrainState
+    from repro.train.optimizer import AdamWState
+
+    return TrainState(
+        params=param_shardings(mesh, state_like.params, layout),
+        opt=AdamWState(
+            m=param_shardings(mesh, state_like.opt.m, layout),
+            v=param_shardings(mesh, state_like.opt.v, layout),
+            count=NamedSharding(mesh, P()),
+        ),
+        step=NamedSharding(mesh, P()),
+    )
+
+
+def batch_shardings(mesh: Mesh, batch_like: Any,
+                    layout: str = "tp_sp") -> Any:
+    dp = all_axes(mesh) if layout == "fsdp" else dp_axes(mesh)
+
+    def assign(path, leaf):
+        parts = [dp] + [None] * (len(leaf.shape) - 1)
+        if leaf.shape[0] % int(np.prod([mesh.shape[a] for a in dp])) != 0:
+            parts[0] = dp_axes(mesh)  # fall back (e.g. batch < devices)
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(assign, batch_like)
+
+
+def cache_shardings(mesh: Mesh, cache_like: Any) -> Any:
+    """Decode caches: batch over dp, sequence over model."""
+    dp = dp_axes(mesh)
+
+    def assign(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v"):
+            # (L, B, Hkv, S, hd)
+            spec = P(None, dp, None, "model", None)
+        elif name in ("latent", "rope"):
+            # (L, B, S, R)
+            spec = P(None, dp, "model", None)
+        elif name in ("ssd", "conv"):
+            # (L, B, ...) — constant-size state: batch only
+            spec = P(*((None, dp) + (None,) * (nd - 2)))
+        else:
+            spec = P(*((None,) * nd))
+        # divisibility guard
+        parts = list(spec)
+        for i, ax in enumerate(parts):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            if leaf.shape[i] % size != 0:
+                parts[i] = None
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_like)
+
+
+def make_sharder(mesh: Mesh, sequence_sharding: bool = False,
+                 layout: str = "tp_sp"):
+    """Activation sharding-constraint callback for the model (lm.Sharder).
+
+    ``sequence_sharding=True`` additionally shards the sequence dim of
+    residual activations over ``model`` (SP) — bounds live-activation
+    bytes for the remat'd residual stream (used by the big dense configs).
+    """
+    dp = all_axes(mesh) if layout == "fsdp" else dp_axes(mesh)
+    if layout == "fsdp":
+        sequence_sharding = False
+
+    specs = {
+        "act_embed": P(dp, "model" if sequence_sharding else None, None),
+        "act_resid": P(dp, "model" if sequence_sharding else None, None),
+        "logits": P(dp, None, None) if layout == "fsdp"
+        else P(dp, None, "model"),
+        # MoE dispatch buffers: token/slot dims over dp so the scatter
+        # buffers never replicate (they dominated temp memory otherwise)
+        "moe_dispatch": P(dp, None),          # (T*k, D)
+        "moe_expert_in": P(None, dp, None),   # (E, cap, D)
+        # NOTE (§Perf final-sweep): two explored constraints are
+        # deliberately ABSENT here — "act_heads" (pin q/k/v heads over
+        # model) and "act_block_in" (Megatron-SP gather at block entry).
+        # Both helped the command-r TP+SP pathology they were built for,
+        # but that arch moved to the fsdp layout where they're moot, and
+        # on every other arch they forced extra gathers (seq-sharded MLPs
+        # are already communication-free; pinning gathered them).
+        # gathered LM-head weights for the chunked loss (2-D (D, V)):
+        # fsdp layout gathers fully once; tp_sp keeps vocab on model
+        "loss_head_w": P(None, None) if layout == "fsdp"
+        else P(None, "model"),
+    }
+
+    def sharder(x, name):
+        spec = specs.get(name)
+        if spec is None:
+            return x
+        parts = list(spec)[: x.ndim]
+        for i, ax in enumerate(parts):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            if x.shape[i] % size != 0:
+                # non-divisible: SKIP the constraint entirely — pinning
+                # the remaining axes would FORCE replication of this dim,
+                # which is far worse than letting GSPMD choose (it cost
+                # 6x HBM traffic on 24-head archs; §Perf final-sweep note)
+                return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*parts))
+        )
+
+    sharder.mesh = mesh   # used by the MoE shard_map dispatch path
+    return sharder

@@ -1,0 +1,151 @@
+"""Pallas TPU kernel: blocked causal flash attention with GQA + SWA.
+
+Framework hot-spot kernel (not a paper contribution — the paper's kernels
+are rmq_scan / hierarchy_build).  Used by the transformer stack on TPU;
+the pure-jnp reference (ref.py) is the oracle and the CPU/dry-run path.
+
+Design:
+* grid ``(B, Hq, nQ, nK)`` with the K dimension innermost (sequential on
+  TPU), online-softmax accumulators in VMEM scratch.
+* causal + sliding-window block skipping: out-of-range K blocks are
+  skipped with ``pl.when`` (scalar condition on program ids — true block
+  skip, not masking) and their DMAs are redirected to the diagonal block
+  by clamping in the kv index_map, so skipped blocks cost neither compute
+  nor bandwidth.
+* GQA: the kv index_map maps query head ``h`` to kv head ``h // group``;
+  KV is never materialized per-query-head.
+* accumulation in f32 regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *,
+    bq: int, bk: int, head_dim: int,
+    scale: float, window: int | None, num_k_blocks: int,
+):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    # Block-level causal/window bounds for query block i:
+    #   visit j iff j*bk <= (i+1)*bq - 1  (causal)
+    #   and  (j+1)*bk - 1 >= i*bq - window + 1  (window lower edge)
+    causal_ok = j * bk <= (i + 1) * bq - 1
+    if window is not None:
+        window_ok = (j + 1) * bk - 1 >= i * bq - window + 1
+    else:
+        window_ok = True
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(jnp.logical_and(causal_ok, window_ok))
+    def _compute():
+        q = q_ref[...].reshape(bq, head_dim).astype(jnp.float32) * scale
+        k = k_ref[...].reshape(bk, head_dim).astype(jnp.float32)
+        v = v_ref[...].reshape(bk, head_dim).astype(jnp.float32)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (bq, bk)
+
+        row = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        col = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = col <= row
+        if window is not None:
+            mask = mask & (col > row - window)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_cur
+
+    @pl.when(j == num_k_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        out = acc_scr[...] / safe_l[:, None]
+        o_ref[...] = out.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "window", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,   # (B, Hq, S, D)
+    k: jax.Array,   # (B, Hkv, S, D)
+    v: jax.Array,   # (B, Hkv, S, D)
+    scale: float | None = None,
+    window: int | None = None,
+    bq: int = DEFAULT_BLOCK_Q,
+    bk: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """Causal (optionally sliding-window) attention, GQA-aware."""
+    batch, hq, s, d = q.shape
+    _, hkv, sk, dk = k.shape
+    assert s % bq == 0 and sk % bk == 0, (s, sk, bq, bk)
+    assert d == dk and hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    n_q = s // bq
+    n_k = sk // bk
+
+    def kv_index(b, h, i, j):
+        # clamp skipped blocks' DMA to the diagonal region
+        jc = jnp.minimum(j, jnp.minimum((((i + 1) * bq - 1) // bk), n_k - 1))
+        if window is not None:
+            lo = jnp.maximum((i * bq - window + 1) // bk, 0)
+            jc = jnp.maximum(jc, lo)
+        return (b, h // group, jc, 0)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        bq=bq, bk=bk, head_dim=d, scale=scale, window=window,
+        num_k_blocks=n_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(batch, hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), kv_index),
+            pl.BlockSpec((1, 1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,55 @@
+"""Dispatching wrapper: Pallas flash attention on TPU, reference elsewhere.
+
+The dry-run/roofline path always uses the reference einsum implementation
+so XLA's cost model counts attention FLOPs exactly; the Pallas kernel is
+selected on real TPU backends (and exercised in interpret mode by tests).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention.ref import attention_ref, blocked_attention
+
+BLOCKED_MIN_SEQ = 2048  # below this the dense reference is cheaper
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(
+    q, k, v,
+    scale: float | None = None,
+    window=None,
+    causal: bool = True,
+    impl: str = "auto",
+    interpret: bool = False,
+):
+    """impl: 'auto' | 'ref' | 'blocked' | 'pallas'.
+
+    'auto': Pallas flash kernel on TPU; blocked (flash-style pure JAX) on
+    other backends for long sequences; dense reference otherwise.
+    ``window`` may be traced only on the ref/blocked paths.
+    """
+    s = q.shape[2]
+    if impl == "auto":
+        if _on_tpu():
+            impl = "pallas"
+        elif s >= BLOCKED_MIN_SEQ and s % 512 == 0:
+            impl = "blocked"
+        else:
+            impl = "ref"
+    static_window = isinstance(window, (int, type(None)))
+    if impl == "pallas" and causal and static_window \
+            and q.shape[2] == k.shape[2] and q.shape[3] == v.shape[3] \
+            and q.shape[2] % K.DEFAULT_BLOCK_Q == 0:
+        return K.flash_attention(
+            q, k, v, scale=scale, window=window, interpret=interpret
+        )
+    if impl in ("blocked", "pallas") and s % 512 == 0 and causal:
+        return blocked_attention(
+            q, k, v, scale=scale, window=window, causal=causal
+        )
+    return attention_ref(q, k, v, scale=scale, window=window, causal=causal)

@@ -1,0 +1,98 @@
+"""Pure-jnp oracle for flash attention (also the CPU / dry-run path)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,   # (B, Hq, S, D)
+    k: jax.Array,   # (B, Hkv, Sk, D)
+    v: jax.Array,   # (B, Hkv, Sk, Dv)
+    scale: float | None = None,
+    window: int | None = None,
+    causal: bool = True,
+) -> jax.Array:
+    """Reference causal/sliding-window attention with GQA."""
+    b, hq, s, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    row = jnp.arange(s)[:, None] + (sk - s)  # align ends (decode: s=1)
+    col = jnp.arange(sk)[None, :]
+    mask = jnp.ones((s, sk), dtype=bool)
+    if causal:
+        mask = mask & (col <= row)
+    if window is not None:
+        mask = mask & (col > row - window)
+    scores = jnp.where(mask[None, None], scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def blocked_attention(
+    q: jax.Array,   # (B, Hq, S, D)
+    k: jax.Array,   # (B, Hkv, Sk, D)
+    v: jax.Array,   # (B, Hkv, Sk, Dv)
+    scale: float | None = None,
+    window=None,    # None | int | traced scalar
+    causal: bool = True,
+    block_q: int = 512,
+) -> jax.Array:
+    """Flash-style attention in pure JAX: O(block_q · S) live scores.
+
+    The dry-run / CPU production path for long sequences — XLA counts the
+    same FLOPs as a fused kernel but the (S, S) score matrix never
+    materializes (lax.map over query blocks + jax.checkpoint on the block
+    body, so the backward pass recomputes block scores instead of saving
+    them).  ``window`` may be a traced scalar (hybrid archs scan per-layer
+    windows).
+    """
+    b, hq, s, d = q.shape
+    _, hkv, sk, dv = v.shape
+    assert s % block_q == 0, (s, block_q)
+    group = hq // hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    nq = s // block_q
+    qb = q.reshape(b, hq, nq, block_q, d).transpose(2, 0, 1, 3, 4)
+    offset = sk - s  # decode-style alignment (s == sk in train/prefill)
+
+    @jax.checkpoint
+    def one_block(args):
+        i, qi = args                        # qi: (B, H, block_q, D)
+        scores = jnp.einsum(
+            "bhqd,bhkd->bhqk", qi.astype(jnp.float32),
+            k.astype(jnp.float32),
+        ) * scale
+        row = i * block_q + jnp.arange(block_q)[:, None] + offset
+        col = jnp.arange(sk)[None, :]
+        mask = jnp.ones((block_q, sk), bool)
+        if causal:
+            mask = mask & (col <= row)
+        if window is not None:
+            mask = mask & (col > row - window)
+        scores = jnp.where(mask[None, None], scores, _NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum(
+            "bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+        ).astype(q.dtype)
+
+    out = jax.lax.map(one_block, (jnp.arange(nq), qb))
+    return out.transpose(1, 2, 0, 3, 4).reshape(b, hq, s, dv)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: one hierarchy-build level (chunked min-reduce).
+
+Paper §4.1/§5.6: "a group of g adjacent threads reduces a chunk of c
+adjacent entries via warp reductions to a single summary".  The TPU
+realization tiles the level through VMEM: each program DMAs a
+``(TILE_OUT * c,)`` contiguous slice HBM→VMEM, reshapes it to
+``(TILE_OUT, c)`` (sublane × lane when c is a multiple of 128), and
+reduces along the chunk axis on the VPU — ``TILE_OUT`` chunk reductions
+per program instead of the GPU's one-warp-per-chunk.
+
+Layout notes:
+* ``c`` ≥ 128 keeps the reduction axis on lanes; the reshape is free
+  because the slice is contiguous.
+* ``TILE_OUT * c * 4`` bytes is the VMEM working set per program
+  (default 512 * 128 * 4 = 256 KiB, well under the ~16 MiB budget, big
+  enough to amortize DMA setup).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_OUT = 512
+
+
+def _min_kernel(x_ref, o_ref, *, c: int, tile_out: int):
+    x = x_ref[...].reshape(tile_out, c)
+    o_ref[...] = jnp.min(x, axis=1)
+
+
+def _argmin_kernel(x_ref, p_ref, o_ref, po_ref, *, c: int, tile_out: int):
+    x = x_ref[...].reshape(tile_out, c)
+    p = p_ref[...].reshape(tile_out, c)
+    idx = jnp.argmin(x, axis=1)  # first occurrence == leftmost tie-break
+    o_ref[...] = jnp.take_along_axis(x, idx[:, None], axis=1)[:, 0]
+    po_ref[...] = jnp.take_along_axis(p, idx[:, None], axis=1)[:, 0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("c", "tile_out", "interpret")
+)
+def build_level(
+    values: jax.Array,
+    c: int,
+    tile_out: int = DEFAULT_TILE_OUT,
+    interpret: bool = False,
+) -> jax.Array:
+    """Reduce a (padded) level to its chunk minima: ``(m*c,) -> (m,)``.
+
+    ``values`` must already be padded to a multiple of ``tile_out * c``
+    by the caller (ops.py handles padding with +inf).
+    """
+    total = values.shape[0]
+    assert total % (tile_out * c) == 0, (total, tile_out, c)
+    grid = (total // (tile_out * c),)
+    return pl.pallas_call(
+        functools.partial(_min_kernel, c=c, tile_out=tile_out),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile_out * c,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tile_out,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((total // c,), values.dtype),
+        interpret=interpret,
+    )(values)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("c", "tile_out", "interpret")
+)
+def build_level_with_positions(
+    values: jax.Array,
+    positions: jax.Array,
+    c: int,
+    tile_out: int = DEFAULT_TILE_OUT,
+    interpret: bool = False,
+):
+    """Chunk-min with carried original-array positions (for RMQ_index)."""
+    total = values.shape[0]
+    assert total % (tile_out * c) == 0, (total, tile_out, c)
+    grid = (total // (tile_out * c),)
+    return pl.pallas_call(
+        functools.partial(_argmin_kernel, c=c, tile_out=tile_out),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_out * c,), lambda i: (i,)),
+            pl.BlockSpec((tile_out * c,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_out,), lambda i: (i,)),
+            pl.BlockSpec((tile_out,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((total // c,), values.dtype),
+            jax.ShapeDtypeStruct((total // c,), positions.dtype),
+        ],
+        interpret=interpret,
+    )(values, positions)

@@ -1,0 +1,91 @@
+"""Jitted wrapper: build a full Hierarchy with the Pallas level kernel.
+
+Produces a ``Hierarchy`` pytree bit-identical to
+``repro.core.hierarchy.build_hierarchy`` (the oracle); tests assert this
+across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hierarchy import Hierarchy
+from repro.core.plan import HierarchyPlan
+from repro.kernels.hierarchy_build import kernel as K
+
+_PAD_POS = jnp.iinfo(jnp.int32).max
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, length, fill):
+    pad = length - x.shape[0]
+    return x if pad == 0 else jnp.pad(x, (0, pad), constant_values=fill)
+
+
+def _pick_tile_out(padded_len: int, c: int) -> int:
+    """Largest power-of-two tile (<= default) dividing the level."""
+    m = padded_len // c
+    tile = K.DEFAULT_TILE_OUT
+    while tile > 1 and m % tile != 0:
+        tile //= 2
+    return tile
+
+
+def build_hierarchy_pallas(
+    x: jax.Array,
+    plan: HierarchyPlan,
+    with_positions: bool = False,
+    interpret: bool | None = None,
+) -> Hierarchy:
+    """Level-by-level Pallas build (paper §4.1, bottom-up)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    c = plan.c
+    pos_dtype = jnp.int32 if plan.n < 2**31 else jnp.int64
+    inf = jnp.array(jnp.inf, dtype=x.dtype)
+
+    levels_v, levels_p = [], []
+    cur_v = x
+    cur_p = jnp.arange(plan.n, dtype=pos_dtype) if with_positions else None
+
+    for k in range(1, plan.num_levels):
+        # consume ceil(len/c)*c entries, then tile-align for the kernel
+        want = plan.level_lens[k] * c
+        tile = _pick_tile_out(want, c)
+        want_aligned = -(-want // (tile * c)) * (tile * c)
+        v_in = _pad_to(cur_v, want_aligned, inf)
+        if with_positions:
+            p_in = _pad_to(cur_p, want_aligned, jnp.array(_PAD_POS, pos_dtype))
+            nxt_v, nxt_p = K.build_level_with_positions(
+                v_in, p_in, c=c, tile_out=tile, interpret=interpret
+            )
+            nxt_v = nxt_v[: plan.level_lens[k]]
+            nxt_p = nxt_p[: plan.level_lens[k]]
+        else:
+            nxt_v = K.build_level(
+                v_in, c=c, tile_out=tile, interpret=interpret
+            )[: plan.level_lens[k]]
+            nxt_p = None
+
+        padded_len = plan.padded_lens[k - 1]
+        levels_v.append(_pad_to(nxt_v, padded_len, inf))
+        if with_positions:
+            levels_p.append(
+                _pad_to(nxt_p, padded_len, jnp.array(_PAD_POS, pos_dtype))
+            )
+        cur_v = nxt_v
+        cur_p = nxt_p
+
+    if levels_v:
+        upper = jnp.concatenate(levels_v)
+        upper_pos = jnp.concatenate(levels_p) if with_positions else None
+    else:
+        upper = jnp.zeros((0,), dtype=x.dtype)
+        upper_pos = (
+            jnp.zeros((0,), dtype=pos_dtype) if with_positions else None
+        )
+    return Hierarchy(base=x, upper=upper, upper_pos=upper_pos, plan=plan)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the hierarchy-build kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def build_level_ref(values: jax.Array, c: int) -> jax.Array:
+    """Chunk minima of a level already padded to a multiple of c."""
+    assert values.shape[0] % c == 0
+    return values.reshape(-1, c).min(axis=1)
+
+
+def build_level_with_positions_ref(values, positions, c: int):
+    assert values.shape[0] % c == 0
+    v = values.reshape(-1, c)
+    p = positions.reshape(-1, c)
+    idx = jnp.argmin(v, axis=1)
+    return (
+        jnp.take_along_axis(v, idx[:, None], axis=1)[:, 0],
+        jnp.take_along_axis(p, idx[:, None], axis=1)[:, 0],
+    )

@@ -1,0 +1,113 @@
+"""Pure-jnp oracle for the RMQ query kernel.
+
+The production pure-JAX path (``repro.core.query``) implements the paper's
+Listing 2 with the data-dependent early break; the kernel uses the
+branch-free walk (see kernel.py docstring).  This oracle implements the
+*branch-free* recurrence in plain jnp so kernel tests can localize a
+divergence to either (a) branch-free algebra (oracle vs core) or (b) the
+Pallas lowering (kernel vs oracle).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan import HierarchyPlan
+
+_POS_INF_I32 = jnp.iinfo(jnp.int32).max
+
+
+def _merge(m, p, m2, p2):
+    take2 = (m2 < m) | ((m2 == m) & (p2 < p))
+    return jnp.where(take2, m2, m), jnp.where(take2, p2, p)
+
+
+def _window(arr, pos_arr, anchor, lo, hi, c, track_pos):
+    n = arr.shape[0]
+    start = jnp.clip(anchor, 0, max(n - c, 0))
+    vals = jax.lax.dynamic_slice(arr, (start,), (c,))
+    idx = start + jnp.arange(c, dtype=jnp.int32)
+    mask = (idx >= lo) & (idx < hi)
+    masked = jnp.where(mask, vals, jnp.inf)
+    m = jnp.min(masked)
+    if not track_pos:
+        return m, jnp.int32(_POS_INF_I32)
+    pos = idx if pos_arr is None else jax.lax.dynamic_slice(
+        pos_arr, (start,), (c,)
+    )
+    cand = jnp.where(mask & (masked == m), pos, _POS_INF_I32)
+    return m, jnp.min(cand)
+
+
+def rmq_branchfree_single(
+    plan: HierarchyPlan,
+    base: jax.Array,
+    upper: jax.Array,
+    upper_pos: Optional[jax.Array],
+    l: jax.Array,
+    r: jax.Array,
+    track_pos: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Branch-free hierarchical RMQ (kernel algorithm, plain jnp)."""
+    c = plan.c
+    l = l.astype(jnp.int32)
+    r = (r + 1).astype(jnp.int32)
+    m = jnp.float32(jnp.inf)
+    p = jnp.int32(_POS_INF_I32)
+
+    def level_arrays(level):
+        if level == 0:
+            return base, None
+        off, padded = plan.level_slice(level)
+        vals = jax.lax.slice(upper, (off,), (off + padded,))
+        pos = (
+            None
+            if upper_pos is None
+            else jax.lax.slice(upper_pos, (off,), (off + padded,))
+        )
+        return vals, pos
+
+    for level in range(plan.num_levels):
+        arr, pos_arr = level_arrays(level)
+        is_last = level == plan.num_levels - 1
+        if is_last:
+            idx = jnp.arange(arr.shape[0], dtype=jnp.int32)
+            mask = (idx >= l) & (idx < r)
+            masked = jnp.where(mask, arr, jnp.inf)
+            m2 = jnp.min(masked)
+            if track_pos:
+                pos = idx if pos_arr is None else pos_arr
+                cand = jnp.where(mask & (masked == m2), pos, _POS_INF_I32)
+                p2 = jnp.min(cand)
+            else:
+                p2 = jnp.int32(_POS_INF_I32)
+            m, p = _merge(m, p, m2, p2)
+            break
+
+        next_l = ((l + c - 1) // c) * c
+        prev_r = (r // c) * c
+        m2, p2 = _window(
+            arr, pos_arr, (l // c) * c, l, jnp.minimum(next_l, r), c,
+            track_pos,
+        )
+        m, p = _merge(m, p, m2, p2)
+        m2, p2 = _window(
+            arr, pos_arr, prev_r, jnp.maximum(prev_r, l), r, c, track_pos
+        )
+        m, p = _merge(m, p, m2, p2)
+        l = (l + c - 1) // c
+        r = r // c
+
+    return m, p
+
+
+def rmq_branchfree_batch(plan, base, upper, upper_pos, ls, rs,
+                         track_pos=False):
+    return jax.vmap(
+        lambda l, r: rmq_branchfree_single(
+            plan, base, upper, upper_pos, l, r, track_pos
+        )
+    )(ls, rs)

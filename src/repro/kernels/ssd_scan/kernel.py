@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunk scan.
+
+Framework hot-spot kernel for the ``mamba2-1.3b`` / ``hymba-1.5b`` archs.
+Grid ``(B, H, num_chunks)`` with the chunk dimension innermost: TPU grids
+execute sequentially, so a VMEM scratch carries the (P, N) state across
+chunk steps — the inter-chunk recurrence — while the intra-chunk part is
+two MXU matmuls on (Q, N)/(Q, P) tiles.  Q = N = 128 keeps every matmul
+MXU-aligned; P = head_dim (64) rides the sublane dim.
+
+All math in f32; see ref.ssd_chunked_ref for the einsum form this kernel
+tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(dtx_ref, la_ref, b_ref, c_ref, y_ref, state_scr, *,
+                q: int, p: int, n: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _reset():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    dtx = dtx_ref[...].reshape(q, p).astype(jnp.float32)
+    la = la_ref[...].reshape(q, 1).astype(jnp.float32)
+    bm = b_ref[...].reshape(q, n).astype(jnp.float32)
+    cm = c_ref[...].reshape(q, n).astype(jnp.float32)
+
+    cum = jnp.cumsum(la, axis=0)            # (Q, 1)
+    total = cum[q - 1, 0]
+
+    # intra-chunk: M[i, j] = exp(cum_i - cum_j) * (C_i · B_j), j <= i
+    g = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                        # (Q, Q)
+    diff = cum - cum.reshape(1, q)           # (Q, Q) broadcast
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tril = col <= row
+    decay = jnp.exp(jnp.where(tril, diff, -jnp.inf))
+    m = g * decay
+    y = jax.lax.dot_general(
+        m, dtx, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                        # (Q, P)
+
+    # inter-chunk: y += exp(cum_i) * C_i @ state^T      state: (P, N)
+    state = state_scr[...]
+    y += jnp.exp(cum) * jax.lax.dot_general(
+        cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                        # (Q, N) @ (P, N)^T -> (Q, P)
+
+    # state update: S = exp(total) * S + (w * dtx)^T @ B
+    w = jnp.exp(total - cum)                 # (Q, 1)
+    state_scr[...] = jnp.exp(total) * state + jax.lax.dot_general(
+        w * dtx, bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                        # (P, N)
+
+    y_ref[...] = y.reshape(y_ref.shape).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    dtx: jax.Array,    # (B, L, H, P)
+    log_a: jax.Array,  # (B, L, H)
+    Bm: jax.Array,     # (B, L, N)
+    Cm: jax.Array,     # (B, L, N)
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+) -> jax.Array:
+    b, l, h, p = dtx.shape
+    n = Bm.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    q = chunk
+
+    kernel = functools.partial(_ssd_kernel, q=q, p=p, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, q, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, q, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, q, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, q, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(dtx.shape, dtx.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(dtx, log_a, Bm, Cm)

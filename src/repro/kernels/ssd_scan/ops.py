@@ -1,0 +1,38 @@
+"""Dispatching wrapper for the SSD chunk scan."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan import kernel as K
+from repro.kernels.ssd_scan.ref import ssd_chunked_ref, ssd_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssd(dtx, log_a, Bm, Cm, chunk: int = 128, impl: str = "auto",
+        interpret: bool = False, init_state=None):
+    """Returns y (and discards final state on the kernel path).
+
+    impl: 'auto' | 'ref' | 'chunked_ref' | 'pallas'.
+    Use ``ssd_with_state`` when the final state is needed (serving).
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "chunked_ref"
+    if impl == "pallas" and dtx.shape[1] % chunk == 0 and init_state is None:
+        return K.ssd_scan(dtx, log_a, Bm, Cm, chunk=chunk,
+                          interpret=interpret)
+    if impl == "ref":
+        return ssd_ref(dtx, log_a, Bm, Cm, init_state=init_state)[0]
+    return ssd_chunked_ref(dtx, log_a, Bm, Cm, chunk=min(chunk, dtx.shape[1]),
+                           init_state=init_state)[0]
+
+
+def ssd_with_state(dtx, log_a, Bm, Cm, chunk: int = 128, init_state=None):
+    """Chunked-ref path returning (y, final_state) — used by serving."""
+    return ssd_chunked_ref(
+        dtx, log_a, Bm, Cm, chunk=min(chunk, dtx.shape[1]),
+        init_state=init_state,
+    )

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for the SSD (state-space duality) chunk scan.
+
+Two references:
+
+* ``ssd_ref`` — the literal per-timestep recurrence (slow, unambiguous):
+      S_t = exp(log_a_t) * S_{t-1} + dtx_t ⊗ B_t
+      y_t = S_t @ C_t
+* ``ssd_chunked_ref`` — the chunked SSD algorithm in plain jnp (einsum
+  form).  This is the CPU / dry-run production path for Mamba-2 style
+  layers and the direct oracle for the Pallas kernel, which computes the
+  same chunk algebra tile-by-tile in VMEM.
+
+Shapes (ngroups = 1, B/C shared across heads — Mamba-2 default):
+  dtx:   (B, L, H, P)   dt-scaled inputs  (dt * x)
+  log_a: (B, L, H)      per-step log decay (<= 0), already dt-scaled
+  Bm:    (B, L, N)      input projection onto state
+  Cm:    (B, L, N)      output projection from state
+  y:     (B, L, H, P)
+  state: (B, H, P, N)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(dtx, log_a, Bm, Cm, init_state=None):
+    """Naive recurrence via lax.scan. Returns (y, final_state)."""
+    b, l, h, p = dtx.shape
+    n = Bm.shape[-1]
+    f32 = jnp.float32
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), f32)
+
+    def step(s, inputs):
+        dtx_t, la_t, b_t, c_t = inputs  # (B,H,P), (B,H), (B,N), (B,N)
+        a = jnp.exp(la_t)[:, :, None, None]            # (B,H,1,1)
+        s = a * s + dtx_t[..., None] * b_t[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", s, c_t)
+        return s, y
+
+    xs = (
+        dtx.astype(f32).transpose(1, 0, 2, 3),
+        log_a.astype(f32).transpose(1, 0, 2),
+        Bm.astype(f32).transpose(1, 0, 2),
+        Cm.astype(f32).transpose(1, 0, 2),
+    )
+    final, ys = jax.lax.scan(step, init_state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(dtx.dtype), final
+
+
+def ssd_chunked_ref(dtx, log_a, Bm, Cm, chunk: int = 128, init_state=None):
+    """Chunked SSD: intra-chunk quadratic part + inter-chunk state pass.
+
+    Identical math to ``ssd_ref``; O(L/Q) sequential steps instead of O(L).
+    """
+    b, l, h, p = dtx.shape
+    n = Bm.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    q = chunk
+    nc = l // q
+    f32 = jnp.float32
+
+    dtx_c = dtx.astype(f32).reshape(b, nc, q, h, p)
+    la_c = log_a.astype(f32).reshape(b, nc, q, h)
+    B_c = Bm.astype(f32).reshape(b, nc, q, n)
+    C_c = Cm.astype(f32).reshape(b, nc, q, n)
+
+    cum = jnp.cumsum(la_c, axis=2)                    # (B,NC,Q,H)
+    total = cum[:, :, -1, :]                          # (B,NC,H)
+
+    # ---- intra-chunk (the "duality" matmul form) ------------------------
+    g = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)       # (B,NC,Q,Q)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,NC,Q,Q,H)
+    tril = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.exp(jnp.where(tril[None, None, :, :, None], diff, -jnp.inf))
+    m = g[..., None] * decay                          # (B,NC,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, dtx_c)
+
+    # ---- inter-chunk: carry states sequentially -------------------------
+    # state contribution of chunk c: Z_c = sum_j exp(total - cum_j) dtx_j ⊗ B_j
+    w = jnp.exp(total[:, :, None, :] - cum)           # (B,NC,Q,H)
+    z = jnp.einsum("bcjh,bcjhp,bcjn->bchpn", w, dtx_c, B_c)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), f32)
+
+    def carry(s, inputs):
+        z_c, tot_c = inputs                           # (B,H,P,N), (B,H)
+        s_in = s
+        s = jnp.exp(tot_c)[:, :, None, None] * s + z_c
+        return s, s_in
+
+    final, s_prev = jax.lax.scan(
+        carry,
+        init_state,
+        (z.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    s_prev = s_prev.transpose(1, 0, 2, 3, 4)          # (B,NC,H,P,N)
+
+    y_inter = jnp.einsum(
+        "bcih,bcin,bchpn->bcihp",
+        jnp.exp(cum), C_c, s_prev,
+    )
+
+    y = (y_intra + y_inter).reshape(b, l, h, p).astype(dtx.dtype)
+    return y, final

@@ -1,0 +1,154 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+Proves the distribution config is coherent without hardware: for every
+(architecture × input shape) cell, ``jit(step).lower(**specs).compile()``
+must succeed on BOTH the single-pod 16×16 mesh and the 2×16×16 multi-pod
+mesh, and we record ``memory_analysis()`` (fits?) + ``cost_analysis()``
+(FLOPs/bytes for §Roofline) + the HLO collective schedule.
+
+The two lines above MUST stay the first statements in this file — jax
+locks the device count at first init, and every other repro module is
+imported only afterwards.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh single --out results.jsonl
+  python -m repro.launch.dryrun --all --mesh multi  --out results.jsonl
+Each cell runs in-process; use --subprocess to isolate cells (slower,
+survives per-cell OOM/compile crashes during sweeps).
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import traceback
+
+
+def _run_one(arch: str, shape: str, mesh_name: str, args) -> dict:
+    import jax  # first jax import happens under the XLA_FLAGS above
+
+    from repro.launch.cells import best_config, run_cell
+    from repro.launch.mesh import make_production_mesh
+
+    if args.best:
+        bc = best_config(arch, shape,
+                         num_chips=512 if mesh_name == "multi" else 256)
+        args.layout = bc["layout"]
+        args.remat = bc["remat"]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    res = run_cell(
+        arch, shape, mesh,
+        mesh_desc=mesh_name,
+        sequence_sharding=not args.no_sequence_sharding,
+        remat_policy=args.remat,
+        microbatches=args.microbatches,
+        layout=args.layout,
+    )
+    out = res.to_json()
+    if args.calibrate and not res.skipped:
+        from repro.launch.cells import calibrate_cell
+
+        out["calibrated"] = calibrate_cell(
+            arch, shape, mesh, mesh_name,
+            sequence_sharding=not args.no_sequence_sharding,
+            remat_policy=args.remat,
+            microbatches=args.microbatches,
+            layout=args.layout,
+        )
+    out["ok"] = True
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    ap.add_argument("--subprocess", action="store_true")
+    ap.add_argument("--no-sequence-sharding", action="store_true")
+    ap.add_argument("--remat", default="minimal",
+                    choices=["none", "minimal", "full", "names"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--layout", default="tp_sp",
+                    choices=["tp_sp", "fsdp"])
+    ap.add_argument("--best", action="store_true",
+                    help="use the per-arch hillclimbed layout/remat "
+                         "(launch.cells.BEST_CONFIG)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="also run 2/4-layer unrolled compiles for exact "
+                         "per-layer FLOPs/bytes/collectives (§Roofline)")
+    args = ap.parse_args()
+
+    from repro.configs.base import ARCH_IDS
+    from repro.launch.cells import SHAPES, cell_is_skipped
+
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    rc = 0
+    sink = open(args.out, "a") if args.out else None
+    for arch, shape in cells:
+        skip = cell_is_skipped(arch, shape)
+        if skip:
+            rec = {"arch": arch, "shape": shape, "mesh_desc": args.mesh,
+                   "skipped": skip, "ok": True}
+            print(f"[SKIP] {arch} × {shape}: {skip}")
+        elif args.subprocess:
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch, "--shape", shape, "--mesh", args.mesh,
+                "--remat", args.remat,
+                "--microbatches", str(args.microbatches),
+            ]
+            if args.no_sequence_sharding:
+                cmd.append("--no-sequence-sharding")
+            if args.out:
+                cmd += ["--out", args.out]
+            r = subprocess.run(cmd)
+            if r.returncode != 0:
+                rc = 1
+            continue
+        else:
+            try:
+                rec = _run_one(arch, shape, args.mesh, args)
+                print(
+                    f"[OK]   {arch} × {shape} × {args.mesh}: "
+                    f"flops/dev={rec['flops_per_device']:.3e} "
+                    f"bytes/dev={rec['bytes_per_device']:.3e} "
+                    f"args={rec['argument_bytes']/2**30:.2f}GiB "
+                    f"temp={rec['temp_bytes']/2**30:.2f}GiB "
+                    f"compile={rec['compile_seconds']:.0f}s"
+                )
+                colls = rec.get("collective_bytes", {})
+                if colls:
+                    summary = ", ".join(
+                        f"{k}={v/2**20:.1f}MiB" for k, v in
+                        sorted(colls.items())
+                    )
+                    print(f"       collectives(per-iter): {summary}")
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape, "mesh_desc": args.mesh,
+                       "ok": False, "error": f"{type(e).__name__}: {e}"}
+                print(f"[FAIL] {arch} × {shape} × {args.mesh}: {e}")
+                traceback.print_exc()
+                rc = 1
+        if sink:
+            sink.write(json.dumps(rec) + "\n")
+            sink.flush()
+    if sink:
+        sink.close()
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,74 @@
+"""Serving driver: batched generation with optional RMQ-backed eviction.
+
+CPU usage:
+  python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+      --prompt-len 32 --max-new 32 --batch 4
+  python -m repro.launch.serve --arch llama3.2-3b --smoke --evict \
+      --budget 48 --max-new 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--cache-len", type=int, default=None)
+    ap.add_argument("--evict", action="store_true")
+    ap.add_argument("--budget", type=int, default=0)
+    ap.add_argument("--protected", type=int, default=16)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ServeConfig, get_config, get_smoke_config
+    from repro.models.frontends import synthetic_frontend_embeddings
+    from repro.models.lm import init_params
+    from repro.serve.engine import ServeEngine
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    f = cfg.frontend_tokens if cfg.frontend else 0
+    cache_len = args.cache_len or (
+        f + args.prompt_len + args.max_new + 8
+    )
+    sc = ServeConfig(
+        seq_len=cache_len,
+        batch=args.batch,
+        kv_cache_dtype="float32" if args.smoke else "bfloat16",
+        eviction_enabled=args.evict,
+        eviction_budget=args.budget or (cache_len * 3 // 4),
+        eviction_window=args.protected,
+        rmq_chunk=16,
+        rmq_threshold=4,
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, sc)
+
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
+        cfg.vocab_size,
+    )
+    prefix = synthetic_frontend_embeddings(cfg, args.batch)
+    t0 = time.time()
+    out = engine.generate(prompts, args.max_new, prefix_embeddings=prefix)
+    dt = time.time() - t0
+    toks = int(out["tokens"].shape[0] * out["tokens"].shape[1])
+    print(
+        f"[serve] {args.arch}: generated {toks} tokens in {dt:.2f}s "
+        f"({toks/dt:.1f} tok/s), evicted={out['evicted']}, "
+        f"final_pos={out['final_pos']}"
+    )
+    print(f"[serve] sample: {out['tokens'][0, :16].tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,22 @@
+"""Model zoo: functional JAX implementations of the assigned architectures.
+
+No flax/haiku dependency — params are plain nested dicts, every layer is an
+(init, apply) pair, and layer stacks are ``jax.lax.scan``-ed over stacked
+parameter pytrees so 48–64-layer configs compile as one HLO while-loop.
+"""
+
+from repro.models.lm import (
+    init_params,
+    forward,
+    prefill,
+    decode_step,
+    make_decode_cache,
+)
+
+__all__ = [
+    "init_params",
+    "forward",
+    "prefill",
+    "decode_step",
+    "make_decode_cache",
+]

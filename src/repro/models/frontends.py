@@ -1,0 +1,34 @@
+"""Modality frontend stubs (per assignment).
+
+The ``[vlm]`` and ``[audio]`` architectures specify the transformer
+*backbone* only; the modality frontend is a STUB whose job is to define
+the shape contract: ``input_specs()`` provides precomputed patch/frame
+embeddings that the trunk consumes as a prefix.
+
+These helpers generate deterministic synthetic embeddings for smoke tests
+and examples; ``launch/dryrun.py`` uses only their ShapeDtypeStructs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def frontend_embedding_shape(cfg: ModelConfig, batch: int):
+    """Shape of the precomputed frontend prefix embeddings."""
+    if not cfg.frontend:
+        return None
+    return (batch, cfg.frontend_tokens, cfg.d_model)
+
+
+def synthetic_frontend_embeddings(cfg: ModelConfig, batch: int, seed: int = 0):
+    """Deterministic stand-in embeddings (what a ViT / EnCodec conditioner
+    would produce)."""
+    shape = frontend_embedding_shape(cfg, batch)
+    if shape is None:
+        return None
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, shape, jnp.float32) * 0.02

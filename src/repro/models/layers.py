@@ -1,0 +1,357 @@
+"""Shared functional layers: norms, RoPE, dense projections, SwiGLU, GQA/MLA.
+
+Conventions:
+* every layer is an ``init_*(key, cfg, ...) -> params`` plus an
+  ``apply``-style pure function;
+* params are nested dicts of f32 master weights; ``cast`` converts to the
+  compute dtype at use;
+* attention supports three execution modes sharing one set of weights:
+  full-sequence (train / prefill) and single-token decode against a cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.flash_attention.ops import attention as attention_op
+
+Init = jax.nn.initializers
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def cast(x, cfg: ModelConfig):
+    return x.astype(cdtype(cfg))
+
+
+def dense_init(key, in_dim, out_dim, bias=False, scale=None):
+    if scale is None:
+        scale = 1.0 / math.sqrt(in_dim)
+    p = {"w": jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), jnp.float32)
+    return p
+
+
+def dense(p, x, cfg):
+    y = x @ cast(p["w"], cfg)
+    if "b" in p:
+        y = y + cast(p["b"], cfg)
+    return y
+
+
+def rmsnorm_init(dim):
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, D) with D even; positions: (S,) or (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..,S,D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, cfg.d_model, d_ff),
+        "up": dense_init(k2, cfg.d_model, d_ff),
+        "down": dense_init(k3, d_ff, cfg.d_model),
+    }
+
+
+def mlp(p, x, cfg: ModelConfig):
+    return dense(
+        p["down"], jax.nn.silu(dense(p["gate"], x, cfg)) *
+        dense(p["up"], x, cfg), cfg,
+    )
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+def gqa_init(key, cfg: ModelConfig):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    h, hkv, hd, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    return {
+        "q": dense_init(kq, d, h * hd, bias=cfg.qkv_bias),
+        "k": dense_init(kk, d, hkv * hd, bias=cfg.qkv_bias),
+        "v": dense_init(kv, d, hkv * hd, bias=cfg.qkv_bias),
+        "o": dense_init(ko, h * hd, d),
+    }
+
+
+def _split_heads(x, num_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, num_heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def gqa_attention(
+    p,
+    x,                      # (B, S, D)
+    cfg: ModelConfig,
+    positions,              # (S,)
+    window=None,            # None, python int, or traced scalar
+    attn_impl: str = "auto",
+    return_probs_sum: bool = False,
+    sharder=None,
+):
+    """Full-sequence causal attention (train / prefill).
+
+    ``window``: static int enables the Pallas flash SWA path on TPU; a
+    traced scalar (hybrid archs with per-layer windows under scan) forces
+    the reference path with a dynamic mask.
+    Returns (out, (k, v), probs_sum) — probs_sum is the per-key attention
+    mass used by the RMQ eviction manager (None unless requested).
+    """
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _split_heads(dense(p["q"], x, cfg), h, hd)
+    k = _split_heads(dense(p["k"], x, cfg), hkv, hd)
+    v = _split_heads(dense(p["v"], x, cfg), hkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if sharder is not None:
+        # pin head sharding BEFORE the blocked attention scan: without it,
+        # sequence-sharded inputs hit the (S -> nq, bq) reshape and GSPMD
+        # falls back to full replication of q/k/v per device
+        # ("involuntary full rematerialization", ~27 GiB/layer on
+        # command-r-plus — §Perf H2 iter 2)
+        q = sharder(q, "act_heads")
+        k = sharder(k, "act_heads")
+        v = sharder(v, "act_heads")
+    out = attention_op(q, k, v, window=window, impl=attn_impl)
+    if sharder is not None:
+        out = sharder(out, "act_heads")
+    probs_sum = _attention_mass(q, k, cfg, window) if return_probs_sum \
+        else None
+    return dense(p["o"], _merge_heads(out), cfg), (k, v), probs_sum
+
+
+def _attention_mass(q, k, cfg, window):
+    """Per-key cumulative attention mass (B, S) — eviction scores."""
+    h, hd = q.shape[1], q.shape[3]
+    hkv = k.shape[1]
+    if h // hkv > 1:
+        k = jnp.repeat(k, h // hkv, axis=1)
+    s = q.shape[2]
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(hd)
+    row = jnp.arange(s)[:, None]
+    col = jnp.arange(s)[None, :]
+    mask = col <= row
+    if window is not None:
+        mask = mask & (col > row - window)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return probs.sum(axis=(1, 2))
+
+
+def gqa_decode(
+    p,
+    x,                      # (B, 1, D)
+    cfg: ModelConfig,
+    cache: Tuple[jax.Array, jax.Array],   # k, v: (B, Hkv, S, hd)
+    pos,                    # scalar: index of the new token
+    window=None,
+):
+    """Single-token decode against a KV cache; returns (out, new_cache)."""
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ck, cv = cache
+    s_cache = ck.shape[2]
+    q = _split_heads(dense(p["q"], x, cfg), h, hd)
+    k = _split_heads(dense(p["k"], x, cfg), hkv, hd)
+    v = _split_heads(dense(p["v"], x, cfg), hkv, hd)
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, pos, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, pos, 0))
+
+    # grouped-query attention WITHOUT materializing the KV repeat: the
+    # (B, Hq, S, hd) expanded cache forced a full copy + all-gather of the
+    # sharded cache per layer (1 GiB/layer on llama3 decode_32k — §Perf H3
+    # iter 1).  Fold q heads into (kv_head, group) instead.
+    group = h // hkv
+    qg = q.reshape(x.shape[0], hkv, group, hd)           # (B, Hkv, g, hd)
+    # mixed-precision contractions: bf16 operands, f32 accumulation.
+    # Casting the cache operand to f32 materialized an f32 copy of the
+    # whole (sharded) cache per layer — 2x the decode step's HBM traffic
+    # (§Perf H3 iter 2).
+    scores = jnp.einsum(
+        "bkgd,bksd->bkgs", qg.astype(ck.dtype), ck,
+        preferred_element_type=jnp.float32,
+    ) / math.sqrt(hd)
+    col = jnp.arange(s_cache)[None, None, None, :]
+    mask = col <= pos
+    if window is not None:
+        mask = mask & (col > pos - window)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bksd->bkgd", probs.astype(cv.dtype), cv,
+        preferred_element_type=jnp.float32,
+    )                                                     # (B, Hkv, g, hd)
+    out = out.reshape(x.shape[0], 1, h * hd).astype(x.dtype)
+    return dense(p["o"], out, cfg), (ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, MiniCPM3 / DeepSeek style)
+# ---------------------------------------------------------------------------
+def mla_init(key, cfg: ModelConfig):
+    keys = jax.random.split(key, 6)
+    d = cfg.d_model
+    h = cfg.num_heads
+    qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    return {
+        "q_a": dense_init(keys[0], d, cfg.q_lora_rank),
+        "q_a_norm": rmsnorm_init(cfg.q_lora_rank),
+        "q_b": dense_init(keys[1], cfg.q_lora_rank, h * qk),
+        "kv_a": dense_init(
+            keys[2], d, cfg.kv_lora_rank + cfg.qk_rope_head_dim
+        ),
+        "kv_a_norm": rmsnorm_init(cfg.kv_lora_rank),
+        "kv_b": dense_init(
+            keys[3], cfg.kv_lora_rank,
+            h * (cfg.qk_nope_head_dim + cfg.v_head_dim),
+        ),
+        "o": dense_init(keys[4], h * cfg.v_head_dim, d),
+    }
+
+
+def _mla_qkv(p, x, cfg, positions):
+    """Materialized (train/prefill) MLA projections."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    q = dense(p["q_b"], rmsnorm(p["q_a_norm"], dense(p["q_a"], x, cfg),
+                                cfg.norm_eps), cfg)
+    q = q.reshape(b, s, h, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = dense(p["kv_a"], x, cfg)
+    latent, k_rope = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank :]
+    latent = rmsnorm(p["kv_a_norm"], latent, cfg.norm_eps)
+    k_rope = apply_rope(
+        k_rope[:, None, :, :], positions, cfg.rope_theta
+    )  # (B, 1, S, dr) shared across heads
+    kvu = dense(p["kv_b"], latent, cfg).reshape(
+        b, s, h, dn + dv
+    ).transpose(0, 2, 1, 3)
+    k_nope, v = kvu[..., :dn], kvu[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, h, s, dr)).astype(k_nope.dtype)],
+        axis=-1,
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    return q_full, k, v, latent, k_rope
+
+
+def mla_attention(p, x, cfg: ModelConfig, positions,
+                  return_probs_sum: bool = False, sharder=None):
+    """Full-sequence MLA; cache payload is the latent + shared rope key."""
+    q, k, v, latent, k_rope = _mla_qkv(p, x, cfg, positions)
+    if sharder is not None:
+        q = sharder(q, "act_heads")
+        k = sharder(k, "act_heads")
+        v = sharder(v, "act_heads")
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    out = attention_op(q, k, v, scale=scale, impl="auto")
+    if sharder is not None:
+        out = sharder(out, "act_heads")
+    probs_sum = None
+    if return_probs_sum:
+        probs_sum = _attention_mass(q, k, cfg, None)
+    out = _merge_heads(out)
+    return dense(p["o"], out, cfg), (latent, k_rope[:, 0]), probs_sum
+
+
+def mla_decode(p, x, cfg: ModelConfig, cache, pos):
+    """Latent-cache decode: cache stores (latent (B,S,R), k_rope (B,S,dr)).
+
+    Uses the absorbed-matmul formulation: scores are computed in latent
+    space, so per-head K is never materialized for cached positions.
+    """
+    b = x.shape[0]
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    rank = cfg.kv_lora_rank
+    c_lat, c_rope = cache
+    s_cache = c_lat.shape[1]
+
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = dense(p["q_b"], rmsnorm(p["q_a_norm"], dense(p["q_a"], x, cfg),
+                                cfg.norm_eps), cfg)
+    q = q.reshape(b, 1, h, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
+
+    kv = dense(p["kv_a"], x, cfg)
+    latent = rmsnorm(p["kv_a_norm"], kv[..., :rank], cfg.norm_eps)
+    k_rope_new = apply_rope(
+        kv[..., rank:][:, None, :, :], posv, cfg.rope_theta
+    )[:, 0]
+    c_lat = jax.lax.dynamic_update_slice(
+        c_lat, latent.astype(c_lat.dtype), (0, pos, 0)
+    )
+    c_rope = jax.lax.dynamic_update_slice(
+        c_rope, k_rope_new.astype(c_rope.dtype), (0, pos, 0)
+    )
+
+    # absorb kv_b's K-half into the query: q_lat (B,H,1,R)
+    w_kv = cast(p["kv_b"]["w"], cfg).reshape(rank, h, dn + dv)
+    w_k = w_kv[..., :dn]                       # (R, H, dn)
+    w_v = w_kv[..., dn:]                       # (R, H, dv)
+    q_lat = jnp.einsum("bhqd,rhd->bhqr", q_nope, w_k)
+    scores = (
+        jnp.einsum("bhqr,bsr->bhqs", q_lat.astype(jnp.float32),
+                   c_lat.astype(jnp.float32))
+        + jnp.einsum("bhqd,bsd->bhqs", q_rope.astype(jnp.float32),
+                     c_rope.astype(jnp.float32))
+    ) / math.sqrt(dn + dr)
+    col = jnp.arange(s_cache)[None, None, None, :]
+    scores = jnp.where(col <= pos, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # output in latent space, then up-project with the V-half
+    o_lat = jnp.einsum("bhqs,bsr->bhqr", probs, c_lat.astype(jnp.float32))
+    out = jnp.einsum("bhqr,rhd->bhqd", o_lat.astype(cdtype(cfg)), w_v)
+    return dense(p["o"], _merge_heads(out), cfg), (c_lat, c_rope)

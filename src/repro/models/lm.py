@@ -1,0 +1,652 @@
+"""LM assembly: init / forward / prefill / decode for every assigned family.
+
+One scan driver per execution mode; layer stacks are ``lax.scan``-ed over
+stacked parameter pytrees (compile-time O(1) in depth).  Families:
+
+* ``dense``   — GQA or MLA attention + SwiGLU (sequential or Cohere-style
+                parallel block)
+* ``moe``     — attention + routed FFN each layer, or (llama4) a period-2
+                superlayer of [dense layer, MoE layer]
+* ``ssm``     — Mamba-2 blocks only (attention-free)
+* ``hybrid``  — Hymba: parallel attention+SSM heads fused per layer, with
+                per-layer attention windows (global every k-th layer, SWA
+                elsewhere) carried as scanned data
+* ``vlm`` / ``audio`` — dense trunks consuming an optional prefix of
+                precomputed frontend embeddings (assignment: frontends are
+                stubs that provide embeddings, see ``frontends.py``)
+
+The optional ``sharder(x, logical_name)`` callback lets the distributed
+layer pin activation shardings without this module importing any mesh
+machinery.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from jax.ad_checkpoint import checkpoint_name
+
+Sharder = Callable[[jax.Array, str], jax.Array]
+
+
+def _noshard(x, name):
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_dense_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    attn = (
+        L.mla_init(k1, cfg)
+        if cfg.attention_type == "mla"
+        else L.gqa_init(k1, cfg)
+    )
+    p = {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": attn,
+        "mlp": L.mlp_init(k2, cfg),
+    }
+    if not cfg.parallel_block:
+        p["ln2"] = L.rmsnorm_init(cfg.d_model)
+    return p
+
+
+def _init_moe_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.gqa_init(k1, cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "moe": MOE.moe_init(k2, cfg),
+    }
+
+
+def _init_ssm_layer(key, cfg: ModelConfig):
+    return {
+        "ln": L.rmsnorm_init(cfg.d_model),
+        "ssm": SSM.ssm_init(key, cfg),
+    }
+
+
+def _init_hybrid_layer(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    di = cfg.d_model  # hymba: ssm path mirrors attention width (expand=1)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.gqa_init(k1, cfg),
+        "ssm": SSM.ssm_init(k2, cfg, d_inner=di),
+        "norm_attn": L.rmsnorm_init(cfg.d_model),
+        "norm_ssm": L.rmsnorm_init(cfg.d_model),
+        "beta_attn": jnp.ones((cfg.d_model,), jnp.float32),
+        "beta_ssm": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.mlp_init(k3, cfg),
+    }
+
+
+def _layer_kind(cfg: ModelConfig) -> str:
+    if cfg.family == "hybrid":
+        return "hybrid"
+    if cfg.is_attention_free:
+        return "ssm"
+    if cfg.uses_moe and cfg.moe_layer_period == 2:
+        return "moe_period2"
+    if cfg.uses_moe:
+        return "moe"
+    return "dense"
+
+
+def _num_scan_steps(cfg: ModelConfig) -> int:
+    if _layer_kind(cfg) == "moe_period2":
+        assert cfg.num_layers % 2 == 0
+        return cfg.num_layers // 2
+    return cfg.num_layers
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    ke, kl, kh = jax.random.split(key, 3)
+    kind = _layer_kind(cfg)
+    steps = _num_scan_steps(cfg)
+    layer_keys = jax.random.split(kl, steps)
+
+    init_one = {
+        "dense": _init_dense_layer,
+        "moe": _init_moe_layer,
+        "ssm": _init_ssm_layer,
+        "hybrid": _init_hybrid_layer,
+        "moe_period2": lambda k, c: {
+            "dense": _init_dense_layer(jax.random.fold_in(k, 0), c),
+            "moe": _init_moe_layer(jax.random.fold_in(k, 1), c),
+        },
+    }[kind]
+    stacked = jax.vmap(lambda k: init_one(k, cfg))(layer_keys)
+
+    params = {
+        "embed": {
+            "w": jax.random.normal(
+                ke, (cfg.padded_vocab, cfg.d_model), jnp.float32
+            ) * 0.02
+        },
+        "layers": stacked,
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(kh, cfg.d_model, cfg.padded_vocab)
+    return params
+
+
+def layer_windows(cfg: ModelConfig, seq_len: int) -> Optional[jax.Array]:
+    """Per-layer attention windows for hybrid archs (scanned data)."""
+    if cfg.family != "hybrid":
+        return None
+    full = seq_len + 1
+    w = []
+    for i in range(cfg.num_layers):
+        is_global = (
+            cfg.global_attn_every
+            and i % cfg.global_attn_every == 0
+        )
+        w.append(full if is_global else (cfg.sliding_window or full))
+    return jnp.asarray(w, jnp.int32)
+
+
+
+def _scan_or_unroll(body, carry, xs, length: int, unroll: bool):
+    """lax.scan, or a Python-unrolled equivalent (used by the dry-run
+    calibration: XLA cost analysis counts while bodies once, so roofline
+    numbers come from small unrolled compiles extrapolated to depth)."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+# ---------------------------------------------------------------------------
+# Block bodies (full-sequence)
+# ---------------------------------------------------------------------------
+def _dense_block(cfg, p, x, positions, sharder, attn_impl):
+    if cfg.parallel_block:
+        h = sharder(L.rmsnorm(p["ln1"], x, cfg.norm_eps), "act_block_in")
+        if cfg.attention_type == "mla":
+            a, kv, _ = L.mla_attention(p["attn"], h, cfg, positions,
+                                       sharder=sharder)
+        else:
+            a, kv, _ = L.gqa_attention(
+                p["attn"], h, cfg, positions,
+                window=cfg.sliding_window, attn_impl=attn_impl,
+                sharder=sharder,
+            )
+        m = L.mlp(p["mlp"], h, cfg)
+        a = checkpoint_name(a, "blk_attn")
+        m = checkpoint_name(m, "blk_ffn")
+        out = x + sharder(a, "act_resid") + m
+        return out, kv
+    h = sharder(L.rmsnorm(p["ln1"], x, cfg.norm_eps), "act_block_in")
+    if cfg.attention_type == "mla":
+        a, kv, _ = L.mla_attention(p["attn"], h, cfg, positions,
+                                       sharder=sharder)
+    else:
+        a, kv, _ = L.gqa_attention(
+            p["attn"], h, cfg, positions,
+            window=cfg.sliding_window, attn_impl=attn_impl,
+            sharder=sharder,
+        )
+    x = x + sharder(checkpoint_name(a, "blk_attn"), "act_resid")
+    h = sharder(L.rmsnorm(p["ln2"], x, cfg.norm_eps), "act_block_in")
+    x = x + sharder(checkpoint_name(L.mlp(p["mlp"], h, cfg), "blk_ffn"),
+                    "act_resid")
+    return x, kv
+
+
+def _moe_block(cfg, p, x, positions, sharder, attn_impl):
+    h = sharder(L.rmsnorm(p["ln1"], x, cfg.norm_eps), "act_block_in")
+    a, kv, _ = L.gqa_attention(
+        p["attn"], h, cfg, positions,
+        window=cfg.sliding_window, attn_impl=attn_impl,
+    )
+    x = x + sharder(checkpoint_name(a, "blk_attn"), "act_resid")
+    h = sharder(L.rmsnorm(p["ln2"], x, cfg.norm_eps), "act_block_in")
+    y, aux = MOE.moe_apply(p["moe"], h, cfg, sharder=sharder)
+    x = x + sharder(checkpoint_name(y, "blk_ffn"), "act_resid")
+    return x, kv, aux
+
+
+def _ssm_block(cfg, p, x, sharder):
+    h = sharder(L.rmsnorm(p["ln"], x, cfg.norm_eps), "act_block_in")
+    return x + sharder(
+        checkpoint_name(SSM.ssm_apply(p["ssm"], h, cfg), "blk_ssm"),
+        "act_resid",
+    )
+
+
+def _hybrid_block(cfg, p, x, positions, window, sharder):
+    h = sharder(L.rmsnorm(p["ln1"], x, cfg.norm_eps), "act_block_in")
+    a, kv, _ = L.gqa_attention(p["attn"], h, cfg, positions,
+                               window=window, sharder=sharder)
+    s = SSM.ssm_apply(p["ssm"], h, cfg, d_inner=cfg.d_model)
+    fused = (
+        p["beta_attn"] * L.rmsnorm(p["norm_attn"], a, cfg.norm_eps)
+        + p["beta_ssm"] * L.rmsnorm(p["norm_ssm"], s, cfg.norm_eps)
+    ) * 0.5
+    x = x + sharder(checkpoint_name(fused.astype(x.dtype), "blk_attn"),
+                    "act_resid")
+    h = sharder(L.rmsnorm(p["ln2"], x, cfg.norm_eps), "act_block_in")
+    x = x + sharder(checkpoint_name(L.mlp(p["mlp"], h, cfg), "blk_ffn"),
+                    "act_resid")
+    return x, kv
+
+
+# ---------------------------------------------------------------------------
+# Forward (train path): logits + aux loss
+# ---------------------------------------------------------------------------
+def forward(
+    cfg: ModelConfig,
+    params: Dict[str, Any],
+    tokens: jax.Array,                       # (B, S)
+    prefix_embeddings: Optional[jax.Array] = None,   # (B, F, D)
+    sharder: Sharder = _noshard,
+    remat: Optional[Callable] = None,
+    attn_impl: str = "auto",
+    unroll: bool = False,
+    return_hidden: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S_total, V), moe_aux_loss scalar).
+
+    ``return_hidden=True`` skips the LM head and returns the final-normed
+    hidden states instead of logits (the chunked-loss path applies the
+    head per sequence chunk so the (B, S, V) f32 logits never
+    materialize — §Perf H2 iter 8)."""
+    kind = _layer_kind(cfg)
+    x = L.cast(jnp.take(params["embed"]["w"], tokens, axis=0), cfg)
+    if prefix_embeddings is not None:
+        x = jnp.concatenate([L.cast(prefix_embeddings, cfg), x], axis=1)
+    x = sharder(x, "act_embed")
+    s_total = x.shape[1]
+    positions = jnp.arange(s_total, dtype=jnp.int32)
+    windows = layer_windows(cfg, s_total)
+
+    def body(carry, scanned):
+        x, aux = carry
+        if kind == "hybrid":
+            p, w = scanned
+            x, _ = _hybrid_block(cfg, p, x, positions, w, sharder)
+        elif kind == "ssm":
+            p = scanned
+            x = _ssm_block(cfg, p, x, sharder)
+        elif kind == "moe":
+            p = scanned
+            x, _, a = _moe_block(cfg, p, x, positions, sharder, attn_impl)
+            aux = aux + a
+        elif kind == "moe_period2":
+            p = scanned
+            x, _ = _dense_block(cfg, p["dense"], x, positions, sharder,
+                                attn_impl)
+            x, _, a = _moe_block(cfg, p["moe"], x, positions, sharder,
+                                 attn_impl)
+            aux = aux + a
+        else:
+            p = scanned
+            x, _ = _dense_block(cfg, p, x, positions, sharder, attn_impl)
+        return (x, aux), None
+
+    if remat is not None:
+        body = remat(body)
+
+    xs = (
+        (params["layers"], windows.reshape(cfg.num_layers))
+        if kind == "hybrid"
+        else params["layers"]
+    )
+    (x, aux), _ = _scan_or_unroll(
+        body, (x, jnp.float32(0.0)), xs, _num_scan_steps(cfg), unroll
+    )
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, aux
+    head_w = (
+        params["embed"]["w"].T
+        if cfg.tie_embeddings
+        else params["lm_head"]["w"]
+    )
+    logits = x @ L.cast(head_w, cfg)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return sharder(logits.astype(jnp.float32), "logits"), aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: caches, prefill, decode
+# ---------------------------------------------------------------------------
+def make_decode_cache(cfg: ModelConfig, batch: int, seq_len: int,
+                      dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Zero-initialized decode cache sized for ``seq_len`` positions."""
+    kind = _layer_kind(cfg)
+    nl = cfg.num_layers
+    cache: Dict[str, Any] = {}
+    if kind in ("dense", "moe", "moe_period2", "hybrid"):
+        if cfg.attention_type == "mla":
+            cache["latent"] = jnp.zeros(
+                (nl, batch, seq_len, cfg.kv_lora_rank), dtype
+            )
+            cache["rope"] = jnp.zeros(
+                (nl, batch, seq_len, cfg.qk_rope_head_dim), dtype
+            )
+        else:
+            steps = _num_scan_steps(cfg)
+            per = 2 if kind == "moe_period2" else 1
+            cache["k"] = jnp.zeros(
+                (steps * per, batch, cfg.num_kv_heads, seq_len,
+                 cfg.head_dim), dtype,
+            )
+            cache["v"] = jnp.zeros_like(cache["k"])
+    if kind in ("ssm", "hybrid"):
+        di = cfg.d_model if kind == "hybrid" else cfg.d_inner
+        h = cfg.ssm_heads
+        pd = cfg.ssm_head_dim
+        n = cfg.ssm_state
+        cache["ssd"] = jnp.zeros((nl, batch, h, pd, n), jnp.float32)
+        cache["conv"] = jnp.zeros(
+            (nl, batch, cfg.ssm_conv - 1, di + 2 * n), dtype
+        )
+    return cache
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Dict[str, Any],
+    tokens: jax.Array,                     # (B, S)
+    cache_len: int,
+    prefix_embeddings: Optional[jax.Array] = None,
+    cache_dtype=jnp.bfloat16,
+    sharder: Sharder = _noshard,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Full-sequence pass that fills a decode cache of ``cache_len`` slots.
+
+    Returns (last-position logits (B, V), cache).
+    """
+    kind = _layer_kind(cfg)
+    batch = tokens.shape[0]
+    x = L.cast(jnp.take(params["embed"]["w"], tokens, axis=0), cfg)
+    if prefix_embeddings is not None:
+        x = jnp.concatenate([L.cast(prefix_embeddings, cfg), x], axis=1)
+    x = sharder(x, "act_embed")
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    windows = layer_windows(cfg, s)
+    cache = make_decode_cache(cfg, batch, cache_len, cache_dtype)
+
+    def pad_kv(k):
+        # (B, Hkv, S, hd) -> (B, Hkv, cache_len, hd)
+        return jnp.pad(
+            k.astype(cache_dtype),
+            ((0, 0), (0, 0), (0, cache_len - s), (0, 0)),
+        )
+
+    def body(carry, scanned):
+        x = carry
+        new = {}
+        if kind == "hybrid":
+            p, w = scanned
+            h = sharder(L.rmsnorm(p["ln1"], x, cfg.norm_eps), "act_block_in")
+            a, (k, v), _ = L.gqa_attention(p["attn"], h, cfg, positions,
+                                           window=w, sharder=sharder)
+            sout, sstate = SSM.ssm_prefill(p["ssm"], h, cfg,
+                                           d_inner=cfg.d_model)
+            fused = (
+                p["beta_attn"] * L.rmsnorm(p["norm_attn"], a, cfg.norm_eps)
+                + p["beta_ssm"] * L.rmsnorm(p["norm_ssm"], sout, cfg.norm_eps)
+            ) * 0.5
+            x = x + fused.astype(x.dtype)
+            hh = sharder(L.rmsnorm(p["ln2"], x, cfg.norm_eps), "act_block_in")
+            x = x + L.mlp(p["mlp"], hh, cfg)
+            new = {"k": pad_kv(k), "v": pad_kv(v),
+                   "ssd": sstate.ssd, "conv": sstate.conv}
+        elif kind == "ssm":
+            p = scanned
+            h = sharder(L.rmsnorm(p["ln"], x, cfg.norm_eps), "act_block_in")
+            sout, sstate = SSM.ssm_prefill(p["ssm"], h, cfg)
+            x = x + sout
+            new = {"ssd": sstate.ssd, "conv": sstate.conv}
+        elif cfg.attention_type == "mla":
+            p = scanned
+            h = sharder(L.rmsnorm(p["ln1"], x, cfg.norm_eps), "act_block_in")
+            a, (latent, k_rope), _ = L.mla_attention(p["attn"], h, cfg,
+                                                     positions,
+                                                     sharder=sharder)
+            x = x + a
+            hh = sharder(L.rmsnorm(p["ln2"], x, cfg.norm_eps), "act_block_in")
+            x = x + L.mlp(p["mlp"], hh, cfg)
+            new = {
+                "latent": jnp.pad(
+                    latent.astype(cache_dtype),
+                    ((0, 0), (0, cache_len - s), (0, 0)),
+                ),
+                "rope": jnp.pad(
+                    k_rope.astype(cache_dtype),
+                    ((0, 0), (0, cache_len - s), (0, 0)),
+                ),
+            }
+        elif kind == "moe_period2":
+            p = scanned
+            x, (k1, v1) = _dense_block(cfg, p["dense"], x, positions,
+                                       sharder, "auto")
+            x, (k2, v2), _ = _moe_block(cfg, p["moe"], x, positions,
+                                        sharder, "auto")
+            new = {
+                "k": jnp.stack([pad_kv(k1), pad_kv(k2)]),
+                "v": jnp.stack([pad_kv(v1), pad_kv(v2)]),
+            }
+        elif kind == "moe":
+            p = scanned
+            x, (k, v), _ = _moe_block(cfg, p, x, positions, sharder, "auto")
+            new = {"k": pad_kv(k), "v": pad_kv(v)}
+        else:
+            p = scanned
+            x, (k, v) = _dense_block(cfg, p, x, positions, sharder, "auto")
+            new = {"k": pad_kv(k), "v": pad_kv(v)}
+        return x, new
+
+    xs = (
+        (params["layers"], windows.reshape(cfg.num_layers))
+        if kind == "hybrid"
+        else params["layers"]
+    )
+    x, stacked_new = _scan_or_unroll(body, x, xs, _num_scan_steps(cfg),
+                                     unroll)
+
+    cache_out = make_decode_cache(cfg, batch, cache_len, cache_dtype)
+    for key, val in stacked_new.items():
+        if key in ("k", "v") and kind == "moe_period2":
+            # (steps, 2, ...) -> (2*steps, ...) preserving layer order
+            val = val.reshape((-1,) + val.shape[2:])
+        cache_out[key] = val
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head_w = (
+        params["embed"]["w"].T
+        if cfg.tie_embeddings
+        else params["lm_head"]["w"]
+    )
+    logits = (x[:, -1] @ L.cast(head_w, cfg)).astype(jnp.float32)
+    return logits, cache_out
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Dict[str, Any],
+    token: jax.Array,                # (B,) int32 — newest token
+    cache: Dict[str, Any],
+    pos,                             # scalar int32: write position
+    sharder: Sharder = _noshard,
+    return_attn_mass: bool = False,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Dict[str, Any], Optional[jax.Array]]:
+    """One decode step. Returns (logits (B, V), cache, attn_mass (B, S)|None).
+
+    ``attn_mass`` is the per-cache-position attention probability mass
+    summed over heads and averaged over layers — the importance score the
+    RMQ eviction manager indexes (DESIGN.md §4).
+    """
+    kind = _layer_kind(cfg)
+    x = L.cast(jnp.take(params["embed"]["w"], token[:, None], axis=0), cfg)
+    windows = layer_windows(cfg, int(1e9)) if kind == "hybrid" else None
+
+    def attn_probs_mass(q, kk, pos, s_cache):
+        col = jnp.arange(s_cache)[None, None, None, :]
+        scores = jnp.einsum(
+            "bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+        ) / (q.shape[-1] ** 0.5)
+        scores = jnp.where(col <= pos, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        return probs.sum(axis=(1, 2))
+
+    def body(carry, scanned):
+        x, mass = carry
+        new_cache = {}
+        if kind == "hybrid":
+            p, w, ck, cv, cs, cc = scanned
+            h = sharder(L.rmsnorm(p["ln1"], x, cfg.norm_eps), "act_block_in")
+            a, (nk, nv) = L.gqa_decode(p["attn"], h, cfg, (ck, cv), pos,
+                                       window=w)
+            sout, sstate = SSM.ssm_decode(
+                p["ssm"], h, cfg, SSM.SSMState(ssd=cs, conv=cc),
+                d_inner=cfg.d_model,
+            )
+            fused = (
+                p["beta_attn"] * L.rmsnorm(p["norm_attn"], a, cfg.norm_eps)
+                + p["beta_ssm"] * L.rmsnorm(p["norm_ssm"], sout, cfg.norm_eps)
+            ) * 0.5
+            x = x + fused.astype(x.dtype)
+            hh = sharder(L.rmsnorm(p["ln2"], x, cfg.norm_eps), "act_block_in")
+            x = x + L.mlp(p["mlp"], hh, cfg)
+            new_cache = {"k": nk, "v": nv, "ssd": sstate.ssd,
+                         "conv": sstate.conv}
+        elif kind == "ssm":
+            p, cs, cc = scanned
+            h = sharder(L.rmsnorm(p["ln"], x, cfg.norm_eps), "act_block_in")
+            sout, sstate = SSM.ssm_decode(
+                p["ssm"], h, cfg, SSM.SSMState(ssd=cs, conv=cc)
+            )
+            x = x + sout
+            new_cache = {"ssd": sstate.ssd, "conv": sstate.conv}
+        elif cfg.attention_type == "mla":
+            p, clat, crope = scanned
+            h = sharder(L.rmsnorm(p["ln1"], x, cfg.norm_eps), "act_block_in")
+            a, (nlat, nrope) = L.mla_decode(p["attn"], h, cfg, (clat, crope),
+                                            pos)
+            x = x + a
+            hh = sharder(L.rmsnorm(p["ln2"], x, cfg.norm_eps), "act_block_in")
+            x = x + L.mlp(p["mlp"], hh, cfg)
+            new_cache = {"latent": nlat, "rope": nrope}
+        elif kind == "moe_period2":
+            p, ck, cv = scanned   # ck/cv: (2, B, Hkv, S, hd)
+            h = L.rmsnorm(p["dense"]["ln1"], x, cfg.norm_eps)
+            a, (k1, v1) = L.gqa_decode(p["dense"]["attn"], h, cfg,
+                                       (ck[0], cv[0]), pos)
+            x = x + a
+            hh = L.rmsnorm(p["dense"]["ln2"], x, cfg.norm_eps)
+            x = x + L.mlp(p["dense"]["mlp"], hh, cfg)
+            h = L.rmsnorm(p["moe"]["ln1"], x, cfg.norm_eps)
+            a, (k2, v2) = L.gqa_decode(p["moe"]["attn"], h, cfg,
+                                       (ck[1], cv[1]), pos)
+            x = x + a
+            hh = L.rmsnorm(p["moe"]["ln2"], x, cfg.norm_eps)
+            y, _ = MOE.moe_apply(p["moe"]["moe"], hh, cfg)
+            x = x + y
+            new_cache = {"k": jnp.stack([k1, k2]), "v": jnp.stack([v1, v2])}
+        else:
+            p, ck, cv = scanned
+            ln2_key = "ln2" if not cfg.parallel_block else None
+            h = sharder(L.rmsnorm(p["ln1"], x, cfg.norm_eps), "act_block_in")
+            a, (nk, nv) = L.gqa_decode(p["attn"], h, cfg, (ck, cv), pos,
+                                       window=cfg.sliding_window)
+            if return_attn_mass:
+                # recompute q for the mass (cheap: one token)
+                q = L._split_heads(
+                    L.dense(p["attn"]["q"], h, cfg),
+                    cfg.num_heads, cfg.head_dim,
+                )
+                q = L.apply_rope(q, jnp.full((1,), pos, jnp.int32),
+                                 cfg.rope_theta)
+                grp = cfg.num_heads // cfg.num_kv_heads
+                kk = jnp.repeat(nk, grp, axis=1) if grp > 1 else nk
+                mass = mass + attn_probs_mass(q, kk, pos, nk.shape[2])
+            if kind == "moe":
+                x = x + a
+                hh = sharder(L.rmsnorm(p["ln2"], x, cfg.norm_eps), "act_block_in")
+                y, _ = MOE.moe_apply(p["moe"], hh, cfg)
+                x = x + y
+            elif cfg.parallel_block:
+                m = L.mlp(p["mlp"], h, cfg)
+                x = x + a + m
+            else:
+                x = x + a
+                hh = L.rmsnorm(p[ln2_key], x, cfg.norm_eps)
+                x = x + L.mlp(p["mlp"], hh, cfg)
+            new_cache = {"k": nk, "v": nv}
+        return (x, mass), new_cache
+
+    # assemble scanned inputs per kind
+    if kind == "hybrid":
+        xs = (params["layers"], windows.reshape(cfg.num_layers),
+              cache["k"], cache["v"], cache["ssd"], cache["conv"])
+    elif kind == "ssm":
+        xs = (params["layers"], cache["ssd"], cache["conv"])
+    elif cfg.attention_type == "mla":
+        xs = (params["layers"], cache["latent"], cache["rope"])
+    elif kind == "moe_period2":
+        steps = _num_scan_steps(cfg)
+        ck = cache["k"].reshape((steps, 2) + cache["k"].shape[1:])
+        cv = cache["v"].reshape((steps, 2) + cache["v"].shape[1:])
+        xs = (params["layers"], ck, cv)
+    else:
+        xs = (params["layers"], cache["k"], cache["v"])
+
+    batch = token.shape[0]
+    s_cache = 0
+    if "k" in cache:
+        s_cache = cache["k"].shape[-2]
+    mass0 = jnp.zeros((batch, max(s_cache, 1)), jnp.float32)
+    (x, mass), new_stacked = _scan_or_unroll(body, (x, mass0), xs,
+                                             _num_scan_steps(cfg), unroll)
+
+    new_cache = dict(cache)
+    for key, val in new_stacked.items():
+        if key in ("k", "v") and kind == "moe_period2":
+            val = val.reshape((-1,) + val.shape[2:])
+        new_cache[key] = val
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head_w = (
+        params["embed"]["w"].T
+        if cfg.tie_embeddings
+        else params["lm_head"]["w"]
+    )
+    logits = (x[:, 0] @ L.cast(head_w, cfg)).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    if return_attn_mass and s_cache:
+        mass = mass / _num_scan_steps(cfg)
+        return logits, new_cache, mass
+    return logits, new_cache, None

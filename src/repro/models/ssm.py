@@ -1,0 +1,193 @@
+"""Mamba-2 (SSD) block — and the SSM half of Hymba's hybrid heads.
+
+Follows the Mamba-2 layer recipe (arXiv:2405.21060): one fused input
+projection producing (z, x, B, C, dt); short depthwise-causal conv over
+[x; B; C]; SSD scan over heads; gated RMSNorm; output projection.
+The SSD scan itself is the Pallas kernel / chunked-ref in
+``repro.kernels.ssd_scan`` (state-space duality chunk algorithm).
+
+Decode keeps two carries per layer: the (B, H, P, N) SSM state and the
+(B, conv-1, channels) conv tail — both O(1) in sequence length, which is
+why the ``long_500k`` shape runs only for the SSM/hybrid archs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.ssd_scan.ops import ssd, ssd_with_state
+from repro.models.layers import cast, cdtype, dense, dense_init, rmsnorm_init, rmsnorm
+
+
+def _dims(cfg: ModelConfig, d_inner: Optional[int] = None):
+    di = d_inner if d_inner is not None else cfg.ssm_expand * cfg.d_model
+    h = cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    n = cfg.ssm_state
+    assert h * p == di, (h, p, di)
+    return di, h, p, n
+
+
+def ssm_init(key, cfg: ModelConfig, d_inner: Optional[int] = None):
+    di, h, p, n = _dims(cfg, d_inner)
+    d = cfg.d_model
+    keys = jax.random.split(key, 4)
+    conv_ch = di + 2 * n
+    return {
+        # fused in_proj -> [z (di), x (di), B (n), C (n), dt (h)]
+        "in_proj": dense_init(keys[0], d, 2 * di + 2 * n + h),
+        "conv_w": jax.random.normal(
+            keys[1], (cfg.ssm_conv, conv_ch), jnp.float32
+        ) * (1.0 / math.sqrt(cfg.ssm_conv)),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h).astype(jnp.float32)
+        ),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.expm1(
+                jnp.exp(
+                    jax.random.uniform(keys[2], (h,), jnp.float32)
+                    * (math.log(0.1) - math.log(0.001))
+                    + math.log(0.001)
+                )
+            )
+        ),
+        "norm": rmsnorm_init(di),
+        "out_proj": dense_init(keys[3], di, d),
+    }
+
+
+def _causal_conv(u, w, b, tail=None):
+    """Depthwise causal conv. u: (B, L, C); w: (K, C); tail: (B, K-1, C)."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    padded = jnp.concatenate([tail, u], axis=1)
+    out = jnp.zeros_like(u)
+    for i in range(k):
+        out = out + padded[:, i : i + u.shape[1], :] * w[i]
+    new_tail = padded[:, -(k - 1) :, :] if k > 1 else tail
+    return out + b, new_tail
+
+
+class SSMState(NamedTuple):
+    ssd: jax.Array        # (B, H, P, N) f32
+    conv: jax.Array       # (B, K-1, d_inner + 2N)
+
+
+def ssm_zero_state(cfg: ModelConfig, batch: int,
+                   d_inner: Optional[int] = None) -> SSMState:
+    di, h, p, n = _dims(cfg, d_inner)
+    return SSMState(
+        ssd=jnp.zeros((batch, h, p, n), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n),
+                       jnp.dtype(cfg.dtype)),
+    )
+
+
+def _project(p, x, cfg, di, h, n):
+    zxbcdt = dense(p["in_proj"], x, cfg)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * n]
+    dt_raw = zxbcdt[..., 2 * di + 2 * n :]
+    return z, xbc, dt_raw
+
+
+def _ssd_inputs(p, xbc, dt_raw, cfg, di, h, pd, n):
+    b, l, _ = xbc.shape
+    xs = xbc[..., :di]
+    bm = xbc[..., di : di + n].astype(jnp.float32)
+    cm = xbc[..., di + n :].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"]
+    )                                                   # (B, L, H)
+    a = -jnp.exp(p["A_log"])                            # (H,)
+    log_a = a * dt                                      # (B, L, H)
+    xh = xs.astype(jnp.float32).reshape(b, l, h, pd)
+    dtx = xh * dt[..., None]
+    return xh, dtx, log_a, bm, cm
+
+
+def _pad_ssd(arrs, l, chunk):
+    """Right-pad time axis (axis=1) to a multiple of chunk.
+
+    Zero padding is state-neutral: log_a = 0 ⇒ decay 1, dtx = 0 ⇒ no state
+    injection, so padded steps are identity on the recurrence.
+    """
+    lp = -(-l // chunk) * chunk
+    if lp == l:
+        return arrs, l
+    return [
+        jnp.pad(a, [(0, 0), (0, lp - l)] + [(0, 0)] * (a.ndim - 2))
+        for a in arrs
+    ], l
+
+
+def ssm_apply(p, x, cfg: ModelConfig, d_inner: Optional[int] = None,
+              impl: str = "auto"):
+    """Full-sequence SSD block (train / prefill without state)."""
+    di, h, pd, n = _dims(cfg, d_inner)
+    z, xbc, dt_raw = _project(p, x, cfg, di, h, n)
+    xbc, _ = _causal_conv(
+        xbc, cast(p["conv_w"], cfg), cast(p["conv_b"], cfg)
+    )
+    xbc = jax.nn.silu(xbc)
+    xh, dtx, log_a, bm, cm = _ssd_inputs(p, xbc, dt_raw, cfg, di, h, pd, n)
+    l = x.shape[1]
+    chunk = min(cfg.ssm_chunk, l)
+    (dtx, log_a, bm, cm), _ = _pad_ssd([dtx, log_a, bm, cm], l, chunk)
+    y = ssd(dtx, log_a, bm, cm, chunk=chunk, impl=impl)[:, :l]
+    y = y + p["D"][None, None, :, None] * xh            # skip connection
+    y = y.reshape(x.shape[0], x.shape[1], di).astype(cdtype(cfg))
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense(p["out_proj"], y, cfg)
+
+
+def ssm_prefill(p, x, cfg: ModelConfig, d_inner: Optional[int] = None):
+    """Full-sequence pass that also returns the decode state."""
+    di, h, pd, n = _dims(cfg, d_inner)
+    z, xbc, dt_raw = _project(p, x, cfg, di, h, n)
+    xbc, conv_tail = _causal_conv(
+        xbc, cast(p["conv_w"], cfg), cast(p["conv_b"], cfg)
+    )
+    xbc = jax.nn.silu(xbc)
+    xh, dtx, log_a, bm, cm = _ssd_inputs(p, xbc, dt_raw, cfg, di, h, pd, n)
+    l = x.shape[1]
+    chunk = min(cfg.ssm_chunk, l)
+    (dtx, log_a, bm, cm), _ = _pad_ssd([dtx, log_a, bm, cm], l, chunk)
+    y, final_state = ssd_with_state(dtx, log_a, bm, cm, chunk=chunk)
+    y = y[:, :l]
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(x.shape[0], x.shape[1], di).astype(cdtype(cfg))
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = dense(p["out_proj"], y, cfg)
+    return out, SSMState(ssd=final_state, conv=conv_tail.astype(
+        jnp.dtype(cfg.dtype)))
+
+
+def ssm_decode(p, x, cfg: ModelConfig, state: SSMState,
+               d_inner: Optional[int] = None):
+    """One-token recurrent step. x: (B, 1, D)."""
+    di, h, pd, n = _dims(cfg, d_inner)
+    z, xbc, dt_raw = _project(p, x, cfg, di, h, n)
+    xbc, conv_tail = _causal_conv(
+        xbc, cast(p["conv_w"], cfg), cast(p["conv_b"], cfg),
+        tail=state.conv.astype(cdtype(cfg)),
+    )
+    xbc = jax.nn.silu(xbc)
+    xh, dtx, log_a, bm, cm = _ssd_inputs(p, xbc, dt_raw, cfg, di, h, pd, n)
+    # one recurrence step: S = exp(log_a) S + dtx ⊗ B ; y = S @ C
+    a = jnp.exp(log_a[:, 0])[:, :, None, None]          # (B, H, 1, 1)
+    s = a * state.ssd + dtx[:, 0, :, :, None] * bm[:, 0, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", s, cm[:, 0])[:, None]   # (B, 1, H, P)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(x.shape[0], 1, di).astype(cdtype(cfg))
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = dense(p["out_proj"], y, cfg)
+    return out, SSMState(ssd=s, conv=conv_tail.astype(jnp.dtype(cfg.dtype)))

@@ -1,0 +1,4 @@
+from repro.serve.engine import ServeEngine
+from repro.serve.eviction import RMQEvictionManager
+
+__all__ = ["ServeEngine", "RMQEvictionManager"]

@@ -1,0 +1,135 @@
+"""Batched serving engine: prefill + decode loop with RMQ eviction hooks.
+
+A deliberately small engine (the framework's serving deliverable is the
+``serve_step`` lowered in the dry-run; this class is the host-side driver
+used by examples/tests): greedy decoding over a fixed batch, optional
+RMQ-backed eviction when the per-sequence importance scores outgrow the
+budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.models.lm import decode_step, make_decode_cache, prefill
+from repro.serve.eviction import RMQEvictionManager
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, sc: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.sc = sc
+        self.eviction = (
+            RMQEvictionManager(
+                budget=sc.eviction_budget,
+                protected_window=sc.eviction_window,
+                c=sc.rmq_chunk,
+                t=sc.rmq_threshold,
+            )
+            if sc.eviction_enabled
+            else None
+        )
+        cache_dtype = jnp.dtype(sc.kv_cache_dtype)
+        self._prefill = jax.jit(
+            functools.partial(
+                prefill, cfg, cache_len=sc.seq_len, cache_dtype=cache_dtype
+            ),
+            static_argnames=(),
+        )
+        self._decode = jax.jit(
+            functools.partial(
+                decode_step, cfg,
+                return_attn_mass=sc.eviction_enabled,
+            )
+        )
+
+    def generate(
+        self,
+        prompt_tokens: jax.Array,            # (B, S_prompt)
+        max_new_tokens: int,
+        prefix_embeddings: Optional[jax.Array] = None,
+    ) -> Dict[str, Any]:
+        cfg = self.cfg
+        b, s_prompt = prompt_tokens.shape
+        f = cfg.frontend_tokens if cfg.frontend else 0
+        logits, cache = self._prefill(
+            self.params, prompt_tokens,
+            prefix_embeddings=prefix_embeddings,
+        )
+        pos = f + s_prompt
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = [token]
+        scores = jnp.zeros((b, self.sc.seq_len), jnp.float32)
+        evictions = 0
+
+        for _ in range(max_new_tokens - 1):
+            logits, cache, mass = self._decode(
+                self.params, token, cache, pos=pos
+            )
+            if mass is not None:
+                scores = scores + mass
+            pos += 1
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(token)
+
+            if (
+                self.eviction is not None
+                and self.eviction.needs_eviction(pos)
+            ):
+                # Evict per-sequence on the mean score (batch-shared cache
+                # layout keeps positions aligned across sequences).
+                mean_scores = scores[:, :pos].mean(axis=0)
+                victims = self.eviction.plan_evictions(mean_scores, pos)
+                if victims.shape[0]:
+                    cache, scores, pos = self._evict(
+                        cache, scores, victims, pos
+                    )
+                    evictions += int(victims.shape[0])
+
+        return {
+            "tokens": jnp.stack(out, axis=1),
+            "final_pos": pos,
+            "evicted": evictions,
+        }
+
+    def _evict(self, cache, scores, victims, live):
+        """Compact live tokens along the cache S axis, shapes static.
+
+        Permutation [kept live rows | old tail | victim rows]: victims are
+        parked past the live region, where every slot is overwritten by a
+        future ``dynamic_update_slice`` before it can be attended
+        (decode writes position ``pos`` before reading ``col <= pos``).
+        """
+        vict = np.asarray(victims)
+        keep_mask = np.ones((self.sc.seq_len,), bool)
+        keep_mask[vict] = False
+        keep_idx = np.concatenate(
+            [np.nonzero(keep_mask[:live])[0],
+             np.arange(live, self.sc.seq_len),
+             vict]
+        )
+        assert keep_idx.shape[0] == self.sc.seq_len
+        keep_idx = jnp.asarray(keep_idx, jnp.int32)
+        new_live = live - int(vict.shape[0])
+
+        new_cache = dict(cache)
+        for key in ("k", "v"):
+            if key in cache:
+                new_cache[key] = jnp.take(cache[key], keep_idx, axis=3)
+        for key in ("latent", "rope"):
+            if key in cache:
+                new_cache[key] = jnp.take(cache[key], keep_idx, axis=2)
+        new_scores = jnp.take(scores, keep_idx, axis=1)
+        # stale rows past the live region must not carry scores
+        new_scores = jnp.where(
+            jnp.arange(self.sc.seq_len)[None, :] < new_live, new_scores, 0.0
+        )
+        return new_cache, new_scores, new_live

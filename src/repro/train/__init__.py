@@ -1,0 +1,19 @@
+from repro.train.optimizer import (
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    global_norm,
+)
+from repro.train.train_step import TrainState, build_train_step, init_train_state
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "global_norm",
+    "TrainState",
+    "build_train_step",
+    "init_train_state",
+]

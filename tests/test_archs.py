@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+Each of the 10 assigned archs: instantiate the REDUCED same-family config,
+run one forward pass and one train step on CPU, assert output shapes and
+finiteness; plus prefill→decode equivalence against the full forward.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, TrainConfig, get_config, get_smoke_config
+from repro.models import decode_step, forward, init_params, prefill
+from repro.models.frontends import synthetic_frontend_embeddings
+from repro.train import build_train_step, init_train_state
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = get_smoke_config(arch)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        b, s = 2, 32
+        tokens = jax.random.randint(
+            jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size
+        )
+        pre = synthetic_frontend_embeddings(cfg, b)
+        logits, aux = forward(cfg, params, tokens, prefix_embeddings=pre)
+        f = cfg.frontend_tokens if cfg.frontend else 0
+        assert logits.shape == (b, s + f, cfg.padded_vocab)
+        assert bool(jnp.isfinite(logits).all())
+        assert bool(jnp.isfinite(aux))
+
+    def test_one_train_step(self, arch):
+        cfg = get_smoke_config(arch)
+        tc = TrainConfig(total_steps=4, warmup_steps=1, seq_len=32,
+                         global_batch=2)
+        state = init_train_state(cfg, tc, jax.random.PRNGKey(0))
+        step = jax.jit(build_train_step(cfg, tc))
+        batch = {
+            "tokens": jax.random.randint(
+                jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab_size
+            )
+        }
+        pre = synthetic_frontend_embeddings(cfg, 2)
+        if pre is not None:
+            batch["prefix"] = pre
+        state, metrics = step(state, batch)
+        assert bool(jnp.isfinite(metrics["loss"]))
+        assert bool(jnp.isfinite(metrics["grad_norm"]))
+        assert int(metrics["step"]) == 1
+        # params actually changed
+        leaf = jax.tree.leaves(state.params)[0]
+        assert bool(jnp.isfinite(leaf).all())
+
+    def test_prefill_decode_matches_forward(self, arch):
+        cfg = get_smoke_config(arch)
+        if cfg.uses_moe:
+            # exact equivalence requires no capacity drops
+            cfg = dataclasses.replace(
+                cfg, capacity_factor=float(cfg.num_experts)
+            )
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        b, s = 2, 16
+        f = cfg.frontend_tokens if cfg.frontend else 0
+        pre = synthetic_frontend_embeddings(cfg, b)
+        toks = jax.random.randint(
+            jax.random.PRNGKey(1), (b, s + 2), 0, cfg.vocab_size
+        )
+        logits_full, _ = forward(cfg, params, toks, prefix_embeddings=pre)
+        lg, cache = prefill(
+            cfg, params, toks[:, :s], cache_len=32 + f,
+            prefix_embeddings=pre, cache_dtype=jnp.float32,
+        )
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(logits_full[:, f + s - 1]),
+            atol=1e-3, rtol=1e-3,
+        )
+        for i, sp in enumerate([s, s + 1]):
+            lg, cache, _ = decode_step(
+                cfg, params, toks[:, sp], cache, pos=f + sp
+            )
+            np.testing.assert_allclose(
+                np.asarray(lg), np.asarray(logits_full[:, f + sp]),
+                atol=1e-3, rtol=1e-3,
+            )
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_geometry(arch):
+    """Full configs match the assigned geometry (no allocation)."""
+    cfg = get_config(arch)
+    assigned = {
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 202048),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 151936),
+        "internvl2-2b": (24, 2048, 16, 8, 92553),
+        "command-r-plus-104b": (64, 12288, 96, 8, 256000),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 151936),
+        "llama3.2-3b": (28, 3072, 24, 8, 128256),
+        "minicpm3-4b": (62, 2560, 40, 40, 73448),
+        "musicgen-medium": (48, 1536, 24, 24, 2048),
+        "mamba2-1.3b": (48, 2048, 0, 0, 50280),
+        "hymba-1.5b": (32, 1600, 25, 5, 32001),
+    }[arch]
+    assert (cfg.num_layers, cfg.d_model, cfg.num_heads,
+            cfg.num_kv_heads, cfg.vocab_size) == assigned
+
+
+def test_param_counts_match_names():
+    """Sanity: computed parameter counts sit near the model names."""
+    budgets = {
+        "llama4-maverick-400b-a17b": (3.3e11, 4.7e11),
+        "command-r-plus-104b": (0.9e11, 1.2e11),
+        "llama3.2-3b": (2.5e9, 4.3e9),
+        "qwen1.5-0.5b": (4e8, 8e8),
+        "minicpm3-4b": (3e9, 5e9),
+        "mamba2-1.3b": (1.0e9, 1.8e9),
+        "hymba-1.5b": (1.0e9, 2.2e9),
+        "musicgen-medium": (1.2e9, 2.4e9),
+        "internvl2-2b": (1.5e9, 2.7e9),
+        "qwen2-moe-a2.7b": (1.2e10, 1.7e10),
+    }
+    for arch, (lo, hi) in budgets.items():
+        n = get_config(arch).num_params()
+        assert lo <= n <= hi, (arch, f"{n:.3e}", lo, hi)
+    # MoE active params far below total
+    cfg = get_config("llama4-maverick-400b-a17b")
+    assert cfg.num_active_params() < 0.1 * cfg.num_params()

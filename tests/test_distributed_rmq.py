@@ -1,0 +1,81 @@
+"""Distributed RMQ tests: run shard_map paths on fake CPU device meshes.
+
+Multi-device cases run in a subprocess so the fake-device XLA flag never
+leaks into this test process (smoke tests must see 1 device).
+"""
+
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import DistributedRMQ
+
+
+def test_distributed_on_1x1_mesh_matches_naive():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rng = np.random.default_rng(1)
+    n = 4096
+    x = rng.random(n).astype(np.float32)
+    d = DistributedRMQ.build(x, mesh, c=16, t=8, with_positions=True)
+    ls = rng.integers(0, n, 64)
+    rs = np.minimum(ls + rng.integers(0, n, 64), n - 1)
+    ls, rs = np.minimum(ls, rs), np.maximum(ls, rs)
+    got = np.asarray(d.query(ls, rs))
+    want = np.array([x[l : r + 1].min() for l, r in zip(ls, rs)])
+    np.testing.assert_allclose(got, want)
+    gotp = np.asarray(d.query_index(ls, rs))
+    wantp = np.array([l + np.argmin(x[l : r + 1]) for l, r in zip(ls, rs)])
+    np.testing.assert_array_equal(gotp, wantp)
+
+
+_SUBPROCESS_PROG = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.distributed import DistributedRMQ
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(2)
+n = 10001  # not divisible by segments -> exercises padding
+x = rng.random(n).astype(np.float32)
+d = DistributedRMQ.build(x, mesh, c=16, t=8, with_positions=True)
+m_q = 128
+ls = rng.integers(0, n, m_q)
+rs = np.minimum(ls + rng.integers(0, n, m_q), n - 1)
+ls, rs = np.minimum(ls, rs), np.maximum(ls, rs)
+got = np.asarray(d.query(ls, rs))
+want = np.array([x[l:r+1].min() for l, r in zip(ls, rs)])
+assert np.allclose(got, want), float(np.abs(got - want).max())
+gotp = np.asarray(d.query_index(ls, rs))
+wantp = np.array([l + np.argmin(x[l:r+1]) for l, r in zip(ls, rs)])
+assert (gotp == wantp).all()
+# cross-segment tie-break stays leftmost
+xz = np.zeros(8000, dtype=np.float32)
+dz = DistributedRMQ.build(xz, mesh, c=16, t=8, with_positions=True)
+p = np.asarray(dz.query_index(np.array([100, 3000]), np.array([7999, 7999])))
+assert p.tolist() == [100, 3000], p.tolist()
+print("SUBPROCESS_OK")
+"""
+
+
+def test_distributed_on_2x4_fake_mesh():
+    res = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_PROG],
+        capture_output=True,
+        text=True,
+        env={
+            "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+            "PYTHONPATH": "src",
+            "PATH": "/usr/bin:/bin:/usr/local/bin",
+            "JAX_PLATFORMS": "cpu",
+        },
+        cwd="/root/repo",
+        timeout=300,
+    )
+    assert "SUBPROCESS_OK" in res.stdout, res.stdout + res.stderr
+
+
+def test_process_sees_one_device():
+    """Guard: the fake-device flag must never leak into the test process."""
+    assert jax.device_count() == 1

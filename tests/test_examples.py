@@ -1,0 +1,77 @@
+"""Smoke the runnable examples (reduced sizes; full runs are documented
+in README). The distributed example runs in a subprocess (fake devices)."""
+
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def test_quickstart_path():
+    from repro.core import RMQ
+
+    rng = np.random.default_rng(0)
+    x = rng.random(1 << 14, dtype=np.float32)
+    rmq = RMQ.build(x, c=128, t=64, with_positions=True, backend="jax")
+    ls = rng.integers(0, 1 << 14, 64).astype(np.int32)
+    rs = np.minimum(ls + rng.integers(1, 1 << 13, 64), (1 << 14) - 1)
+    vals = np.asarray(rmq.query(jnp.asarray(ls), jnp.asarray(rs)))
+    for i in range(8):
+        assert vals[i] == x[ls[i]:rs[i] + 1].min()
+
+
+def test_chaining_recovers_chains():
+    sys.path.insert(0, "examples")
+    try:
+        from chaining import (
+            chain_scores_naive,
+            chain_scores_rmq,
+            make_anchors,
+        )
+    finally:
+        sys.path.pop(0)
+    x = make_anchors(n=512)
+    score, _, nq = chain_scores_rmq(x, block=128)
+    naive = chain_scores_naive(x)
+    assert nq > 0
+    assert score.max() > 5 * 20
+    assert score.max() >= 0.6 * naive.max()  # generational relaxation
+
+
+def test_distributed_example_subprocess():
+    res = subprocess.run(
+        [sys.executable, "examples/distributed_rmq.py"],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+        cwd="/root/repo",
+    )
+    assert "spot-checks OK" in res.stdout, res.stdout + res.stderr
+
+
+def test_serve_example_objects():
+    """serve_lm's engine path with tiny sizes (full example in README)."""
+    import jax
+
+    sys.path.insert(0, "examples")
+    try:
+        from serve_lm import small_lm
+    finally:
+        sys.path.pop(0)
+    from repro.configs.base import ServeConfig
+    from repro.models.lm import init_params
+    from repro.serve.engine import ServeEngine
+
+    cfg = small_lm()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    sc = ServeConfig(seq_len=48, batch=2, kv_cache_dtype="float32",
+                     eviction_enabled=True, eviction_budget=32,
+                     eviction_window=8, rmq_chunk=8, rmq_threshold=4)
+    eng = ServeEngine(cfg, params, sc)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                 cfg.vocab_size)
+    out = eng.generate(prompts, 24)
+    assert out["tokens"].shape == (2, 24)
+    assert out["final_pos"] <= 33

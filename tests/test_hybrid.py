@@ -1,0 +1,56 @@
+"""Hybrid (sparse-table top) RMQ — paper §4.5 as a selectable backend."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.api import RMQ
+from repro.core.hybrid import HybridRMQ
+
+
+@pytest.mark.parametrize("n,c,t", [
+    (4097, 16, 8),
+    (100_000, 128, 1024),
+    (1 << 18, 128, 4096),
+    (513, 4, 2),
+])
+def test_hybrid_matches_naive(n, c, t):
+    rng = np.random.default_rng(n)
+    x = rng.random(n).astype(np.float32)
+    h = HybridRMQ.build(x, c=c, t=t)
+    ls = rng.integers(0, n, 256)
+    rs = np.minimum(ls + rng.integers(0, n, 256), n - 1)
+    ls, rs = np.minimum(ls, rs), np.maximum(ls, rs)
+    got = np.asarray(h.query(ls, rs))
+    want = np.array([x[l : r + 1].min() for l, r in zip(ls, rs)])
+    np.testing.assert_allclose(got, want)
+
+
+def test_hybrid_enables_larger_t_with_fewer_levels():
+    """Paper §4.5 implication (1): the O(1) top makes large t free, which
+    removes hierarchy levels."""
+    n = 1 << 20
+    rng = np.random.default_rng(0)
+    x = rng.random(n).astype(np.float32)
+    scan_version = RMQ.build(x, c=128, t=8, backend="jax")
+    hybrid = HybridRMQ.build(x, c=128, t=4096)
+    assert hybrid.plan.num_levels < scan_version.plan.num_levels
+    # and still answers correctly
+    assert float(hybrid.query(np.array([0]), np.array([n - 1]))[0]) == \
+        x.min()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=1500),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hybrid_property(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-5, 5, n).astype(np.float32)
+    h = HybridRMQ.build(x, c=8, t=4)
+    l = int(rng.integers(0, n))
+    r = int(rng.integers(l, n))
+    got = float(h.query(np.array([l]), np.array([r]))[0])
+    assert got == x[l : r + 1].min()
