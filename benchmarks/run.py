@@ -11,6 +11,7 @@ import traceback
 MODULES = [
     ("memory_footprint", "Fig. 15 memory footprint"),
     ("construction", "Fig. 17 construction time"),
+    ("update_throughput", "streaming updates vs full rebuild"),
     ("throughput", "Fig. 16 RMQ throughput by range class"),
     ("tuning", "Fig. 12 (c, t) tuning"),
     ("query_assignment", "Fig. 14 multi-load vs WLQ"),

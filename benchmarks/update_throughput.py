@@ -1,0 +1,73 @@
+"""Streaming update throughput: incremental maintenance vs full rebuild.
+
+The paper's construction is already cheap (a few chunked reductions); the
+streaming claim is that a *batch of B point updates* costs
+O(B log_c n) chunk re-reductions, so for B ≪ n/c it should beat
+rebuilding by a widening margin as n grows.  This benchmark sweeps batch
+size and n, reporting updates/sec for the incremental path and the
+equivalent full-rebuild baseline, plus the crossover ratio.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, make_input_array, time_fn
+from repro.core.hierarchy import build_hierarchy
+from repro.core.plan import make_plan
+from repro.streaming.updates import update_hierarchy
+
+
+def run(sizes=(2**18, 2**22), batches=(16, 256, 4096), c=128, t=64):
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        x = jnp.asarray(make_input_array(n))
+        plan = make_plan(n, c=c, t=t)
+        h = build_hierarchy(x, plan, with_positions=True)
+        jax.block_until_ready(h.upper)
+        t_rebuild = time_fn(
+            lambda: build_hierarchy(x, plan, with_positions=True).upper
+        )
+        for b in batches:
+            idxs = jnp.asarray(rng.integers(0, n, b), jnp.int32)
+            vals = jnp.asarray(rng.random(b).astype(np.float32))
+            t_update = time_fn(
+                lambda: update_hierarchy(h, idxs, vals).upper
+            )
+            rows.append({
+                "n": n,
+                "batch": b,
+                "update_us": t_update * 1e6,
+                "rebuild_us": t_rebuild * 1e6,
+                "updates_per_sec": b / t_update,
+                "speedup_vs_rebuild": t_rebuild / t_update,
+            })
+    return rows
+
+
+def main():
+    rows = run()
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(csv_row(
+            f"update_n{r['n']}_b{r['batch']}",
+            r["update_us"],
+            f"rebuild={r['rebuild_us']:.0f}us"
+            f"|upd_per_s={r['updates_per_sec']:.0f}"
+            f"|speedup={r['speedup_vs_rebuild']:.2f}x",
+        ))
+    # shape claim: small-batch incremental updates must beat the rebuild,
+    # and the advantage must grow with n (the rebuild is O(n/c), the
+    # update O(B log_c n)).
+    small = {r["n"]: r["speedup_vs_rebuild"]
+             for r in rows if r["batch"] == min(r2["batch"] for r2 in rows)}
+    ns = sorted(small)
+    assert small[ns[-1]] > 1.0, rows
+    assert small[ns[-1]] >= small[ns[0]] * 0.8, rows
+
+
+if __name__ == "__main__":
+    main()

@@ -22,10 +22,9 @@ from repro.core.distributed import DistributedRMQ
 
 
 def main():
-    mesh = jax.make_mesh(
-        (2, 4), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh((2, 4), ("data", "model"))
     rng = np.random.default_rng(0)
     n = 1 << 22  # 4M elements across 4 segments
     x = rng.random(n, dtype=np.float32)

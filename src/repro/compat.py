@@ -1,0 +1,45 @@
+"""Version compatibility shims for the JAX APIs this repo straddles.
+
+The codebase targets the modern ``jax.shard_map`` entry point (with its
+``check_vma`` argument); older jaxlibs only ship
+``jax.experimental.shard_map.shard_map`` (whose equivalent knob is spelled
+``check_rep``).  ``shard_map`` below presents the modern keyword surface on
+both.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "cost_analysis_dict"]
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a dict on every JAX version.
+
+    Newer JAX returns the flat dict directly; older versions return a
+    one-element list of per-computation dicts.
+    """
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=True):
+    """``jax.shard_map`` on new JAX, ``jax.experimental.shard_map`` on old.
+
+    Usable both as a direct call and inside ``functools.partial`` the way
+    ``jax.shard_map`` is (``f`` first, keywords after).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    return _legacy(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )

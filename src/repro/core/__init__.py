@@ -11,9 +11,10 @@ Public API:
 """
 
 from repro.core.api import RMQ
-from repro.core.hierarchy import Hierarchy, build_hierarchy
+from repro.core.hierarchy import Hierarchy, build_hierarchy, pos_dtype_for
 from repro.core.plan import HierarchyPlan, make_plan
 from repro.core.query import (
+    check_query_args,
     rmq_index,
     rmq_index_batch,
     rmq_value,
@@ -26,6 +27,8 @@ __all__ = [
     "HierarchyPlan",
     "build_hierarchy",
     "make_plan",
+    "pos_dtype_for",
+    "check_query_args",
     "rmq_value",
     "rmq_value_batch",
     "rmq_index",

@@ -4,6 +4,11 @@
 and the pure-JAX reference elsewhere (the kernels also run under
 ``interpret=True`` on CPU, which the test suite exercises; interpret mode is
 a correctness tool, not a performance path, so "auto" avoids it at runtime).
+
+The index is not frozen at build time: ``update`` applies batched point
+mutations and ``append`` grows the array into reserved capacity, both in
+O(batch · log_c n) chunk re-reductions (see ``repro.streaming`` for the
+full streaming structure with sliding-window retirement).
 """
 
 from __future__ import annotations
@@ -16,7 +21,11 @@ import jax.numpy as jnp
 
 from repro.core.hierarchy import Hierarchy, build_hierarchy
 from repro.core.plan import HierarchyPlan, make_plan
-from repro.core.query import rmq_index_batch, rmq_value_batch
+from repro.core.query import (
+    check_query_args,
+    rmq_index_batch,
+    rmq_value_batch,
+)
 
 __all__ = ["RMQ"]
 
@@ -27,10 +36,13 @@ def _default_backend() -> str:
 
 @dataclasses.dataclass(frozen=True)
 class RMQ:
-    """A built range-minimum index over a static array (paper §4)."""
+    """A built range-minimum index (paper §4) with incremental updates."""
 
     hierarchy: Hierarchy
     backend: str
+    # Live length; None means "the build length" (plan.n).  Tracked
+    # host-side so appends never invalidate jit specializations.
+    length: Optional[int] = None
 
     # -- construction -----------------------------------------------------
     @staticmethod
@@ -41,12 +53,19 @@ class RMQ:
         with_positions: bool = False,
         backend: str = "auto",
         plan: Optional[HierarchyPlan] = None,
+        capacity: Optional[int] = None,
     ) -> "RMQ":
+        """Build over ``x``; pass ``capacity > len(x)`` to allow appends."""
         x = jnp.asarray(x)
         if x.dtype not in (jnp.float32, jnp.bfloat16, jnp.float64):
             x = x.astype(jnp.float32)
+        if plan is not None and capacity is not None:
+            raise ValueError(
+                "pass capacity via make_plan(..., capacity=...) when "
+                "supplying an explicit plan"
+            )
         if plan is None:
-            plan = make_plan(int(x.shape[0]), c=c, t=t)
+            plan = make_plan(int(x.shape[0]), c=c, t=t, capacity=capacity)
         if backend == "auto":
             backend = _default_backend()
         if backend == "pallas":
@@ -59,12 +78,51 @@ class RMQ:
             h = build_hierarchy(x, plan, with_positions=with_positions)
         else:
             raise ValueError(f"unknown backend {backend!r}")
-        return RMQ(hierarchy=h, backend=backend)
+        return RMQ(hierarchy=h, backend=backend, length=plan.n)
+
+    # -- incremental maintenance ------------------------------------------
+    def update(self, idxs, vals) -> "RMQ":
+        """Batched point updates ``a[idxs] = vals`` (last wins on dups).
+
+        Touches one chunk per level per distinct index — O(B log_c n) —
+        instead of rebuilding.
+        """
+        from repro.streaming.structure import (
+            dispatch_update,
+            validate_update_batch,
+        )
+
+        idxs, vals = validate_update_batch(idxs, vals, n=self.n)
+        if idxs.shape[0] == 0:
+            return self
+        h = dispatch_update(self.hierarchy, idxs, vals, self.backend)
+        return dataclasses.replace(self, hierarchy=h)
+
+    def append(self, vals) -> "RMQ":
+        """Grow the array with ``vals`` inside the reserved capacity."""
+        from repro.streaming.structure import dispatch_append
+
+        vals = jnp.asarray(vals)
+        if vals.ndim != 1:
+            raise ValueError(f"vals must be 1-D, got shape {vals.shape}")
+        b = int(vals.shape[0])
+        if b == 0:
+            return self
+        cap = self.plan.capacity
+        if self.n + b > cap:
+            raise ValueError(
+                f"append of {b} overflows capacity {cap} (live length "
+                f"{self.n}); build with RMQ.build(..., capacity=...)"
+            )
+        h = dispatch_append(
+            self.hierarchy, vals, jnp.int32(self.n), self.backend
+        )
+        return dataclasses.replace(self, hierarchy=h, length=self.n + b)
 
     # -- queries ----------------------------------------------------------
     def query(self, ls, rs) -> jax.Array:
         """Batched ``RMQ_value`` over inclusive ranges."""
-        ls, rs = jnp.asarray(ls), jnp.asarray(rs)
+        ls, rs = check_query_args(ls, rs, self.n)
         if self.backend == "pallas":
             from repro.kernels.rmq_scan import ops as scan_ops
 
@@ -73,7 +131,7 @@ class RMQ:
 
     def query_index(self, ls, rs) -> jax.Array:
         """Batched ``RMQ_index`` (leftmost minimum) over inclusive ranges."""
-        ls, rs = jnp.asarray(ls), jnp.asarray(rs)
+        ls, rs = check_query_args(ls, rs, self.n)
         if self.backend == "pallas":
             from repro.kernels.rmq_scan import ops as scan_ops
 
@@ -81,6 +139,11 @@ class RMQ:
         return rmq_index_batch(self.hierarchy, ls, rs)
 
     # -- introspection ----------------------------------------------------
+    @property
+    def n(self) -> int:
+        """Live array length (grows with ``append``)."""
+        return self.plan.n if self.length is None else self.length
+
     @property
     def plan(self) -> HierarchyPlan:
         return self.hierarchy.plan

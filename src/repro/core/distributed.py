@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.hierarchy import Hierarchy, build_hierarchy
 from repro.core.plan import HierarchyPlan, make_plan
 from repro.core.query import _rmq_batch
@@ -80,7 +81,7 @@ class DistributedRMQ:
         x = jax.device_put(x, NamedSharding(mesh, P(segment_axis)))
 
         @functools.partial(
-            jax.shard_map,
+            shard_map,
             mesh=mesh,
             in_specs=P(segment_axis),
             out_specs=(
@@ -140,7 +141,7 @@ class DistributedRMQ:
         )
 
         @functools.partial(
-            jax.shard_map,
+            shard_map,
             mesh=mesh,
             in_specs=(
                 P(seg),

@@ -9,6 +9,12 @@ reduces with warp shuffles; on TPU each level build is a single dense
 All upper levels live in one contiguous buffer (paper: "To further reduce
 allocation complexity, we store all precomputed layers in a single,
 contiguous buffer").
+
+The structure is *not* build-once: point mutations, appends into reserved
+capacity (``make_plan(..., capacity=...)``), and sliding-window retirement
+are maintained incrementally — O(log_c n) chunk re-reductions per touched
+element — by ``repro.streaming`` (pure JAX) and
+``repro.kernels.hierarchy_update`` (Pallas).
 """
 
 from __future__ import annotations
@@ -22,11 +28,29 @@ import jax.numpy as jnp
 
 from repro.core.plan import HierarchyPlan, make_plan
 
-__all__ = ["Hierarchy", "build_hierarchy", "make_plan"]
+__all__ = ["Hierarchy", "build_hierarchy", "make_plan", "pos_dtype_for"]
 
 # Sentinel position for padding entries (never selected because the padded
 # value is +inf and real values are finite).
 _PAD_POS = jnp.iinfo(jnp.int32).max
+
+
+def pos_dtype_for(n: int) -> jnp.dtype:
+    """Position dtype for an array of length ``n``.
+
+    int32 covers n < 2**31; larger arrays need int64, which JAX silently
+    downcasts to int32 unless x64 mode is enabled — raise loudly instead of
+    returning positions that wrap.
+    """
+    if n < 2**31:
+        return jnp.int32
+    if not jax.config.x64_enabled:
+        raise ValueError(
+            f"n={n} needs int64 positions, but jax x64 mode is disabled "
+            "(int64 would silently downcast to int32 and wrap); enable it "
+            'with jax.config.update("jax_enable_x64", True)'
+        )
+    return jnp.int64
 
 
 @jax.tree_util.register_dataclass
@@ -34,11 +58,12 @@ _PAD_POS = jnp.iinfo(jnp.int32).max
 class Hierarchy:
     """Device-resident minima hierarchy.
 
-    ``base`` is the original input array (level 0, unpadded).  ``upper``
-    holds levels 1..L-1 concatenated, each padded to a multiple of ``c``
-    with ``+inf``.  ``upper_pos`` (optional, for RMQ_index) stores for each
-    summary entry the position *in the original array* of its minimum,
-    leftmost on ties.
+    ``base`` is the input array (level 0), stored padded to
+    ``plan.capacity`` with ``+inf`` (no padding in the common
+    ``capacity == n`` case).  ``upper`` holds levels 1..L-1 concatenated,
+    each padded to a multiple of ``c`` with ``+inf``.  ``upper_pos``
+    (optional, for RMQ_index) stores for each summary entry the position
+    *in the original array* of its minimum, leftmost on ties.
     """
 
     base: jax.Array
@@ -92,13 +117,20 @@ def build_hierarchy(
         raise ValueError(f"plan is for n={plan.n}, input has n={x.shape[0]}")
 
     c = plan.c
-    pos_dtype = jnp.int32 if plan.n < 2**31 else jnp.int64
+    cap = plan.capacity
+    # Only position-tracking builds materialize indices, so only they
+    # need the int64/x64 guard.
+    pos_dtype = pos_dtype_for(cap) if with_positions else None
+
+    # Level 0 is stored at full capacity; the reserved tail is +inf so it
+    # can never win a query and appends just overwrite it.
+    x = _pad_to(x, cap, jnp.array(jnp.inf, dtype=x.dtype))
 
     levels_v = []
     levels_p = []
     cur_v = x
     cur_p = (
-        jnp.arange(plan.n, dtype=pos_dtype) if with_positions else None
+        jnp.arange(cap, dtype=pos_dtype) if with_positions else None
     )
     for k in range(1, plan.num_levels):
         padded_len = plan.padded_lens[k - 1]
@@ -111,12 +143,7 @@ def build_hierarchy(
         nxt_v = jnp.take_along_axis(v, idx[:, None], axis=1)[:, 0]
         nxt_p = None
         if with_positions:
-            base_positions = (
-                cur_p
-                if k > 1
-                else jnp.arange(plan.n, dtype=pos_dtype)
-            )
-            p = _pad_to(base_positions, want, jnp.array(_PAD_POS, pos_dtype))
+            p = _pad_to(cur_p, want, jnp.array(_PAD_POS, pos_dtype))
             p = p.reshape(-1, c)
             nxt_p = jnp.take_along_axis(p, idx[:, None], axis=1)[:, 0]
         # Store padded to a multiple of c.

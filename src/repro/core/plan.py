@@ -1,13 +1,18 @@
 """Static geometry of a GPU-RMQ minima hierarchy (paper §4.1).
 
-The hierarchy layout is fully determined by ``(n, c, t)``:
+The hierarchy layout is fully determined by ``(n, c, t)`` — plus, for
+streaming workloads, a reserved ``capacity``:
 
-* ``n`` — input array length (level 0 is the input itself).
+* ``n`` — logical input length at build time (level 0 is the input itself).
 * ``c`` — chunk size: each level-(k+1) entry summarizes ``c`` adjacent
   level-k entries. Power of two, as in the paper.
 * ``t`` — build cutoff: we stop adding levels once the topmost level holds
   at most ``c * t`` entries (i.e. at most ``t`` chunks), so the final scan
   touches at most ``c * t`` entries.
+* ``capacity`` — storage length of level 0 (``>= n``).  Level geometry is
+  derived from ``capacity``, so a ``StreamingRMQ`` can append into the
+  reserved, ``+inf``-padded tail without changing the plan — keeping every
+  jitted build/update/query specialization valid across appends.
 
 Everything in this module is *static* Python metadata (hashable, usable as a
 ``jax.jit`` static argument).  Device arrays never appear here.
@@ -16,7 +21,7 @@ Everything in this module is *static* Python metadata (hashable, usable as a
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 __all__ = ["HierarchyPlan", "make_plan"]
 
@@ -35,13 +40,16 @@ class HierarchyPlan:
 
     Attributes
     ----------
-    n:            logical input length (level 0).
+    n:            logical input length at build time (level 0).
     c:            chunk size (power of two).
     t:            build cutoff threshold (max chunks on the top level).
-    level_lens:   logical length of every level, ``level_lens[0] == n``.
-    padded_lens:  each level's stored length, rounded up to a multiple of
-                  ``c`` (upper levels only are materialized; the base array
-                  is stored unpadded).
+    capacity:     stored length of level 0 (``>= n``); the geometry below
+                  is derived from it so appends up to ``capacity`` never
+                  change the plan.
+    level_lens:   length of every level, ``level_lens[0] == capacity``.
+    padded_lens:  each upper level's stored length, rounded up to a
+                  multiple of ``c`` (the base array is stored at
+                  ``capacity`` length, +inf-padded past the live region).
     offsets:      start offset of each *upper* level (k >= 1) inside the
                   single contiguous ``upper`` buffer (paper: "we store all
                   precomputed layers in a single, contiguous buffer").
@@ -53,6 +61,11 @@ class HierarchyPlan:
     level_lens: Tuple[int, ...]
     padded_lens: Tuple[int, ...]
     offsets: Tuple[int, ...]
+    capacity: int = 0  # 0 means "== n" (plans predating streaming support)
+
+    def __post_init__(self):
+        if self.capacity == 0:
+            object.__setattr__(self, "capacity", self.n)
 
     @property
     def num_levels(self) -> int:
@@ -104,13 +117,21 @@ class HierarchyPlan:
         return self.auxiliary_entries() / max(self.n, 1)
 
 
-def make_plan(n: int, c: int = 128, t: int = 64) -> HierarchyPlan:
+def make_plan(
+    n: int, c: int = 128, t: int = 64, capacity: Optional[int] = None
+) -> HierarchyPlan:
     """Compute the level geometry for an input of length ``n``.
 
     Levels are added bottom-up until the topmost level holds at most
     ``c * t`` entries.  For ``n <= c * t`` the plan degenerates to a single
     level (pure scan), which is both correct and what the paper's cutoff
     implies.
+
+    ``capacity`` (default ``n``) reserves room for streaming appends: the
+    level geometry is computed as if the input were ``capacity`` long, and
+    builds pad level 0 out to ``capacity`` with ``+inf``.  Because the
+    geometry is capacity-derived, growing the live length up to
+    ``capacity`` (``StreamingRMQ.append``) reuses every jit specialization.
     """
     if n <= 0:
         raise ValueError(f"n must be positive, got {n}")
@@ -118,8 +139,12 @@ def make_plan(n: int, c: int = 128, t: int = 64) -> HierarchyPlan:
         raise ValueError(f"chunk size c must be a power of two >= 2, got {c}")
     if t < 1:
         raise ValueError(f"threshold t must be >= 1, got {t}")
+    if capacity is None:
+        capacity = n
+    if capacity < n:
+        raise ValueError(f"capacity {capacity} < n {n}")
 
-    level_lens = [n]
+    level_lens = [capacity]
     while level_lens[-1] > c * t:
         level_lens.append(_ceil_div(level_lens[-1], c))
 
@@ -137,4 +162,5 @@ def make_plan(n: int, c: int = 128, t: int = 64) -> HierarchyPlan:
         level_lens=tuple(level_lens),
         padded_lens=tuple(padded),
         offsets=tuple(offsets),
+        capacity=capacity,
     )

@@ -26,6 +26,7 @@ matching the paper's problem statement (§2.1).
 from __future__ import annotations
 
 import functools
+import os
 from typing import Tuple
 
 import jax
@@ -34,9 +35,56 @@ import jax.numpy as jnp
 from repro.core.hierarchy import Hierarchy
 from repro.core.plan import HierarchyPlan
 
-__all__ = ["rmq_value", "rmq_index", "rmq_value_batch", "rmq_index_batch"]
+__all__ = [
+    "rmq_value",
+    "rmq_index",
+    "rmq_value_batch",
+    "rmq_index_batch",
+    "check_query_args",
+]
 
 _POS_INF_I32 = jnp.iinfo(jnp.int32).max
+
+
+def _debug_checks_enabled() -> bool:
+    return os.environ.get("REPRO_RMQ_DEBUG", "0") not in ("", "0")
+
+
+def check_query_args(ls, rs, n: int, debug: bool = None):
+    """Validate a query batch against the convention ``0 <= l <= r < n``.
+
+    Dtype and shape problems are always rejected (they are cheap, static
+    checks).  The batched *value* check materializes the arrays, so it
+    only runs in debug mode — ``debug=True`` or env ``REPRO_RMQ_DEBUG=1``
+    — and only on concrete (non-traced) inputs.  Returns ``(ls, rs)`` as
+    arrays.
+    """
+    ls, rs = jnp.asarray(ls), jnp.asarray(rs)
+    for name, a in (("ls", ls), ("rs", rs)):
+        if not jnp.issubdtype(a.dtype, jnp.integer):
+            raise TypeError(
+                f"query bounds {name} must be integers, got {a.dtype}"
+            )
+    if ls.shape != rs.shape:
+        raise ValueError(
+            f"query bounds must match in shape, got {ls.shape} vs {rs.shape}"
+        )
+    if debug is None:
+        debug = _debug_checks_enabled()
+    if debug and not (
+        isinstance(ls, jax.core.Tracer) or isinstance(rs, jax.core.Tracer)
+    ):
+        import numpy as np
+
+        l_np, r_np = np.asarray(ls), np.asarray(rs)
+        bad = (l_np < 0) | (l_np > r_np) | (r_np >= n)
+        if bad.any():
+            i = int(np.argmax(bad))
+            raise ValueError(
+                f"query {i} = ({l_np.flat[i]}, {r_np.flat[i]}) violates "
+                f"0 <= l <= r < n with n={n}"
+            )
+    return ls, rs
 
 
 def _merge(m, p, m2, p2):

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.hierarchy import Hierarchy
+from repro.core.hierarchy import Hierarchy, _pad_to, pos_dtype_for
 from repro.core.plan import HierarchyPlan
 from repro.kernels.hierarchy_build import kernel as K
 
@@ -19,11 +19,6 @@ _PAD_POS = jnp.iinfo(jnp.int32).max
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
-
-
-def _pad_to(x, length, fill):
-    pad = length - x.shape[0]
-    return x if pad == 0 else jnp.pad(x, (0, pad), constant_values=fill)
 
 
 def _pick_tile_out(padded_len: int, c: int) -> int:
@@ -45,12 +40,14 @@ def build_hierarchy_pallas(
     if interpret is None:
         interpret = not _on_tpu()
     c = plan.c
-    pos_dtype = jnp.int32 if plan.n < 2**31 else jnp.int64
+    cap = plan.capacity
+    pos_dtype = pos_dtype_for(cap) if with_positions else None
     inf = jnp.array(jnp.inf, dtype=x.dtype)
 
     levels_v, levels_p = [], []
-    cur_v = x
-    cur_p = jnp.arange(plan.n, dtype=pos_dtype) if with_positions else None
+    base = _pad_to(x, cap, inf)
+    cur_v = base
+    cur_p = jnp.arange(cap, dtype=pos_dtype) if with_positions else None
 
     for k in range(1, plan.num_levels):
         # consume ceil(len/c)*c entries, then tile-align for the kernel
@@ -88,4 +85,4 @@ def build_hierarchy_pallas(
         upper_pos = (
             jnp.zeros((0,), dtype=pos_dtype) if with_positions else None
         )
-    return Hierarchy(base=x, upper=upper, upper_pos=upper_pos, plan=plan)
+    return Hierarchy(base=base, upper=upper, upper_pos=upper_pos, plan=plan)

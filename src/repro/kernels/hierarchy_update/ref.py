@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the hierarchy-update kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_PAD_POS = jnp.iinfo(jnp.int32).max
+
+
+def update_level_ref(values: jax.Array, ids: jax.Array, c: int) -> jax.Array:
+    """Minima of chunks ``ids`` of a level padded to a multiple of c."""
+    assert values.shape[0] % c == 0
+    return values.reshape(-1, c)[ids].min(axis=1)
+
+
+def update_level_with_positions_ref(values, positions, ids, c: int):
+    assert values.shape[0] % c == 0
+    v = values.reshape(-1, c)[ids]
+    p = positions.reshape(-1, c)[ids]
+    am = jnp.argmin(v, axis=1)
+    return (
+        jnp.take_along_axis(v, am[:, None], axis=1)[:, 0],
+        jnp.take_along_axis(p, am[:, None], axis=1)[:, 0],
+    )
+
+
+def update_level0_with_positions_ref(values, ids, c: int, cap: int,
+                                     pos_dtype=jnp.int32):
+    """Level-1 repair oracle: positions are absolute indices (< cap)."""
+    assert values.shape[0] % c == 0
+    v = values.reshape(-1, c)[ids]
+    idx = ids[:, None] * c + jnp.arange(c, dtype=jnp.int32)[None, :]
+    p = jnp.where(idx < cap, idx, _PAD_POS).astype(pos_dtype)
+    am = jnp.argmin(v, axis=1)
+    return (
+        jnp.take_along_axis(v, am[:, None], axis=1)[:, 0],
+        jnp.take_along_axis(p, am[:, None], axis=1)[:, 0],
+    )

@@ -91,7 +91,7 @@ def _rmq_query_kernel(
     track_pos: bool,
 ):
     c = plan.c
-    n = plan.n
+    n = plan.capacity  # stored base length (== n unless capacity reserved)
     num_levels = plan.num_levels
     inf = jnp.float32(jnp.inf)
 

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import cost_analysis_dict
 from repro.configs.base import (
     ARCH_IDS,
     ModelConfig,
@@ -348,7 +349,7 @@ def run_cell(arch: str, shape: str, mesh, mesh_desc: str,
         compiled = lowered.compile()
     dt = time.time() - t0
 
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     ma = compiled.memory_analysis()
     hlo = compiled.as_text()
     return CellResult(

@@ -22,6 +22,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import os
+import sys
 import time
 from typing import Optional
 
@@ -121,29 +122,50 @@ def train_loop(args) -> dict:
 
     losses = []
     t_last = time.time()
-    for i in range(start_step, tc.total_steps):
-        if args.inject_failure_at is not None \
-                and i == args.inject_failure_at:
-            raise SimulatedFailure(f"injected node failure at step {i}")
-        batch_np = dataset.batch_at(i)
-        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-        state, metrics = step(state, batch)
-        loss = float(metrics["loss"])
-        losses.append(loss)
-        monitor.report(0, i)
-        if (i + 1) % tc.checkpoint_every == 0 or i + 1 == tc.total_steps:
-            ckpt.save(i + 1, state)
-        if (i + 1) % args.log_every == 0:
-            dt = time.time() - t_last
-            t_last = time.time()
-            print(
-                f"[train] step {i+1}/{tc.total_steps} "
-                f"loss={loss:.4f} lr={float(metrics['lr']):.2e} "
-                f"gnorm={float(metrics['grad_norm']):.2f} "
-                f"({dt/args.log_every:.2f}s/step)"
-            )
-    ckpt.wait()
-    ckpt.close()
+    try:
+        for i in range(start_step, tc.total_steps):
+            if args.inject_failure_at is not None \
+                    and i == args.inject_failure_at:
+                raise SimulatedFailure(
+                    f"injected node failure at step {i}"
+                )
+            batch_np = dataset.batch_at(i)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            state, metrics = step(state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            monitor.report(0, i)
+            if (i + 1) % tc.checkpoint_every == 0 or i + 1 == tc.total_steps:
+                ckpt.save(i + 1, state)
+            if (i + 1) % args.log_every == 0:
+                dt = time.time() - t_last
+                t_last = time.time()
+                print(
+                    f"[train] step {i+1}/{tc.total_steps} "
+                    f"loss={loss:.4f} lr={float(metrics['lr']):.2e} "
+                    f"gnorm={float(metrics['grad_norm']):.2f} "
+                    f"({dt/args.log_every:.2f}s/step)"
+                )
+    finally:
+        # Drain in-flight async checkpoint writes on EVERY exit — normal
+        # completion, the injected drill failure, or a real crash —
+        # before any restart machinery scans for the latest durable
+        # step.  Otherwise a save enqueued just before the failure
+        # silently loses the race and the restart restores a stale step.
+        # Must be read BEFORE the inner except (inside an except clause
+        # sys.exc_info() would report the writer error itself).
+        unwinding = sys.exc_info()[0] is not None
+        try:
+            ckpt.wait()
+        except Exception as werr:  # noqa: BLE001
+            # While unwinding another exception, a buffered writer error
+            # must not mask it (the restart loop keys on the original);
+            # on a normal exit it IS the failure and must propagate.
+            if not unwinding:
+                raise
+            print(f"[train] checkpoint writer error during teardown: "
+                  f"{werr}")
+        ckpt.close()
     return {"losses": losses, "final_step": tc.total_steps}
 
 

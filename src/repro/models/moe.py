@@ -32,6 +32,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.models.layers import cast, cdtype, dense_init, mlp, mlp_init
 
@@ -170,7 +171,7 @@ def moe_apply(
                                   top_p_l, top_e_l, cap)
             return jax.lax.psum(y, "model")
 
-        y = jax.shard_map(
+        y = shard_map(
             mapped,
             mesh=mesh,
             in_specs=(

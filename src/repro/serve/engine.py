@@ -69,6 +69,11 @@ class ServeEngine:
         out = [token]
         scores = jnp.zeros((b, self.sc.seq_len), jnp.float32)
         evictions = 0
+        # Streaming score index: built once, then kept in sync by batched
+        # incremental updates — eviction rounds never rebuild the
+        # hierarchy (and never re-trace: the plan is fixed at seq_len
+        # capacity, while the old rebuild path re-specialized per length).
+        score_index = None
 
         for _ in range(max_new_tokens - 1):
             logits, cache, mass = self._decode(
@@ -85,9 +90,20 @@ class ServeEngine:
                 and self.eviction.needs_eviction(pos)
             ):
                 # Evict per-sequence on the mean score (batch-shared cache
-                # layout keeps positions aligned across sequences).
-                mean_scores = scores[:, :pos].mean(axis=0)
-                victims = self.eviction.plan_evictions(mean_scores, pos)
+                # layout keeps positions aligned across sequences); dead
+                # slots sync as +inf so they can never be picked.
+                mean_scores = jnp.where(
+                    jnp.arange(self.sc.seq_len) < pos,
+                    scores.mean(axis=0),
+                    jnp.inf,
+                )
+                if score_index is None:
+                    score_index = self.eviction.make_index(self.sc.seq_len)
+                score_index, victims = (
+                    self.eviction.plan_evictions_streaming(
+                        score_index, mean_scores, pos
+                    )
+                )
                 if victims.shape[0]:
                     cache, scores, pos = self._evict(
                         cache, scores, victims, pos

@@ -7,12 +7,13 @@ exceeds the budget, the manager must find the *least-important* tokens —
 range-minimum queries over the score array.  This is exactly the paper's
 workload shape:
 
-* the score array is static between eviction rounds (scores only grow by
-  += on recent positions; eviction happens in bursts);
 * eviction scans are batched: one RMQ per candidate window per sequence —
   thousands of queries per round at production batch sizes;
-* after a burst the hierarchy is rebuilt in O(n/c) — the operation the
-  paper shows is 50–2400× cheaper than competing structures' builds.
+* the score array mutates between rounds, which is the streaming case:
+  the hierarchy is maintained by **batched incremental updates**
+  (``repro.streaming.StreamingRMQ``) instead of being rebuilt — no
+  re-planning, no reallocation, and no fresh jit trace per round, where
+  the old rebuild path re-specialized on every distinct live length.
 
 Strategy per round: split the evictable region [0, n - protected_window)
 into ``evict_count`` equal windows and take ``RMQ_index`` in each — this
@@ -20,8 +21,19 @@ keeps evictions spread across the context (a known failure mode of global
 top-k eviction is clustering; windowed argmin enforces coverage) and makes
 every query an independent member of one RMQ batch.
 
-The manager is pure-functional: ``plan_evictions`` returns indices;
-``apply_evictions`` compacts cache + scores.  Engine code owns the arrays.
+Two entry points:
+
+* :meth:`plan_evictions` — one-shot: builds a throwaway index over the
+  given scores (kept for offline/batch callers and as the reference the
+  streaming path is tested against);
+* :meth:`make_index` + :meth:`plan_evictions_streaming` — serving hot
+  path: one index for the whole generation, synced each round with a
+  single fixed-shape batched update (chunk-granular re-reductions), then
+  queried.  ``ServeEngine`` uses this path exclusively.
+
+The manager is pure-functional: planners return indices (plus the updated
+index for the streaming path); ``apply_evictions`` compacts cache +
+scores.  Engine code owns the arrays.
 """
 
 from __future__ import annotations
@@ -33,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.api import RMQ
+from repro.streaming import StreamingRMQ
 
 __all__ = ["RMQEvictionManager"]
 
@@ -48,19 +61,36 @@ class RMQEvictionManager:
     def needs_eviction(self, live_tokens: int) -> bool:
         return live_tokens > self.budget
 
+    # -- shared window geometry -------------------------------------------
+    def _plan_round(self, live_tokens: int):
+        """(evictable, evict_count) for a round, or None if nothing to do."""
+        evict_count = live_tokens - self.budget
+        if evict_count <= 0:
+            return None
+        evictable = live_tokens - self.protected_window
+        if evictable <= 0:
+            return None
+        return evictable, min(evict_count, evictable)
+
+    @staticmethod
+    def _windows(evictable: int, evict_count: int):
+        """One RMQ window per victim — disjoint, covering [0, evictable)."""
+        bounds = jnp.linspace(0, evictable, evict_count + 1).astype(jnp.int32)
+        ls = bounds[:-1]
+        rs = jnp.maximum(bounds[1:] - 1, ls)
+        return ls, rs
+
+    # -- one-shot path (offline / reference) ------------------------------
     def plan_evictions(
         self,
         scores: jax.Array,       # (S_live,) importance of each live token
         live_tokens: int,
     ) -> jax.Array:
         """Indices (ascending, unique) of tokens to evict this round."""
-        evict_count = live_tokens - self.budget
-        if evict_count <= 0:
+        round_ = self._plan_round(live_tokens)
+        if round_ is None:
             return jnp.zeros((0,), jnp.int32)
-        evictable = live_tokens - self.protected_window
-        evict_count = min(evict_count, evictable)
-        if evictable <= 0:
-            return jnp.zeros((0,), jnp.int32)
+        evictable, evict_count = round_
 
         # one RMQ_index per window — a batch of (l, r) pairs, the paper's
         # exact query interface
@@ -68,12 +98,51 @@ class RMQEvictionManager:
             scores[:evictable], c=min(self.c, max(2, evictable)),
             t=self.t, with_positions=True, backend=self.backend,
         )
-        bounds = jnp.linspace(0, evictable, evict_count + 1).astype(jnp.int32)
-        ls = bounds[:-1]
-        rs = jnp.maximum(bounds[1:] - 1, ls)
+        ls, rs = self._windows(evictable, evict_count)
         victims = rmq.query_index(ls, rs)
         # windows are disjoint and each argmin lies in its window => unique
         return jnp.sort(victims).astype(jnp.int32)
+
+    # -- streaming path (serving hot loop) --------------------------------
+    def make_index(self, capacity: int) -> StreamingRMQ:
+        """One-time index over ``capacity`` score slots (all ``+inf``)."""
+        return StreamingRMQ.from_array(
+            jnp.full((capacity,), jnp.inf, jnp.float32),
+            c=self.c, t=self.t, with_positions=True, backend=self.backend,
+        )
+
+    def plan_evictions_streaming(
+        self,
+        index: StreamingRMQ,
+        slot_scores: jax.Array,  # (capacity,) live scores, +inf beyond live
+        live_tokens: int,
+    ) -> Tuple[StreamingRMQ, jax.Array]:
+        """Sync the index with this round's scores and pick victims.
+
+        Decode adds attention mass to *every* live score each step, so
+        the exact sync here is dense: one fixed-shape batched update that
+        re-reduces every chunk in place.  That is rebuild-equivalent
+        reduction FLOPs (plus the update path's O(capacity) dedupe
+        bookkeeping) — the win over the old rebuild-per-round path is
+        structural, not FLOPs: no reallocation, no re-planning, and one
+        jit specialization for all rounds, where the old path built a
+        fresh ``make_plan(evictable)`` and re-traced for every distinct
+        live length.  Callers whose scores change sparsely between
+        rounds get the real O(B log_c n) asymptotics by calling
+        ``index.update(changed_idxs, changed_vals)`` themselves and
+        skipping this dense sync.
+        """
+        round_ = self._plan_round(live_tokens)
+        if round_ is None:
+            return index, jnp.zeros((0,), jnp.int32)
+        evictable, evict_count = round_
+
+        index = index.update(
+            jnp.arange(index.capacity, dtype=jnp.int32), slot_scores
+        )
+        ls, rs = self._windows(evictable, evict_count)
+        victims = index.query_index(ls, rs)
+        return index, jnp.sort(victims).astype(jnp.int32)
 
     def apply_evictions(
         self,

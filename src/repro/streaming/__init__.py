@@ -1,0 +1,16 @@
+"""Streaming RMQ: incremental hierarchy maintenance for online arrays.
+
+    from repro.streaming import StreamingRMQ
+
+    s = StreamingRMQ.from_array(x, c=128, t=64, capacity=2 * len(x),
+                                with_positions=True)
+    s = s.update(idxs, vals)     # batched point updates, O(B log_c n)
+    s = s.append(new_tail)       # grow into reserved capacity
+    s = s.retire(1024)           # slide the window (ring workloads)
+    pos = s.query_index(ls, rs)  # same query surface as repro.core.RMQ
+"""
+
+from repro.streaming.structure import StreamingRMQ
+from repro.streaming.updates import append_hierarchy, update_hierarchy
+
+__all__ = ["StreamingRMQ", "update_hierarchy", "append_hierarchy"]

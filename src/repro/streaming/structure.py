@@ -1,0 +1,240 @@
+"""``StreamingRMQ`` — a minima hierarchy that tracks a mutating array.
+
+Wraps :class:`repro.core.hierarchy.Hierarchy` with three online
+operations, each maintained in O(batch · log_c capacity) chunk
+re-reductions instead of a rebuild:
+
+* :meth:`update` — batched point updates (duplicate indices: last wins);
+* :meth:`append` — extend the live region into pre-reserved,
+  ``+inf``-padded capacity (``make_plan(..., capacity=...)`` keeps the
+  level geometry static under jit across appends);
+* :meth:`retire` — slide the window start forward for ring-buffer
+  workloads by writing ``+inf`` over the oldest entries, so they can never
+  win a query again.
+
+The structure is pure-functional: every mutator returns a new
+``StreamingRMQ`` sharing unmodified buffers.  ``backend="pallas"`` routes
+chunk re-reductions through ``repro.kernels.hierarchy_update``; both
+backends are bit-identical to a fresh build of the mutated array.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import _default_backend
+from repro.core.hierarchy import Hierarchy, build_hierarchy
+from repro.core.plan import HierarchyPlan, make_plan
+from repro.core.query import (
+    _debug_checks_enabled,
+    check_query_args,
+    rmq_index_batch,
+    rmq_value_batch,
+)
+from repro.streaming import updates as U
+
+__all__ = [
+    "StreamingRMQ",
+    "validate_update_batch",
+    "dispatch_update",
+    "dispatch_append",
+]
+
+
+def validate_update_batch(idxs, vals, n: Optional[int] = None):
+    """Shared idxs/vals checking for ``update`` entry points.
+
+    Out-of-range indices are dropped silently in normal operation (a
+    jit-friendly contract); under ``REPRO_RMQ_DEBUG=1`` concrete batches
+    are value-checked against the live length ``n`` so indexing bugs
+    fail loudly instead of as stale minima — mirroring query validation.
+    """
+    idxs = jnp.asarray(idxs)
+    vals = jnp.asarray(vals)
+    if idxs.ndim != 1 or idxs.shape != vals.shape:
+        raise ValueError(
+            f"idxs/vals must be matching 1-D batches, got "
+            f"{idxs.shape} vs {vals.shape}"
+        )
+    if not jnp.issubdtype(idxs.dtype, jnp.integer):
+        raise TypeError(f"idxs must be integers, got {idxs.dtype}")
+    if (
+        n is not None
+        and _debug_checks_enabled()
+        and not isinstance(idxs, jax.core.Tracer)
+    ):
+        import numpy as np
+
+        i_np = np.asarray(idxs)
+        bad = (i_np < 0) | (i_np >= n)
+        if bad.any():
+            j = int(np.argmax(bad))
+            raise ValueError(
+                f"update index {j} = {i_np.flat[j]} out of range for "
+                f"live length {n}"
+            )
+    return idxs, vals
+
+
+def dispatch_update(h: Hierarchy, idxs, vals, backend: str) -> Hierarchy:
+    """Backend dispatch for batched point updates (used by RMQ too)."""
+    if backend == "pallas":
+        from repro.kernels.hierarchy_update import ops as upd_ops
+
+        return upd_ops.update_hierarchy_pallas(h, idxs, vals)
+    return U.update_hierarchy(h, idxs, vals)
+
+
+def dispatch_append(h: Hierarchy, vals, start, backend: str) -> Hierarchy:
+    """Backend dispatch for appends at live offset ``start``."""
+    if backend == "pallas":
+        from repro.kernels.hierarchy_update import ops as upd_ops
+
+        return upd_ops.append_hierarchy_pallas(h, vals, start)
+    return U.append_hierarchy(h, vals, start)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingRMQ:
+    """A range-minimum index over an online array (paper §4 + streaming).
+
+    ``length`` / ``start`` delimit the live window ``[start, length)`` and
+    live host-side, outside the jitted plan — growing them never triggers
+    retracing.
+    """
+
+    hierarchy: Hierarchy
+    backend: str
+    length: int
+    start: int = 0
+
+    # -- construction -----------------------------------------------------
+    @staticmethod
+    def from_array(
+        x,
+        c: int = 128,
+        t: int = 64,
+        capacity: Optional[int] = None,
+        with_positions: bool = False,
+        backend: str = "auto",
+        plan: Optional[HierarchyPlan] = None,
+    ) -> "StreamingRMQ":
+        """Build over ``x``, reserving ``capacity`` slots for appends."""
+        x = jnp.asarray(x)
+        if x.dtype not in (jnp.float32, jnp.bfloat16, jnp.float64):
+            x = x.astype(jnp.float32)
+        n = int(x.shape[0])
+        if plan is not None and capacity is not None:
+            raise ValueError(
+                "pass capacity via make_plan(..., capacity=...) when "
+                "supplying an explicit plan"
+            )
+        if plan is None:
+            plan = make_plan(n, c=c, t=t, capacity=capacity)
+        if backend == "auto":
+            backend = _default_backend()
+        if backend == "pallas":
+            from repro.kernels.hierarchy_build import ops as build_ops
+
+            h = build_ops.build_hierarchy_pallas(
+                x, plan, with_positions=with_positions
+            )
+        elif backend == "jax":
+            h = build_hierarchy(x, plan, with_positions=with_positions)
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+        return StreamingRMQ(hierarchy=h, backend=backend, length=n)
+
+    # -- mutation ---------------------------------------------------------
+    def update(self, idxs, vals) -> "StreamingRMQ":
+        """Batched point updates ``a[idxs] = vals`` (last wins on dups)."""
+        idxs, vals = validate_update_batch(idxs, vals, n=self.length)
+        if idxs.shape[0] == 0:
+            return self
+        return dataclasses.replace(
+            self,
+            hierarchy=dispatch_update(
+                self.hierarchy, idxs, vals, self.backend
+            ),
+        )
+
+    def append(self, vals) -> "StreamingRMQ":
+        """Extend the array with ``vals``; fails when capacity is spent."""
+        vals = jnp.asarray(vals)
+        if vals.ndim != 1:
+            raise ValueError(f"vals must be 1-D, got shape {vals.shape}")
+        b = int(vals.shape[0])
+        if b == 0:
+            return self
+        if self.length + b > self.capacity:
+            raise ValueError(
+                f"append of {b} overflows capacity {self.capacity} "
+                f"(live length {self.length}); build with a larger "
+                "make_plan(..., capacity=...) reservation"
+            )
+        h = dispatch_append(
+            self.hierarchy, vals, jnp.int32(self.length), self.backend
+        )
+        return dataclasses.replace(
+            self, hierarchy=h, length=self.length + b
+        )
+
+    def retire(self, count: int) -> "StreamingRMQ":
+        """Slide the window: drop the ``count`` oldest live entries.
+
+        Retired slots are overwritten with ``+inf`` (one batched update),
+        so queries that straddle them still answer correctly for the live
+        window.  Capacity is not reclaimed — provision ``capacity`` for
+        the stream length, or rebuild with ``from_array`` when exhausted.
+        """
+        count = min(int(count), self.length - self.start)
+        if count <= 0:
+            return self
+        idxs = self.start + jnp.arange(count, dtype=jnp.int32)
+        vals = jnp.full((count,), jnp.inf, self.hierarchy.base.dtype)
+        return dataclasses.replace(
+            self,
+            hierarchy=dispatch_update(
+                self.hierarchy, idxs, vals, self.backend
+            ),
+            start=self.start + count,
+        )
+
+    # -- queries ----------------------------------------------------------
+    def query(self, ls, rs) -> jax.Array:
+        """Batched ``RMQ_value`` over inclusive ranges in the live window."""
+        ls, rs = check_query_args(ls, rs, self.length)
+        if self.backend == "pallas":
+            from repro.kernels.rmq_scan import ops as scan_ops
+
+            return scan_ops.rmq_value_batch_pallas(self.hierarchy, ls, rs)
+        return rmq_value_batch(self.hierarchy, ls, rs)
+
+    def query_index(self, ls, rs) -> jax.Array:
+        """Batched ``RMQ_index`` (leftmost minimum) over inclusive ranges."""
+        ls, rs = check_query_args(ls, rs, self.length)
+        if self.backend == "pallas":
+            from repro.kernels.rmq_scan import ops as scan_ops
+
+            return scan_ops.rmq_index_batch_pallas(self.hierarchy, ls, rs)
+        return rmq_index_batch(self.hierarchy, ls, rs)
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def plan(self) -> HierarchyPlan:
+        return self.hierarchy.plan
+
+    @property
+    def capacity(self) -> int:
+        return self.plan.capacity
+
+    @property
+    def with_positions(self) -> bool:
+        return self.hierarchy.with_positions
+
+    def memory_bytes(self) -> int:
+        return self.hierarchy.memory_bytes()

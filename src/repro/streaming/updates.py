@@ -1,0 +1,212 @@
+"""Incremental maintenance of the minima hierarchy — pure-JAX reference.
+
+A point update at index ``i`` invalidates exactly one ``c``-wide chunk per
+upper level: chunk ``i // c**k`` at level ``k``.  A batch of ``B`` updates
+therefore needs at most ``min(B, m_k)`` chunk re-reductions at level ``k``
+— O(B log_c n) work against the O(n/c) full rebuild, which is the whole
+point of streaming support: the paper's construction is a few chunked
+reductions, and an update replays only the chunks on the touched
+root-to-leaf paths.
+
+Algorithm per batch:
+
+1. scatter the new values into level 0 with deterministic last-wins
+   semantics for duplicate indices (a scatter-max of the batch order
+   decides the winner; losers are dropped);
+2. for each upper level, dedupe the touched chunk ids (``jnp.unique`` with
+   a static size bound so the whole batch stays jit-compatible), gather
+   each chunk's ``c`` source entries from the level below, min/argmin
+   re-reduce, and scatter the summaries back into the contiguous ``upper``
+   buffer;
+3. divide the chunk ids by ``c`` and ascend.
+
+Results are bit-identical to a fresh ``build_hierarchy`` of the mutated
+array (values and leftmost-tie positions) — the streaming property tests
+assert exactly that.  The Pallas realization of step 2 lives in
+``repro.kernels.hierarchy_update`` and is validated against this module.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hierarchy import _PAD_POS, Hierarchy, pos_dtype_for
+from repro.core.plan import HierarchyPlan
+
+__all__ = ["update_hierarchy", "append_hierarchy", "index_dtype_for"]
+
+
+def index_dtype_for(capacity: int) -> jnp.dtype:
+    """Dtype able to address every element index below ``capacity``.
+
+    int64 only helps when x64 is enabled; without it an int64 request
+    would silently downcast, so stay on int32 (indices >= 2**31 cannot be
+    represented by the caller in that mode anyway).
+    """
+    if capacity >= 2**31 and jax.config.x64_enabled:
+        return jnp.int64
+    return jnp.int32
+
+
+def scatter_base(
+    base: jax.Array, idxs: jax.Array, vals: jax.Array
+) -> jax.Array:
+    """Scatter ``vals`` into ``base`` with last-wins duplicate semantics.
+
+    XLA scatter leaves the winner among duplicate indices unspecified; we
+    make it deterministic (the *latest* batch entry wins, matching
+    sequential application) by scatter-maxing the batch order and dropping
+    every non-winner out of range.  Indices outside ``[0, len(base))``
+    are dropped entirely — including negative ones, which ``.at[]`` would
+    otherwise wrap NumPy-style.
+    """
+    cap = base.shape[0]
+    b = idxs.shape[0]
+    order = jnp.arange(b, dtype=jnp.int32)
+    valid = (idxs >= 0) & (idxs < cap)
+    target = jnp.where(valid, idxs, cap)  # cap is dropped by mode="drop"
+    stamp = jnp.full((cap,), -1, jnp.int32).at[target].max(
+        order, mode="drop"
+    )
+    win = valid & (stamp[jnp.where(valid, idxs, 0)] == order)
+    safe = jnp.where(win, idxs, cap)
+    return base.at[safe].set(vals.astype(base.dtype), mode="drop")
+
+
+def _level_sources(
+    plan: HierarchyPlan,
+    base: jax.Array,
+    upper: jax.Array,
+    upper_pos: Optional[jax.Array],
+    level: int,
+    ids: jax.Array,
+):
+    """Gather the ``(B, c)`` source windows feeding chunks ``ids`` of an
+    upper ``level`` — values and (if tracked) original-array positions."""
+    c = plan.c
+    cap = plan.capacity
+    track = upper_pos is not None
+    gather = ids[:, None] * c + jnp.arange(c, dtype=ids.dtype)[None, :]
+    if level == 1:
+        # Level 0 may not be c-aligned: out-of-range reads become +inf
+        # (value) / _PAD_POS (position), the build's padding convention.
+        v = jnp.take(base, gather, mode="fill", fill_value=float("inf"))
+        p = None
+        if track:
+            pos_dtype = pos_dtype_for(cap)
+            p = jnp.where(gather < cap, gather, _PAD_POS).astype(pos_dtype)
+    else:
+        off, _padded = plan.level_slice(level - 1)
+        # Upper levels are stored padded to a multiple of c, so the gather
+        # stays in range by construction.
+        v = jnp.take(upper, off + gather)
+        p = jnp.take(upper_pos, off + gather) if track else None
+    return v, p
+
+
+def _reduce_windows(v: jax.Array, p: Optional[jax.Array]):
+    """Min + leftmost-tie position over each row of ``(B, c)`` windows."""
+    am = jnp.argmin(v, axis=1)
+    nv = jnp.take_along_axis(v, am[:, None], axis=1)[:, 0]
+    np_ = (
+        jnp.take_along_axis(p, am[:, None], axis=1)[:, 0]
+        if p is not None
+        else None
+    )
+    return nv, np_
+
+
+def touched_chunk_ids(
+    ids: jax.Array, num_chunks: int
+) -> jax.Array:
+    """Dedupe touched chunk ids with a static output size.
+
+    ``jnp.unique`` pads with ``fill_value=0``: chunk 0 may be re-reduced
+    redundantly, which is idempotent (same inputs, same summary), so
+    correctness is unaffected while shapes stay static under jit.
+
+    Dense fast path: a batch at least as large as the level covers every
+    chunk id it could touch, so re-reducing all chunks (a superset,
+    idempotent) replaces the O(B log B) sort inside ``unique`` — this is
+    the shape the serve engine's full-score sync hits every round.
+    """
+    if ids.shape[0] >= num_chunks:
+        return jnp.arange(num_chunks, dtype=ids.dtype)
+    return jnp.unique(ids, size=ids.shape[0], fill_value=0)
+
+
+def propagate_updates(
+    plan: HierarchyPlan,
+    base: jax.Array,
+    upper: jax.Array,
+    upper_pos: Optional[jax.Array],
+    idxs: jax.Array,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Re-reduce every chunk on the root-to-leaf paths of ``idxs``.
+
+    ``base`` must already hold the new level-0 values.
+    """
+    c = plan.c
+    idxs = idxs.astype(index_dtype_for(plan.capacity))
+    # Out-of-range indices were dropped by the base scatter; route their
+    # chunk ids to chunk 0, whose re-reduction of unchanged data is an
+    # idempotent no-op (an unsanitized id would clamp-scatter into a
+    # *different* level's region of the contiguous upper buffer).
+    idxs = jnp.where((idxs >= 0) & (idxs < plan.capacity), idxs, 0)
+    ids = idxs // c
+    for level in range(1, plan.num_levels):
+        ids = touched_chunk_ids(ids, plan.level_lens[level])
+        v, p = _level_sources(plan, base, upper, upper_pos, level, ids)
+        nv, np_ = _reduce_windows(v, p)
+        off = plan.offsets[level - 1]
+        # ids are unique (apart from idempotent fill duplicates), so the
+        # scatter is conflict-free.
+        upper = upper.at[off + ids].set(nv)
+        if upper_pos is not None:
+            upper_pos = upper_pos.at[off + ids].set(np_)
+        ids = ids // c
+    return upper, upper_pos
+
+
+@jax.jit
+def update_hierarchy(
+    h: Hierarchy, idxs: jax.Array, vals: jax.Array
+) -> Hierarchy:
+    """Apply a batch of point updates ``a[idxs] = vals`` to the hierarchy.
+
+    Duplicate indices resolve last-wins.  Cost: one O(B) scatter plus
+    O(min(B, m_k)) chunk re-reductions per upper level.
+    """
+    idxs = idxs.astype(index_dtype_for(h.plan.capacity))
+    base = scatter_base(h.base, idxs, vals)
+    upper, upper_pos = propagate_updates(
+        h.plan, base, h.upper, h.upper_pos, idxs
+    )
+    return Hierarchy(base=base, upper=upper, upper_pos=upper_pos,
+                     plan=h.plan)
+
+
+@jax.jit
+def append_hierarchy(
+    h: Hierarchy, vals: jax.Array, start: jax.Array
+) -> Hierarchy:
+    """Write ``vals`` at positions ``[start, start + B)`` of level 0 and
+    repair the upper levels.
+
+    ``start`` is a traced scalar (the live length), so consecutive appends
+    of the same batch shape reuse one jit specialization.  The caller
+    guarantees ``start + B <= plan.capacity``.
+    """
+    idx_dtype = index_dtype_for(h.plan.capacity)
+    vals = vals.astype(h.base.dtype)
+    start = jnp.asarray(start, idx_dtype)
+    base = jax.lax.dynamic_update_slice(h.base, vals, (start,))
+    idxs = start + jnp.arange(vals.shape[0], dtype=idx_dtype)
+    upper, upper_pos = propagate_updates(
+        h.plan, base, h.upper, h.upper_pos, idxs
+    )
+    return Hierarchy(base=base, upper=upper, upper_pos=upper_pos,
+                     plan=h.plan)

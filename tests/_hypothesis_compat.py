@@ -1,0 +1,33 @@
+"""Import hypothesis if available, else degrade its tests to skips.
+
+The tier-1 environment does not guarantee hypothesis; without this shim the
+mere import made two whole test modules fail collection and masked every
+other test in them.  Property-style coverage that must always run is written
+with numpy RNG loops instead (see tests/test_streaming.py).
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(_f):
+            return pytest.mark.skip(reason="hypothesis not installed")(_f)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda f: f
+
+    class _Strategy:
+        """Stand-in whose methods absorb any strategy construction."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategy()

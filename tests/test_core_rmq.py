@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     RMQ,
@@ -267,6 +267,61 @@ class TestFacadeAndBaselines:
         assert sparse.auxiliary_bytes() > 10 * n * 4
         # paper: GPU-RMQ needs at most ~30% more memory than full scan
         assert ours.memory_bytes() < 1.3 * full.memory_bytes()
+
+
+class TestQueryValidation:
+    """RMQ.query/query_index input checking (0 <= l <= r < n)."""
+
+    def _rmq(self, n=500):
+        rng = np.random.default_rng(2)
+        x = rng.random(n).astype(np.float32)
+        return x, RMQ.build(x, c=8, t=2, with_positions=True, backend="jax")
+
+    def test_non_integer_bounds_rejected(self):
+        _, r = self._rmq()
+        with pytest.raises(TypeError, match="integer"):
+            r.query(jnp.zeros(3), jnp.zeros(3, jnp.int32))
+        with pytest.raises(TypeError, match="integer"):
+            r.query_index(jnp.zeros(3, jnp.int32), jnp.zeros(3))
+
+    def test_shape_mismatch_rejected(self):
+        _, r = self._rmq()
+        with pytest.raises(ValueError, match="shape"):
+            r.query(jnp.zeros(3, jnp.int32), jnp.zeros(4, jnp.int32))
+
+    def test_out_of_range_rejected_in_debug_mode(self, monkeypatch):
+        monkeypatch.setenv("REPRO_RMQ_DEBUG", "1")
+        n = 500
+        _, r = self._rmq(n)
+        cases = [
+            ([-1], [3]),        # negative l
+            ([5], [4]),         # l > r
+            ([0], [n]),         # r out of range
+        ]
+        for ls, rs in cases:
+            with pytest.raises(ValueError, match="violates"):
+                r.query(np.asarray(ls, np.int32), np.asarray(rs, np.int32))
+            with pytest.raises(ValueError, match="violates"):
+                r.query_index(np.asarray(ls, np.int32),
+                              np.asarray(rs, np.int32))
+
+    def test_degenerate_point_queries_pass_validation(self, monkeypatch):
+        """l == r is valid (window of one) and returns the element."""
+        monkeypatch.setenv("REPRO_RMQ_DEBUG", "1")
+        x, r = self._rmq()
+        pts = np.array([0, 7, 499], np.int32)
+        np.testing.assert_allclose(np.asarray(r.query(pts, pts)), x[pts])
+        np.testing.assert_array_equal(
+            np.asarray(r.query_index(pts, pts)), pts
+        )
+
+    def test_full_range_passes_validation(self, monkeypatch):
+        monkeypatch.setenv("REPRO_RMQ_DEBUG", "1")
+        x, r = self._rmq()
+        ls = np.array([0], np.int32)
+        rs = np.array([499], np.int32)
+        assert float(r.query(ls, rs)[0]) == x.min()
+        assert int(r.query_index(ls, rs)[0]) == int(np.argmin(x))
 
 
 class TestBf16Values:

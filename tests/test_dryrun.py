@@ -50,6 +50,7 @@ _SUBPROC = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import dataclasses, json, jax
+from repro.compat import cost_analysis_dict
 from repro.launch.mesh import make_test_mesh
 from repro.launch.cells import train_cell, decode_cell, collective_bytes_from_hlo
 from repro.configs.base import get_smoke_config, TrainConfig
@@ -63,7 +64,7 @@ fn, args, _ = train_cell(cfg, mesh, 64, 8, tc=tc)
 with mesh:
     lowered = jax.jit(fn, donate_argnums=(0,)).lower(*args)
     compiled = lowered.compile()
-ca = compiled.cost_analysis()
+ca = cost_analysis_dict(compiled)
 ma = compiled.memory_analysis()
 assert ca.get("flops", 0) > 0
 assert ma.argument_size_in_bytes > 0
@@ -74,7 +75,7 @@ assert sum(colls.values()) > 0, colls
 fn, args = decode_cell(cfg, mesh, 128, 8)
 with mesh:
     compiled = jax.jit(fn, donate_argnums=(2,)).lower(*args).compile()
-assert compiled.cost_analysis().get("flops", 0) > 0
+assert cost_analysis_dict(compiled).get("flops", 0) > 0
 print("DRYRUN_SMOKE_OK")
 """
 

@@ -58,6 +58,85 @@ class TestEvictionManager:
         assert v.shape[0] == 0
 
 
+class TestStreamingEviction:
+    def test_streaming_path_matches_one_shot_planner(self):
+        """Same scores => same victims from both planners (bit-exact)."""
+        mgr = RMQEvictionManager(budget=40, protected_window=8, c=8, t=4)
+        rng = np.random.default_rng(7)
+        for live in (46, 50):
+            scores = rng.random(live).astype(np.float32)
+            want = np.asarray(mgr.plan_evictions(jnp.asarray(scores), live))
+            cap = 64
+            index = mgr.make_index(cap)
+            slot_scores = jnp.where(
+                jnp.arange(cap) < live,
+                jnp.pad(jnp.asarray(scores), (0, cap - live)),
+                jnp.inf,
+            )
+            index, got = mgr.plan_evictions_streaming(
+                index, slot_scores, live
+            )
+            np.testing.assert_array_equal(np.asarray(got), want)
+
+    def test_streaming_index_reuses_across_rounds(self):
+        """Consecutive rounds mutate the same index — no rebuilds."""
+        mgr = RMQEvictionManager(budget=30, protected_window=4, c=8, t=4)
+        cap = 64
+        index = mgr.make_index(cap)
+        rng = np.random.default_rng(1)
+        plan0 = index.plan
+        for live in (34, 38, 33):
+            scores = jnp.where(
+                jnp.arange(cap) < live,
+                jnp.asarray(rng.random(cap).astype(np.float32)),
+                jnp.inf,
+            )
+            index, victims = mgr.plan_evictions_streaming(
+                index, scores, live
+            )
+            assert victims.shape[0] == live - 30
+            assert index.plan is plan0  # geometry never re-planned
+
+    def test_engine_eviction_never_rebuilds_per_round(self, monkeypatch):
+        """The hard acceptance bar: one index build per generation, zero
+        per-round hierarchy rebuilds (the old path rebuilt every round)."""
+        import repro.streaming.structure as streaming_structure
+        from repro.core.api import RMQ as RMQClass
+
+        builds = {"n": 0}
+        orig_build = streaming_structure.build_hierarchy
+
+        def counting_build(*args, **kwargs):
+            builds["n"] += 1
+            return orig_build(*args, **kwargs)
+
+        monkeypatch.setattr(
+            streaming_structure, "build_hierarchy", counting_build
+        )
+
+        def forbid_rebuild(*args, **kwargs):
+            raise AssertionError(
+                "eviction round called RMQ.build — rebuild path is dead"
+            )
+
+        monkeypatch.setattr(RMQClass, "build", staticmethod(forbid_rebuild))
+
+        cfg = get_smoke_config("llama3.2-3b")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        sc = ServeConfig(
+            seq_len=96, batch=2, kv_cache_dtype="float32",
+            eviction_enabled=True, eviction_budget=48,
+            eviction_window=16, rmq_chunk=16, rmq_threshold=4,
+        )
+        eng = ServeEngine(cfg, params, sc)
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                                     cfg.vocab_size)
+        out = eng.generate(prompts, 48)
+        assert out["evicted"] > 0          # eviction actually ran
+        assert out["final_pos"] <= 48 + 1  # budget still enforced
+        assert builds["n"] == 1            # exactly the one index build
+
+
 class TestServeEngine:
     def test_greedy_generation_deterministic(self):
         cfg = get_smoke_config("qwen1.5-0.5b")

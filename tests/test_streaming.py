@@ -1,0 +1,399 @@
+"""Streaming RMQ: incremental updates/appends vs. from-scratch rebuilds.
+
+The central invariant: after ANY sequence of batched point updates,
+appends, and retirements, the maintained hierarchy is bit-identical —
+values and leftmost-tie positions — to ``build_hierarchy`` of the mutated
+array under the same plan.  Checked for both the pure-JAX path (the
+oracle) and the Pallas update kernels (interpret mode).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import RMQ, build_hierarchy, make_plan, pos_dtype_for
+from repro.streaming import StreamingRMQ, update_hierarchy
+from repro.kernels.hierarchy_update.ops import (
+    append_hierarchy_pallas,
+    update_hierarchy_pallas,
+)
+
+
+def _assert_hierarchies_equal(ref, got, with_pos=True):
+    """Bit-exact comparison (treating +inf padding as equal)."""
+    for name, a, b in [("base", ref.base, got.base),
+                       ("upper", ref.upper, got.upper)]:
+        a, b = np.asarray(a), np.asarray(b)
+        np.testing.assert_array_equal(
+            np.isfinite(a), np.isfinite(b), err_msg=name
+        )
+        finite = np.isfinite(a)
+        np.testing.assert_array_equal(a[finite], b[finite], err_msg=name)
+    if with_pos:
+        np.testing.assert_array_equal(
+            np.asarray(ref.upper_pos), np.asarray(got.upper_pos),
+            err_msg="upper_pos",
+        )
+
+
+PLANS = [
+    (100_000, 128, 64, None),
+    (4096, 8, 2, None),
+    (999, 2, 1, 2048),
+    (12_345, 16, 4, 20_000),
+    (257, 4, 1, 257),
+]
+
+
+class TestUpdateMatchesRebuild:
+    @pytest.mark.parametrize("n,c,t,cap", PLANS)
+    @pytest.mark.parametrize("backend", ["jax", "pallas"])
+    def test_random_update_batches(self, n, c, t, cap, backend):
+        """Property test: K random update batches == rebuild, bit-exact."""
+        rng = np.random.default_rng(n + c)
+        x = rng.random(n).astype(np.float32)
+        plan = make_plan(n, c=c, t=t, capacity=cap)
+        h = build_hierarchy(jnp.asarray(x), plan, with_positions=True)
+        for round_ in range(4):
+            bsz = int(rng.integers(1, 200))
+            idxs = rng.integers(0, n, bsz)
+            vals = rng.random(bsz).astype(np.float32)
+            x[idxs] = vals  # numpy fancy assignment is also last-wins
+            if backend == "pallas":
+                h = update_hierarchy_pallas(
+                    h, jnp.asarray(idxs), jnp.asarray(vals), interpret=True
+                )
+            else:
+                h = update_hierarchy(h, jnp.asarray(idxs), jnp.asarray(vals))
+            ref = build_hierarchy(jnp.asarray(x), plan, with_positions=True)
+            _assert_hierarchies_equal(ref, h)
+
+    def test_duplicate_indices_last_wins(self):
+        n = 1000
+        x = np.zeros(n, np.float32) + 0.5
+        plan = make_plan(n, c=8, t=2)
+        h = build_hierarchy(jnp.asarray(x), plan, with_positions=True)
+        idxs = np.array([7, 7, 7, 123, 123], np.int64)
+        vals = np.array([0.1, 0.9, 0.3, 0.8, 0.2], np.float32)
+        h = update_hierarchy(h, jnp.asarray(idxs), jnp.asarray(vals))
+        x[idxs] = vals
+        assert float(h.base[7]) == pytest.approx(0.3)
+        assert float(h.base[123]) == pytest.approx(0.2)
+        ref = build_hierarchy(jnp.asarray(x), plan, with_positions=True)
+        _assert_hierarchies_equal(ref, h)
+
+    def test_update_without_positions(self):
+        rng = np.random.default_rng(3)
+        n = 5000
+        x = rng.random(n).astype(np.float32)
+        plan = make_plan(n, c=16, t=2)
+        h = build_hierarchy(jnp.asarray(x), plan)
+        idxs = rng.integers(0, n, 64)
+        vals = rng.random(64).astype(np.float32)
+        x[idxs] = vals
+        for hh in (
+            update_hierarchy(h, jnp.asarray(idxs), jnp.asarray(vals)),
+            update_hierarchy_pallas(
+                h, jnp.asarray(idxs), jnp.asarray(vals), interpret=True
+            ),
+        ):
+            ref = build_hierarchy(jnp.asarray(x), plan)
+            _assert_hierarchies_equal(ref, hh, with_pos=False)
+
+
+class TestStreamingStructure:
+    @pytest.mark.parametrize("backend", ["jax", "pallas"])
+    def test_mixed_update_append_property(self, backend):
+        """Random interleavings of update/append == rebuild of the array."""
+        rng = np.random.default_rng(11)
+        n, cap, c, t = 1500, 6000, 8, 2
+        arr = list(rng.random(n).astype(np.float32))
+        s = StreamingRMQ.from_array(
+            np.asarray(arr, np.float32), c=c, t=t, capacity=cap,
+            with_positions=True, backend=backend,
+        )
+        for round_ in range(6):
+            if round_ % 2 == 0:
+                bsz = int(rng.integers(1, 64))
+                tail = rng.random(bsz).astype(np.float32)
+                s = s.append(tail)
+                arr += list(tail)
+            else:
+                bsz = int(rng.integers(1, 100))
+                idxs = rng.integers(0, len(arr), bsz)
+                vals = rng.random(bsz).astype(np.float32)
+                s = s.update(jnp.asarray(idxs), jnp.asarray(vals))
+                for i, v in zip(idxs, vals):
+                    arr[i] = v
+            assert s.length == len(arr)
+            plan = make_plan(len(arr), c=c, t=t, capacity=cap)
+            ref = build_hierarchy(
+                jnp.asarray(np.asarray(arr, np.float32)), plan,
+                with_positions=True,
+            )
+            _assert_hierarchies_equal(ref, s.hierarchy)
+        # queries answer over the mutated array
+        a = np.asarray(arr, np.float32)
+        ls = rng.integers(0, len(arr), 64)
+        rs = np.minimum(ls + rng.integers(0, len(arr), 64), len(arr) - 1)
+        ls, rs = (np.minimum(ls, rs).astype(np.int32),
+                  np.maximum(ls, rs).astype(np.int32))
+        np.testing.assert_array_equal(
+            np.asarray(s.query(ls, rs)),
+            np.array([a[l:r + 1].min() for l, r in zip(ls, rs)]),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(s.query_index(ls, rs)),
+            np.array([l + np.argmin(a[l:r + 1]) for l, r in zip(ls, rs)]),
+        )
+
+    def test_append_overflow_raises(self):
+        s = StreamingRMQ.from_array(
+            np.ones(10, np.float32), c=4, t=1, capacity=12, backend="jax"
+        )
+        s = s.append(np.ones(2, np.float32))
+        with pytest.raises(ValueError, match="capacity"):
+            s.append(np.ones(1, np.float32))
+
+    def test_retire_slides_window(self):
+        rng = np.random.default_rng(5)
+        n = 800
+        x = rng.random(n).astype(np.float32)
+        s = StreamingRMQ.from_array(
+            x, c=8, t=2, with_positions=True, backend="jax"
+        )
+        s = s.retire(100)
+        assert s.start == 100
+        # retired entries never win
+        arr = x.copy()
+        arr[:100] = np.inf
+        got = float(s.query(np.array([0], np.int32),
+                            np.array([n - 1], np.int32))[0])
+        assert got == arr.min()
+        gotp = int(s.query_index(np.array([50], np.int32),
+                                 np.array([n - 1], np.int32))[0])
+        assert gotp == 100 + int(np.argmin(arr[100:]))
+        # hierarchy is exactly the rebuild of the tombstoned array
+        ref = build_hierarchy(
+            jnp.asarray(arr), s.plan, with_positions=True
+        )
+        _assert_hierarchies_equal(ref, s.hierarchy)
+
+    def test_empty_update_and_append_are_noops(self):
+        s = StreamingRMQ.from_array(np.ones(100, np.float32), c=4, t=1)
+        assert s.update(jnp.zeros((0,), jnp.int32),
+                        jnp.zeros((0,), jnp.float32)) is s
+        assert s.append(jnp.zeros((0,), jnp.float32)) is s
+
+    def test_bad_update_args_rejected(self):
+        s = StreamingRMQ.from_array(np.ones(100, np.float32), c=4, t=1)
+        with pytest.raises(TypeError, match="integer"):
+            s.update(jnp.zeros(3), jnp.zeros(3))
+        with pytest.raises(ValueError, match="1-D"):
+            s.update(jnp.zeros((3, 1), jnp.int32), jnp.zeros((3, 1)))
+
+    def test_oob_update_rejected_in_debug_mode(self, monkeypatch):
+        monkeypatch.setenv("REPRO_RMQ_DEBUG", "1")
+        s = StreamingRMQ.from_array(np.ones(100, np.float32), c=4, t=1,
+                                    capacity=200)
+        with pytest.raises(ValueError, match="out of range"):
+            s.update(jnp.asarray([150], jnp.int32),  # < capacity, >= live
+                     jnp.asarray([0.5], jnp.float32))
+        with pytest.raises(ValueError, match="out of range"):
+            RMQ.build(np.ones(100, np.float32), c=4, t=1,
+                      backend="jax").update(
+                jnp.asarray([-1], jnp.int32), jnp.asarray([0.5]))
+
+    def test_plan_and_capacity_conflict_rejected(self):
+        plan = make_plan(100, c=4, t=1)
+        with pytest.raises(ValueError, match="make_plan"):
+            StreamingRMQ.from_array(np.ones(100, np.float32), plan=plan,
+                                    capacity=200)
+        with pytest.raises(ValueError, match="make_plan"):
+            RMQ.build(np.ones(100, np.float32), plan=plan, capacity=200)
+
+
+class TestUpdateKernelUnits:
+    def test_update_level_direct(self):
+        from repro.kernels.hierarchy_update.kernel import update_level
+        from repro.kernels.hierarchy_update.ref import update_level_ref
+
+        rng = np.random.default_rng(0)
+        for c, m, b in [(128, 16, 5), (8, 64, 17), (256, 4, 4)]:
+            x = jnp.asarray(rng.random(c * m).astype(np.float32))
+            ids = jnp.asarray(rng.integers(0, m, b), jnp.int32)
+            got = update_level(x, ids, c=c, interpret=True)
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(update_level_ref(x, ids, c))
+            )
+
+    def test_update_level_with_positions_direct(self):
+        from repro.kernels.hierarchy_update.kernel import (
+            update_level_with_positions,
+        )
+        from repro.kernels.hierarchy_update.ref import (
+            update_level_with_positions_ref,
+        )
+
+        rng = np.random.default_rng(1)
+        c, m, b = 16, 32, 9
+        # heavy duplication to exercise the leftmost tie-break
+        x = jnp.asarray(
+            rng.integers(0, 3, c * m).astype(np.float32)
+        )
+        # positions must be increasing within each chunk (the invariant
+        # carried positions satisfy by construction)
+        p = jnp.asarray(np.arange(c * m, dtype=np.int32))
+        ids = jnp.asarray(rng.integers(0, m, b), jnp.int32)
+        gv, gp = update_level_with_positions(x, p, ids, c=c, interpret=True)
+        wv, wp = update_level_with_positions_ref(x, p, ids, c)
+        np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+        np.testing.assert_array_equal(np.asarray(gp), np.asarray(wp))
+
+    def test_update_level0_positions_direct(self):
+        from repro.kernels.hierarchy_update.kernel import (
+            update_level0_with_positions,
+        )
+        from repro.kernels.hierarchy_update.ref import (
+            update_level0_with_positions_ref,
+        )
+
+        rng = np.random.default_rng(2)
+        c, m, cap, b = 8, 16, 123, 11  # cap not chunk-aligned
+        x = np.full(c * m, np.inf, np.float32)
+        x[:cap] = rng.integers(0, 2, cap).astype(np.float32)
+        x = jnp.asarray(x)
+        ids = jnp.asarray(rng.integers(0, m, b), jnp.int32)
+        gv, gp = update_level0_with_positions(
+            x, ids, c=c, cap=cap, pos_dtype=jnp.int32, interpret=True
+        )
+        wv, wp = update_level0_with_positions_ref(x, ids, c, cap)
+        np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+        np.testing.assert_array_equal(np.asarray(gp), np.asarray(wp))
+
+    def test_append_pallas_matches_jax(self):
+        from repro.streaming.updates import append_hierarchy
+
+        rng = np.random.default_rng(4)
+        n, cap = 900, 2000
+        x = rng.random(n).astype(np.float32)
+        plan = make_plan(n, c=16, t=1, capacity=cap)
+        h = build_hierarchy(jnp.asarray(x), plan, with_positions=True)
+        tail = jnp.asarray(rng.random(150).astype(np.float32))
+        a = append_hierarchy(h, tail, jnp.int32(n))
+        b = append_hierarchy_pallas(h, tail, jnp.int32(n), interpret=True)
+        _assert_hierarchies_equal(a, b)
+
+
+class TestRMQFacadeStreaming:
+    def test_update_and_append_via_facade(self):
+        rng = np.random.default_rng(21)
+        n, cap = 3000, 5000
+        x = rng.random(n).astype(np.float32)
+        r = RMQ.build(x, c=16, t=8, with_positions=True, backend="jax",
+                      capacity=cap)
+        assert r.n == n
+        idxs = rng.integers(0, n, 40)
+        vals = rng.random(40).astype(np.float32)
+        r = r.update(jnp.asarray(idxs), jnp.asarray(vals))
+        x[idxs] = vals
+        tail = rng.random(500).astype(np.float32)
+        r = r.append(jnp.asarray(tail))
+        x = np.concatenate([x, tail])
+        assert r.n == n + 500
+        ls = rng.integers(0, r.n, 64)
+        rs = np.minimum(ls + rng.integers(0, r.n, 64), r.n - 1)
+        ls, rs = (np.minimum(ls, rs).astype(np.int32),
+                  np.maximum(ls, rs).astype(np.int32))
+        np.testing.assert_array_equal(
+            np.asarray(r.query(ls, rs)),
+            np.array([x[l:r2 + 1].min() for l, r2 in zip(ls, rs)]),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(r.query_index(ls, rs)),
+            np.array([l + np.argmin(x[l:r2 + 1]) for l, r2 in zip(ls, rs)]),
+        )
+
+    def test_append_without_capacity_raises(self):
+        r = RMQ.build(np.ones(64, np.float32), c=8, t=1, backend="jax")
+        with pytest.raises(ValueError, match="capacity"):
+            r.append(np.ones(1, np.float32))
+
+
+class TestOutOfRangeUpdates:
+    """Out-of-range indices must be dropped entirely — not clamp-scatter
+    into a different level's region of the contiguous upper buffer."""
+
+    @pytest.mark.parametrize("backend", ["jax", "pallas"])
+    def test_oob_update_is_a_noop(self, backend):
+        rng = np.random.default_rng(9)
+        n, c, t = 4096, 16, 4
+        x = rng.random(n).astype(np.float32)
+        x[1600] = 0.01
+        plan = make_plan(n, c=c, t=t)
+        h0 = build_hierarchy(jnp.asarray(x), plan, with_positions=True)
+        oob = jnp.asarray([n + 100, -5, 2 * n], jnp.int32)
+        vals = jnp.asarray([0.5, 0.5, 0.5], jnp.float32)
+        if backend == "pallas":
+            h1 = update_hierarchy_pallas(h0, oob, vals, interpret=True)
+        else:
+            h1 = update_hierarchy(h0, oob, vals)
+        _assert_hierarchies_equal(h0, h1)
+        # a full-range query still finds the true minimum
+        s = StreamingRMQ(hierarchy=h1, backend="jax", length=n)
+        assert float(s.query(np.array([0], np.int32),
+                             np.array([n - 1], np.int32))[0]) == x.min()
+
+    def test_mixed_oob_and_valid_updates(self):
+        rng = np.random.default_rng(10)
+        n = 1000
+        x = rng.random(n).astype(np.float32)
+        plan = make_plan(n, c=8, t=2)
+        h = build_hierarchy(jnp.asarray(x), plan, with_positions=True)
+        idxs = jnp.asarray([5, n + 7, 900], jnp.int32)
+        vals = jnp.asarray([0.001, 0.002, 0.003], jnp.float32)
+        h = update_hierarchy(h, idxs, vals)
+        x[5], x[900] = 0.001, 0.003  # the OOB write is dropped
+        ref = build_hierarchy(jnp.asarray(x), plan, with_positions=True)
+        _assert_hierarchies_equal(ref, h)
+
+
+class TestPosDtypeGuard:
+    def test_int32_below_2_31(self):
+        assert pos_dtype_for(1000) == jnp.int32
+        assert pos_dtype_for(2**31 - 1) == jnp.int32
+
+    def test_large_n_requires_x64(self):
+        import jax
+
+        if jax.config.x64_enabled:
+            assert pos_dtype_for(2**31) == jnp.int64
+        else:
+            with pytest.raises(ValueError, match="x64"):
+                pos_dtype_for(2**31)
+
+    def test_value_only_build_unaffected_by_guard(self):
+        """with_positions=False never materializes positions, so huge
+        value-only builds must trace (eval_shape: no allocation)."""
+        import functools
+        import jax
+
+        if jax.config.x64_enabled:
+            pytest.skip("guard only fires with x64 disabled")
+        big = 2**31 + 128
+        plan = make_plan(big, c=128, t=64)
+        spec = jax.ShapeDtypeStruct((big,), jnp.float32)
+        out = jax.eval_shape(
+            functools.partial(
+                build_hierarchy, plan=plan, with_positions=False
+            ),
+            spec,
+        )
+        assert out.upper.shape[0] == plan.upper_size
+        with pytest.raises(ValueError, match="x64"):
+            jax.eval_shape(
+                functools.partial(
+                    build_hierarchy, plan=plan, with_positions=True
+                ),
+                spec,
+            )
