@@ -18,11 +18,17 @@ unchanged on a TPU host.
 
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable, Dict, Tuple
 
 import numpy as np
 import jax
+
+
+def tiny_mode() -> bool:
+    """CI-smoke size reduction (``REPRO_BENCH_TINY=1``)."""
+    return os.environ.get("REPRO_BENCH_TINY", "0") not in ("", "0")
 
 
 def time_fn(fn: Callable, repeats: int = 5) -> float:

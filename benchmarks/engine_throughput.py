@@ -1,0 +1,115 @@
+"""Routed query engine vs. monolithic walk, per span class (engine analogue
+of the paper's Fig. 16 by-range-class throughput).
+
+The monolithic walk costs a constant ``2c(L-1) + ct`` scanned entries
+per query regardless of span.  The engine routes by span: short
+(two-chunk) queries skip the hierarchy via ``rmq_short``; long queries
+replace the ``ct``-entry top scan with the hybrid's O(1) sparse-table
+lookup; mid queries take the unchanged walk.  Per class we time
+
+* ``monolithic`` — ``rmq_value_batch`` (every query pays the full walk);
+* ``engine``     — ``RMQ.engine()`` with the result cache disabled, so
+  the measurement is pure routing + padded-bucket execution, not cache
+  hits.
+
+Geometry is the facade default (c=128, t=64): the cutoff t=64 keeps the
+hierarchy shallow at the price of a top level scanned on every walk —
+which is precisely the work routing avoids (short spans never reach it,
+long spans replace it with two loads).  Note the engine timing includes
+its host-side orchestration (classify/pack/scatter), so the speedups
+are end-to-end, not kernel-only.  With a 2-level plan the planner's mid
+class is structurally empty (any beyond-short query reaches the top),
+so the class split reports short + long.
+
+The structural claim checked: routed short-span batches beat the full
+walk (an ordering claim, valid on CPU and TPU alike).
+
+``REPRO_BENCH_TINY=1`` shrinks sizes for the CI smoke run (keeping a
+proportionally large top so the ordering claim stays meaningful).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, make_input_array, time_fn, tiny_mode
+from repro.core.api import RMQ
+from repro.core.query import rmq_value_batch
+
+
+def make_span_queries(n: int, m: int, c: int, kind: str, seed: int = 1):
+    """Bounds with spans pinned inside one engine class."""
+    rng = np.random.default_rng(seed)
+    if kind == "short":
+        # at most two aligned c-chunks
+        s = rng.integers(1, c + 2, m)
+    elif kind == "mid":
+        s = rng.integers(4 * c, min(16 * c, n), m)
+    elif kind == "long":
+        s = rng.integers(n // 2, n + 1, m)
+    elif kind == "mixed":
+        parts = [make_span_queries(n, m // 3 + 1, c, k, seed + i)[0:2]
+                 for i, k in enumerate(("short", "mid", "long"))]
+        ls = np.concatenate([p[0] for p in parts])[:m]
+        rs = np.concatenate([p[1] for p in parts])[:m]
+        order = rng.permutation(m)
+        return ls[order], rs[order]
+    else:
+        raise ValueError(kind)
+    ls = (rng.random(m) * (n - s + 1)).astype(np.int64)
+    rs = ls + s - 1
+    return ls.astype(np.int32), rs.astype(np.int32)
+
+
+def run(n: int, m: int, c: int = 128, t: int = 64):
+    x = jnp.asarray(make_input_array(n))
+    rmq = RMQ.build(x, c=c, t=t, backend="jax")
+    engine = rmq.engine(cache_size=0)
+    rows = []
+    for kind in ("short", "mid", "long", "mixed"):
+        ls, rs = make_span_queries(n, m, c, kind)
+        lsj, rsj = jnp.asarray(ls), jnp.asarray(rs)
+        t_mono = time_fn(
+            lambda: rmq_value_batch(rmq.hierarchy, lsj, rsj), repeats=3
+        )
+        t_eng = time_fn(lambda: engine.query(ls, rs), repeats=3)
+        rows.append({
+            "kind": kind,
+            "mono_ns": t_mono / m * 1e9,
+            "engine_ns": t_eng / m * 1e9,
+        })
+    return rows, engine
+
+
+def main() -> None:
+    if tiny_mode():
+        # small n with a small chunk keeps a big (1024-entry) top level,
+        # and enough queries to amortize the engine's per-batch host
+        # work, so the routed-vs-walk ordering survives the reduction
+        rows, engine = run(n=2**14, m=4096, c=16, t=64)
+    else:
+        rows, engine = run(n=2**18, m=8192)
+    print("name,us_per_call,derived")
+    for r in rows:
+        speedup = r["mono_ns"] / r["engine_ns"]
+        print(csv_row(f"engine_monolithic_{r['kind']}",
+                      r["mono_ns"] / 1e3, ""))
+        print(csv_row(f"engine_routed_{r['kind']}",
+                      r["engine_ns"] / 1e3, f"speedup={speedup:.2f}x"))
+    cc = engine.stats()["class_counts"]
+    print(csv_row(
+        "engine_class_split", 0,
+        f"short={cc['short']}|mid={cc['mid']}|long={cc['long']}",
+    ))
+    # structural claim: the short-span direct scan beats the full walk.
+    # Not checked at REPRO_BENCH_TINY sizes, where the margin is
+    # noise-level and CI would flake — the smoke run guards bit-rot
+    # only (same policy as query_assignment).
+    if not tiny_mode():
+        short = next(r for r in rows if r["kind"] == "short")
+        assert short["engine_ns"] < short["mono_ns"], short
+
+
+if __name__ == "__main__":
+    main()

@@ -3,6 +3,14 @@
 Prints ``name,us_per_call,derived`` CSV per the harness contract; the
 roofline module additionally writes results/roofline.{md,json} from the
 dry-run artifacts when present.
+
+Usage::
+
+    python benchmarks/run.py                 # run everything
+    python benchmarks/run.py throughput tuning   # run a subset by name
+
+Set ``REPRO_BENCH_TINY=1`` to shrink problem sizes in the modules that
+support it (CI smoke: exercises the harness without paper-scale runs).
 """
 
 import sys
@@ -13,6 +21,7 @@ MODULES = [
     ("construction", "Fig. 17 construction time"),
     ("update_throughput", "streaming updates vs full rebuild"),
     ("throughput", "Fig. 16 RMQ throughput by range class"),
+    ("engine_throughput", "routed query engine vs monolithic walk"),
     ("tuning", "Fig. 12 (c, t) tuning"),
     ("query_assignment", "Fig. 14 multi-load vs WLQ"),
     ("coalesced_access", "Fig. 4 access coalescing microbench"),
@@ -21,9 +30,25 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def select(argv):
+    """The (name, desc) list to run, honouring CLI module-name args."""
+    if not argv:
+        return MODULES
+    by_name = dict(MODULES)
+    unknown = [a for a in argv if a not in by_name]
+    if unknown:
+        names = ", ".join(name for name, _ in MODULES)
+        raise SystemExit(
+            f"unknown benchmark module(s) {unknown}; available: {names}"
+        )
+    # preserve registry order regardless of CLI order
+    return [(n, d) for n, d in MODULES if n in set(argv)]
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
     failures = []
-    for mod_name, desc in MODULES:
+    for mod_name, desc in select(argv):
         print(f"# === {mod_name}: {desc} ===", flush=True)
         try:
             mod = __import__(f"benchmarks.{mod_name}",

@@ -43,6 +43,11 @@ class RMQ:
     # Live length; None means "the build length" (plan.n).  Tracked
     # host-side so appends never invalidate jit specializations.
     length: Optional[int] = None
+    # Monotonic mutation counter: every update/append returns a successor
+    # with generation + 1.  Host-side metadata (never traced) used by the
+    # query engine's result cache to invalidate entries that were computed
+    # against an older version of the array.
+    generation: int = 0
 
     # -- construction -----------------------------------------------------
     @staticmethod
@@ -96,7 +101,9 @@ class RMQ:
         if idxs.shape[0] == 0:
             return self
         h = dispatch_update(self.hierarchy, idxs, vals, self.backend)
-        return dataclasses.replace(self, hierarchy=h)
+        return dataclasses.replace(
+            self, hierarchy=h, generation=self.generation + 1
+        )
 
     def append(self, vals) -> "RMQ":
         """Grow the array with ``vals`` inside the reserved capacity."""
@@ -117,7 +124,12 @@ class RMQ:
         h = dispatch_append(
             self.hierarchy, vals, jnp.int32(self.n), self.backend
         )
-        return dataclasses.replace(self, hierarchy=h, length=self.n + b)
+        return dataclasses.replace(
+            self,
+            hierarchy=h,
+            length=self.n + b,
+            generation=self.generation + 1,
+        )
 
     # -- queries ----------------------------------------------------------
     def query(self, ls, rs) -> jax.Array:
@@ -137,6 +149,22 @@ class RMQ:
 
             return scan_ops.rmq_index_batch_pallas(self.hierarchy, ls, rs)
         return rmq_index_batch(self.hierarchy, ls, rs)
+
+    # -- adaptive batched engine -------------------------------------------
+    def engine(self, **kwargs) -> "object":
+        """A span-routed :class:`repro.qe.QueryEngine` over this index.
+
+        The engine classifies each query by span (short / mid / long),
+        executes every class on the cheapest applicable path, dedups
+        duplicate queries, and caches results keyed by ``generation`` —
+        so it must be re-attached (``engine.attach(new_rmq)``) after
+        ``update``/``append``, which return a *successor* index.  See
+        ``repro.qe`` for knobs (``cache_size``, ``short_cutoff_chunks``,
+        ``long_cutoff``...).
+        """
+        from repro.qe import QueryEngine
+
+        return QueryEngine.for_index(self, **kwargs)
 
     # -- introspection ----------------------------------------------------
     @property

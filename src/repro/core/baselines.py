@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -85,35 +86,78 @@ class SparseTable:
     Mirrors the memory profile the paper criticizes in LCA/RTXRMQ: the
     auxiliary structure is a large multiple of the input (log2(n) times),
     which is what makes it infeasible for n >= 2^29 on a 24 GB GPU (Fig. 15).
+
+    Optionally *index-tracking*: pass ``positions`` (the original-array
+    position of each entry of ``x``) to also materialize
+    ``pos[j, i] = argmin-position of x[i : i + 2^j]`` with leftmost-tie
+    semantics, enabling O(1) ``RMQ_index`` lookups (used by the hybrid's
+    top level so the query engine can route index queries long).
     """
 
     table: jax.Array  # (num_levels, n)
+    pos: Optional[jax.Array]  # (num_levels, n) or None (value-only)
     n: int = dataclasses.field(metadata=dict(static=True))
 
     @staticmethod
-    def build(x: jax.Array) -> "SparseTable":
+    def build(
+        x: jax.Array, positions: Optional[jax.Array] = None
+    ) -> "SparseTable":
         n = int(x.shape[0])
         num_levels = max(1, n.bit_length())  # j = 0 .. floor(log2(n))
         rows = [x]
+        track = positions is not None
+        if track:
+            positions = jnp.asarray(positions)
+            pad_pos = jnp.iinfo(positions.dtype).max
+            prows = [positions]
         for j in range(1, num_levels):
             prev = rows[-1]
             half = 1 << (j - 1)
             shifted = jnp.concatenate(
                 [prev[half:], jnp.full((half,), jnp.inf, dtype=x.dtype)]
             )
+            if track:
+                pprev = prows[-1]
+                pshift = jnp.concatenate(
+                    [pprev[half:],
+                     jnp.full((half,), pad_pos, dtype=positions.dtype)]
+                )
+                # lexicographic (value, position) min — leftmost on ties
+                take2 = (shifted < prev) | (
+                    (shifted == prev) & (pshift < pprev)
+                )
+                prows.append(jnp.where(take2, pshift, pprev))
             rows.append(jnp.minimum(prev, shifted))
-        return SparseTable(table=jnp.stack(rows), n=n)
+        return SparseTable(
+            table=jnp.stack(rows),
+            pos=jnp.stack(prows) if track else None,
+            n=n,
+        )
+
+    @property
+    def with_positions(self) -> bool:
+        return self.pos is not None
 
     def memory_bytes(self) -> int:
-        return (
-            self.table.size * self.table.dtype.itemsize
-        )
+        total = self.table.size * self.table.dtype.itemsize
+        if self.pos is not None:
+            total += self.pos.size * self.pos.dtype.itemsize
+        return total
 
     def auxiliary_bytes(self) -> int:
         return self.memory_bytes() - self.n * self.table.dtype.itemsize
 
     def query_batch(self, ls: jax.Array, rs: jax.Array) -> jax.Array:
         return _sparse_table_batch(self.table, ls, rs)
+
+    def query_index_batch(self, ls: jax.Array, rs: jax.Array) -> jax.Array:
+        """Leftmost-minimum positions (requires an index-tracking build)."""
+        if self.pos is None:
+            raise ValueError(
+                "sparse table built value-only; "
+                "use SparseTable.build(x, positions=...)"
+            )
+        return _sparse_table_index_batch(self.table, self.pos, ls, rs)
 
 
 @jax.jit
@@ -125,6 +169,20 @@ def _sparse_table_batch(table, ls, rs):
         left = table[j, l]
         right = table[j, r + 1 - (1 << j.astype(jnp.uint32)).astype(jnp.int32)]
         return jnp.minimum(left, right)
+
+    return jax.vmap(one)(ls.astype(jnp.int32), rs.astype(jnp.int32))
+
+
+@jax.jit
+def _sparse_table_index_batch(table, pos, ls, rs):
+    def one(l, r):
+        span = r - l + 1
+        j = (31 - jax.lax.clz(span.astype(jnp.int32))).astype(jnp.int32)
+        r2 = r + 1 - (1 << j.astype(jnp.uint32)).astype(jnp.int32)
+        vl, pl_ = table[j, l], pos[j, l]
+        vr, pr_ = table[j, r2], pos[j, r2]
+        take_r = (vr < vl) | ((vr == vl) & (pr_ < pl_))
+        return jnp.where(take_r, pr_, pl_)
 
     return jax.vmap(one)(ls.astype(jnp.int32), rs.astype(jnp.int32))
 

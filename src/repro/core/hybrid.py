@@ -19,15 +19,23 @@ Trade-off surface (mirrors the paper's Fig. 13 analysis):
   RT cores lost; with a LARGE t — which the hybrid enables, paper §4.5
   implication (1) — the hybrid frontier shifts).
 
-``HybridRMQ`` supports RMQ_value (the paper's hybrid is value-only too:
-RTXRMQ triangles encode values).
+The paper's hybrid is value-only (RTXRMQ triangles encode values).  Ours
+goes past that: built ``with_positions=True`` (or from a
+position-tracking hierarchy via :meth:`from_hierarchy`), the sparse
+table also tracks leftmost-minimum *positions*, so ``query_index``
+gets the same O(1) top — this is what lets the batched query engine
+(``repro.qe``) route long-span ``RMQ_index`` queries here instead of
+falling back to the full walk.
+
+:meth:`from_hierarchy` wraps an *existing* hierarchy without rebuilding
+it — the engine uses this to add a hybrid top to a live index for the
+cost of one tiny (<= c·t entries) table build.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +46,8 @@ from repro.core.plan import HierarchyPlan, make_plan
 
 __all__ = ["HybridRMQ"]
 
+_POS_INF_I32 = jnp.iinfo(jnp.int32).max
+
 
 @dataclasses.dataclass(frozen=True)
 class HybridRMQ:
@@ -47,23 +57,52 @@ class HybridRMQ:
     top_table: SparseTable
 
     @staticmethod
-    def build(x, c: int = 128, t: int = 1024) -> "HybridRMQ":
+    def build(
+        x, c: int = 128, t: int = 1024, with_positions: bool = False
+    ) -> "HybridRMQ":
         """Note the default t is 16x the scan version's: the O(1) top
         makes large tops free at query time (paper §4.5 implication (1)),
         which in turn removes one hierarchy level."""
         x = jnp.asarray(x, jnp.float32)
         plan = make_plan(int(x.shape[0]), c=c, t=t)
-        h = build_hierarchy(x, plan)
+        h = build_hierarchy(x, plan, with_positions=with_positions)
+        return HybridRMQ.from_hierarchy(h)
+
+    @staticmethod
+    def from_hierarchy(h: Hierarchy) -> "HybridRMQ":
+        """Add a sparse-table top to an existing hierarchy (no rebuild).
+
+        Position tracking follows the hierarchy: a ``with_positions``
+        build gets an index-tracking table, a value-only build gets a
+        value-only table (and ``query_index`` raises).
+        """
+        plan = h.plan
         if plan.num_levels == 1:
-            top = x
+            top = h.base
+            top_pos = (
+                jnp.arange(h.base.shape[0], dtype=jnp.int32)
+                if h.with_positions
+                else None
+            )
         else:
-            off, padded = plan.level_slice(plan.num_levels - 1)
+            off, _ = plan.level_slice(plan.num_levels - 1)
             top = h.upper[off : off + plan.top_len]
-        return HybridRMQ(hierarchy=h, top_table=SparseTable.build(top))
+            top_pos = (
+                h.upper_pos[off : off + plan.top_len]
+                if h.with_positions
+                else None
+            )
+        return HybridRMQ(
+            hierarchy=h, top_table=SparseTable.build(top, positions=top_pos)
+        )
 
     @property
     def plan(self) -> HierarchyPlan:
         return self.hierarchy.plan
+
+    @property
+    def with_positions(self) -> bool:
+        return self.top_table.with_positions
 
     def auxiliary_bytes(self) -> int:
         return (
@@ -74,42 +113,72 @@ class HybridRMQ:
     def query(self, ls, rs) -> jax.Array:
         ls = jnp.asarray(ls, jnp.int32)
         rs = jnp.asarray(rs, jnp.int32)
-        return _hybrid_batch(
-            self.plan, self.hierarchy.base, self.hierarchy.upper,
-            self.top_table.table, ls, rs,
+        m, _ = _hybrid_batch(
+            self.plan, self.hierarchy.base, self.hierarchy.upper, None,
+            self.top_table.table, None, ls, rs, track_pos=False,
         )
+        return m
+
+    def query_index(self, ls, rs) -> jax.Array:
+        """Leftmost-minimum positions with the O(1) sparse-table top."""
+        if not self.with_positions:
+            raise ValueError(
+                "hybrid built value-only; build with with_positions=True "
+                "(or from a position-tracking hierarchy)"
+            )
+        ls = jnp.asarray(ls, jnp.int32)
+        rs = jnp.asarray(rs, jnp.int32)
+        _, p = _hybrid_batch(
+            self.plan, self.hierarchy.base, self.hierarchy.upper,
+            self.hierarchy.upper_pos, self.top_table.table,
+            self.top_table.pos, ls, rs, track_pos=True,
+        )
+        return p
 
 
-@functools.partial(jax.jit, static_argnames=("plan",))
-def _hybrid_batch(plan, base, upper, top_table, ls, rs):
+@functools.partial(jax.jit, static_argnames=("plan", "track_pos"))
+def _hybrid_batch(plan, base, upper, upper_pos, top_table, top_pos, ls, rs,
+                  track_pos):
     return jax.vmap(
-        lambda l, r: _hybrid_single(plan, base, upper, top_table, l, r)
+        lambda l, r: _hybrid_single(
+            plan, base, upper, upper_pos, top_table, top_pos, l, r,
+            track_pos,
+        )
     )(ls, rs)
 
 
-def _hybrid_single(plan: HierarchyPlan, base, upper, top_table, l, r):
+def _hybrid_single(plan: HierarchyPlan, base, upper, upper_pos, top_table,
+                   top_pos, l, r, track_pos):
     """Branch-free walk for levels 0..L-2 + O(1) table lookup at the top."""
-    from repro.kernels.rmq_scan.ref import _window
+    # shared lexicographic (value, leftmost-position) merge: the engine's
+    # parity contract needs identical tie-breaking across all paths
+    from repro.kernels.rmq_scan.ref import _merge, _window
 
     c = plan.c
     l = l.astype(jnp.int32)
     r = (r + 1).astype(jnp.int32)
     m = jnp.float32(jnp.inf)
+    p = jnp.int32(_POS_INF_I32)
 
     for level in range(plan.num_levels - 1):
         if level == 0:
-            arr = base
+            arr, pos_arr = base, None  # level-0 positions are the indices
         else:
             off, padded = plan.level_slice(level)
             arr = jax.lax.slice(upper, (off,), (off + padded,))
+            pos_arr = (
+                jax.lax.slice(upper_pos, (off,), (off + padded,))
+                if track_pos
+                else None
+            )
         next_l = ((l + c - 1) // c) * c
         prev_r = (r // c) * c
-        m2, _ = _window(arr, None, (l // c) * c, l,
-                        jnp.minimum(next_l, r), c, False)
-        m = jnp.minimum(m, m2)
-        m2, _ = _window(arr, None, prev_r, jnp.maximum(prev_r, l), r, c,
-                        False)
-        m = jnp.minimum(m, m2)
+        m2, p2 = _window(arr, pos_arr, (l // c) * c, l,
+                         jnp.minimum(next_l, r), c, track_pos)
+        m, p = _merge(m, p, m2, p2)
+        m2, p2 = _window(arr, pos_arr, prev_r, jnp.maximum(prev_r, l), r, c,
+                         track_pos)
+        m, p = _merge(m, p, m2, p2)
         l = (l + c - 1) // c
         r = r // c
 
@@ -118,8 +187,15 @@ def _hybrid_single(plan: HierarchyPlan, base, upper, top_table, l, r):
     rr = jnp.maximum(r - 1, l)          # inclusive, clamped
     span = rr - l + 1
     j = (31 - jax.lax.clz(span.astype(jnp.int32))).astype(jnp.int32)
-    left = top_table[j, l]
-    right = top_table[j, rr + 1 - (1 << j.astype(jnp.uint32)).astype(
-        jnp.int32)]
-    top_min = jnp.minimum(left, right)
-    return jnp.where(nonempty, jnp.minimum(m, top_min), m)
+    r2 = rr + 1 - (1 << j.astype(jnp.uint32)).astype(jnp.int32)
+    vl = top_table[j, l]
+    vr = top_table[j, r2]
+    if track_pos:
+        pl_ = top_pos[j, l]
+        pr_ = top_pos[j, r2]
+        tm, tp = _merge(vl, pl_, vr, pr_)
+    else:
+        tm, tp = jnp.minimum(vl, vr), jnp.int32(_POS_INF_I32)
+    tm = jnp.where(nonempty, tm, jnp.inf)
+    tp = jnp.where(nonempty, tp, _POS_INF_I32)
+    return _merge(m, p, tm, tp)

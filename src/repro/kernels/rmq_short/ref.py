@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the short-span RMQ kernel.
+
+Short-span contract (enforced by the query-engine planner, checked here
+only in the docstring): the query's level-0 footprint spans at most two
+aligned ``c``-chunks, i.e. ``r // c - l // c <= 1``.  Such a query is
+fully covered by the ``2c`` window starting at ``floor(l / c) * c``, so
+it never needs the hierarchy at all: one masked scan of (at most) two
+chunks answers it, and — because level 0 *is* the original array — the
+leftmost-minimum position is just the window index, no ``upper_pos``
+required.
+
+This is the engine's fast path for the paper's "small" range class
+(§5.1, Fig. 16): the full walk costs ``2c(L-1) + ct`` scanned entries on
+every query regardless of span; a two-chunk query pays ``2c``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_POS_INF_I32 = jnp.iinfo(jnp.int32).max
+
+
+@functools.partial(jax.jit, static_argnames=("c", "capacity", "track_pos"))
+def rmq_short_batch_ref(base, ls, rs, c: int, capacity: int,
+                        track_pos: bool = False):
+    """(values, positions) for a batch of two-chunk queries.
+
+    ``base`` is the level-0 array stored at ``capacity`` length (+inf
+    padded past the live region).  Positions are INT32_MAX when
+    ``track_pos=False``.
+    """
+    w = min(2 * c, capacity)
+
+    def one(l, r):
+        l = l.astype(jnp.int32)
+        r = r.astype(jnp.int32)
+        anchor = jnp.clip((l // c) * c, 0, max(capacity - w, 0))
+        vals = jax.lax.dynamic_slice(base, (anchor,), (w,))
+        idx = anchor + jnp.arange(w, dtype=jnp.int32)
+        mask = (idx >= l) & (idx <= r)
+        masked = jnp.where(mask, vals, jnp.inf)
+        m = jnp.min(masked)
+        if not track_pos:
+            return m, jnp.int32(_POS_INF_I32)
+        cand = jnp.where(mask & (masked == m), idx, _POS_INF_I32)
+        return m, jnp.min(cand)
+
+    return jax.vmap(one)(jnp.asarray(ls), jnp.asarray(rs))

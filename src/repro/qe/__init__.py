@@ -1,0 +1,41 @@
+"""Adaptive batched query engine (the system layer above the kernels).
+
+The paper's throughput data is *non-uniform in query span* (Fig. 16
+reports per-range-class throughput; §4.5's hybrid exists because long
+queries want a different engine than short ones).  This package turns
+that observation into an execution layer:
+
+* :class:`QueryPlanner` — classifies each query by span into
+  short / mid / long and packs each class into fixed padded bucket
+  shapes (bounded set of shapes ⇒ bounded jit retraces as batch
+  composition shifts);
+* executors (:mod:`repro.qe.executors`) — one per class, holding
+  persistent jitted callables: short spans skip the hierarchy via the
+  ``rmq_short`` two-chunk kernel, mid spans take the standard walk,
+  long spans use the :class:`~repro.core.hybrid.HybridRMQ` O(1)
+  sparse-table top;
+* :class:`ResultCache` — within-batch duplicate dedup plus an LRU keyed
+  by ``(op, index generation, l, r)``; ``RMQ.update``/``append`` bump
+  the generation so streaming mutations invalidate correctly;
+* :class:`QueryEngine` — ties the three together for one index
+  (``RMQ.engine()`` on the facade);
+* :class:`QueryService` — a multi-index registry with a micro-batching
+  admission queue that coalesces small requests into one padded
+  execution with per-request scatter-back.
+"""
+
+from repro.qe.cache import ResultCache
+from repro.qe.engine import QueryEngine
+from repro.qe.planner import LONG, MID, SHORT, Bucket, QueryPlanner
+from repro.qe.service import QueryService
+
+__all__ = [
+    "Bucket",
+    "LONG",
+    "MID",
+    "SHORT",
+    "QueryEngine",
+    "QueryPlanner",
+    "QueryService",
+    "ResultCache",
+]

@@ -1,0 +1,73 @@
+"""Result cache for the batched query engine.
+
+Two layers, both host-side (results are scalars — a float or an int —
+so the cache never pins device memory):
+
+* **within-batch dedup** lives in the engine (``np.unique`` over the
+  ``(l, r)`` pairs); this module only sees deduplicated queries;
+* **cross-batch LRU** keyed by ``(op, generation, l, r)``.  The
+  generation is the index's monotonic mutation counter —
+  ``RMQ.update``/``append`` (and the streaming mutators) return a
+  successor with ``generation + 1``, so entries computed against an
+  older array version can never be returned for the new one.  Stale
+  generations age out of the LRU naturally.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Hashable, Optional, Tuple
+
+__all__ = ["ResultCache"]
+
+
+class ResultCache:
+    """Bounded LRU mapping ``(op, generation, l, r) -> scalar result``."""
+
+    def __init__(self, capacity: int):
+        if capacity < 0:
+            raise ValueError(f"capacity must be >= 0, got {capacity}")
+        self.capacity = capacity
+        self._d: "OrderedDict[Tuple[Hashable, ...], object]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def get(self, op: str, generation: int, l: int, r: int):
+        """The cached result, or None on miss (results are never None)."""
+        if self.capacity == 0:
+            self.misses += 1
+            return None
+        key = (op, generation, l, r)
+        val = self._d.get(key)
+        if val is None:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return val
+
+    def put(self, op: str, generation: int, l: int, r: int, value) -> None:
+        if self.capacity == 0:
+            return
+        key = (op, generation, l, r)
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def clear(self) -> None:
+        self._d.clear()
+
+    def stats(self) -> dict:
+        return {
+            "capacity": self.capacity,
+            "entries": len(self._d),
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }

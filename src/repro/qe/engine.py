@@ -1,0 +1,236 @@
+"""``QueryEngine`` — span-routed, deduped, cached batched RMQ execution.
+
+One engine serves one index (an :class:`repro.core.api.RMQ`, a
+:class:`repro.streaming.StreamingRMQ`, or anything exposing
+``hierarchy`` / ``backend`` / a live length / ``generation``).  The
+engine is a *host-side* orchestration layer: classification, packing,
+dedup and cache bookkeeping run in numpy; only the packed buckets touch
+the device, through persistent jitted callables (see
+:mod:`repro.qe.executors`).
+
+Execution pipeline per batch::
+
+    validate -> dedup (np.unique) -> LRU lookup -> planner buckets
+             -> per-class executors -> scatter-back -> LRU insert
+
+Results are bit-identical — values *and* leftmost-tie positions — to
+the monolithic ``rmq_value_batch`` / ``rmq_index_batch`` oracles: every
+routed path computes the exact lexicographic (value, position) minimum
+over the same range, just over a cheaper decomposition.
+
+Mutation protocol: the index is pure-functional, so ``update``/
+``append`` return a *successor* with ``generation + 1``.  Call
+:meth:`attach` with the successor; cached results keyed to older
+generations can then never be served (and age out of the LRU).
+Attaching an index that is not a successor of the current one (its
+generation did not strictly increase, or its plan differs) clears the
+cache outright.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.query import check_query_args
+from repro.qe.cache import ResultCache
+from repro.qe.executors import (
+    INDEX,
+    VALUE,
+    LongSpanExecutor,
+    MidSpanExecutor,
+    ShortSpanExecutor,
+)
+from repro.qe.planner import LONG, MID, SHORT, QueryPlanner
+
+__all__ = ["QueryEngine"]
+
+
+def _live_length(index) -> int:
+    n = getattr(index, "n", None)
+    if isinstance(n, int):
+        return n
+    return int(index.length)
+
+
+class QueryEngine:
+    """Adaptive batched execution over one RMQ index."""
+
+    def __init__(
+        self,
+        index,
+        cache_size: int = 8192,
+        long_enabled: bool = True,
+        long_cutoff: Optional[int] = None,
+        min_bucket: int = 16,
+        max_bucket: int = 4096,
+        backend: Optional[str] = None,
+        interpret: Optional[bool] = None,
+    ):
+        backend = backend or index.backend
+        self.backend = backend
+        self.cache = ResultCache(cache_size)
+        self._long_enabled = long_enabled
+        self._long_cutoff = long_cutoff
+        self._min_bucket = min_bucket
+        self._max_bucket = max_bucket
+        self.executors = {
+            SHORT: ShortSpanExecutor(backend, interpret=interpret),
+            MID: MidSpanExecutor(backend, interpret=interpret),
+            LONG: LongSpanExecutor(),
+        }
+        self.batches = 0
+        self.queries_in = 0
+        self.dedup_saved = 0
+        self.class_counts = {SHORT: 0, MID: 0, LONG: 0}
+        self._index = None
+        self.planner: Optional[QueryPlanner] = None
+        self.attach(index)
+
+    @classmethod
+    def for_index(cls, index, **kwargs) -> "QueryEngine":
+        return cls(index, **kwargs)
+
+    # -- index binding ----------------------------------------------------
+    @property
+    def index(self):
+        return self._index
+
+    @property
+    def generation(self) -> int:
+        return getattr(self._index, "generation", 0)
+
+    def attach(self, index, reset_cache: Optional[bool] = None) -> None:
+        """Bind a (successor) index.
+
+        ``reset_cache=None`` keeps cached results only when ``index``
+        looks like a successor of the current binding: same plan and a
+        strictly larger generation (old entries are then unreachable by
+        key).  Pass ``True``/``False`` to override.
+        """
+        prev = self._index
+        if reset_cache is None:
+            reset_cache = not (
+                prev is not None
+                and index.hierarchy.plan == prev.hierarchy.plan
+                and getattr(index, "generation", 0)
+                > getattr(prev, "generation", 0)
+            )
+        if reset_cache:
+            self.cache.clear()
+        plan = index.hierarchy.plan
+        # Query bounds/positions flow through int32 index space (planner
+        # packing, the short kernel's iota, the hybrid top, and the core
+        # walk's window math alike).  Refuse loudly rather than wrap.
+        if plan.capacity >= 2**31:
+            raise ValueError(
+                f"capacity {plan.capacity} exceeds the int32 query index "
+                "space; the batched query engine (and the underlying "
+                "query kernels) support capacity < 2**31"
+            )
+        if self.planner is None or (
+            plan.c != self.planner.c
+            or plan.num_levels != self.planner.num_levels
+        ):
+            self.planner = QueryPlanner(
+                c=plan.c,
+                num_levels=plan.num_levels,
+                long_cutoff=self._long_cutoff,
+                long_enabled=self._long_enabled,
+                min_bucket=self._min_bucket,
+                max_bucket=self._max_bucket,
+            )
+        self._index = index
+        self.executors[LONG].invalidate()
+
+    # -- public query surface ---------------------------------------------
+    def query(self, ls, rs) -> jnp.ndarray:
+        """Batched ``RMQ_value``; bit-identical to ``rmq_value_batch``."""
+        return self._execute(ls, rs, VALUE)
+
+    def query_index(self, ls, rs) -> jnp.ndarray:
+        """Batched ``RMQ_index``; bit-identical to ``rmq_index_batch``."""
+        if not self._index.hierarchy.with_positions:
+            raise ValueError(
+                "hierarchy was built without positions; "
+                "use build_hierarchy(..., with_positions=True)"
+            )
+        return self._execute(ls, rs, INDEX)
+
+    # -- execution --------------------------------------------------------
+    def _execute(self, ls, rs, op: str) -> jnp.ndarray:
+        index = self._index
+        h = index.hierarchy
+        n = _live_length(index)
+        ls, rs = check_query_args(ls, rs, n)
+        ls = np.asarray(ls, np.int32).ravel()
+        rs = np.asarray(rs, np.int32).ravel()
+        m = ls.shape[0]
+        out_dtype = np.int32 if op == INDEX else np.dtype(h.base.dtype)
+        if m == 0:
+            return jnp.zeros((0,), out_dtype)
+
+        self.batches += 1
+        self.queries_in += m
+
+        # -- within-batch dedup -------------------------------------------
+        uniq, inverse = np.unique(
+            np.stack([ls, rs]), axis=1, return_inverse=True
+        )
+        uls, urs = uniq[0], uniq[1]
+        k = uls.shape[0]
+        self.dedup_saved += m - k
+        uniq_res = np.empty((k,), out_dtype)
+
+        # -- LRU lookup ---------------------------------------------------
+        gen = self.generation
+        if self.cache.capacity > 0:
+            missing = np.ones((k,), bool)
+            for i in range(k):
+                hit = self.cache.get(op, gen, int(uls[i]), int(urs[i]))
+                if hit is not None:
+                    uniq_res[i] = hit
+                    missing[i] = False
+            miss_idx = np.nonzero(missing)[0]
+        else:
+            miss_idx = np.arange(k)
+
+        # -- plan + execute the misses ------------------------------------
+        if miss_idx.shape[0]:
+            mls, mrs = uls[miss_idx], urs[miss_idx]
+            for bucket in self.planner.plan(mls, mrs):
+                if bucket.count == 0:
+                    continue
+                self.class_counts[bucket.cls] += bucket.count
+                res = self.executors[bucket.cls].run(
+                    h, jnp.asarray(bucket.ls), jnp.asarray(bucket.rs), op
+                )
+                res = np.asarray(res)[: bucket.count].astype(
+                    out_dtype, copy=False
+                )
+                uniq_res[miss_idx[bucket.idxs]] = res
+            if self.cache.capacity > 0:
+                for i in miss_idx:
+                    self.cache.put(
+                        op, gen, int(uls[i]), int(urs[i]),
+                        uniq_res[i].item(),
+                    )
+
+        return jnp.asarray(uniq_res[inverse.ravel()])
+
+    # -- introspection ----------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "backend": self.backend,
+            "generation": self.generation,
+            "batches": self.batches,
+            "queries": self.queries_in,
+            "dedup_saved": self.dedup_saved,
+            "class_counts": dict(self.class_counts),
+            "cache": self.cache.stats(),
+            "executors": {
+                cls: ex.stats() for cls, ex in self.executors.items()
+            },
+        }

@@ -1,0 +1,138 @@
+"""Per-span-class executors holding persistent jitted callables.
+
+Each executor owns the dispatch for one planner class and keeps a table
+of bound callables keyed by ``(op, bucket shape)`` — the underlying
+functions are module-level ``jax.jit`` specializations (static plan +
+shape), so a (plan, shape, op) triple traces exactly once and every
+later bucket with the same shape reuses the compiled executable.  The
+table doubles as the retrace ledger surfaced in engine stats.
+
+Backend dispatch mirrors the facade: ``backend="pallas"`` routes short
+spans to the ``rmq_short`` kernel and mid spans to the ``rmq_scan``
+kernel; ``backend="jax"`` uses the pure-JAX paths.  The long executor's
+hybrid walk is pure JAX on either backend (its win is algorithmic — an
+O(1) top — not a lowering).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.core.hierarchy import Hierarchy
+
+__all__ = ["ShortSpanExecutor", "MidSpanExecutor", "LongSpanExecutor"]
+
+VALUE = "value"
+INDEX = "index"
+
+
+class _ExecutorBase:
+    """Shared bookkeeping: the (op, shape) -> callable table and stats."""
+
+    def __init__(self):
+        self._compiled: Dict[Tuple[str, int], Callable] = {}
+        self.calls = 0
+        self.queries = 0
+
+    def _bind(self, op: str, shape: int, make: Callable) -> Callable:
+        key = (op, shape)
+        fn = self._compiled.get(key)
+        if fn is None:
+            fn = make()
+            self._compiled[key] = fn
+        return fn
+
+    def run(self, h: Hierarchy, ls, rs, op: str) -> jax.Array:
+        self.calls += 1
+        self.queries += int(ls.shape[0])
+        fn = self._bind(op, int(ls.shape[0]), lambda: self._make(h, op))
+        return fn(h, ls, rs)
+
+    def stats(self) -> dict:
+        return {
+            "calls": self.calls,
+            "queries": self.queries,
+            "specializations": len(self._compiled),
+        }
+
+    def invalidate(self) -> None:
+        """Drop state tied to a particular index version (default: none)."""
+
+
+class ShortSpanExecutor(_ExecutorBase):
+    """Two-chunk level-0 scan; never touches the hierarchy."""
+
+    def __init__(self, backend: str, interpret: Optional[bool] = None):
+        super().__init__()
+        self.backend = backend
+        self.interpret = interpret
+
+    def _make(self, h: Hierarchy, op: str) -> Callable:
+        from repro.kernels.rmq_short import ops as short_ops
+
+        if self.backend == "pallas":
+            if op == VALUE:
+                return lambda h, ls, rs: short_ops.rmq_short_value_batch_pallas(
+                    h, ls, rs, interpret=self.interpret
+                )
+            return lambda h, ls, rs: short_ops.rmq_short_index_batch_pallas(
+                h, ls, rs, interpret=self.interpret
+            )
+        if op == VALUE:
+            return short_ops.rmq_short_value_batch
+        return short_ops.rmq_short_index_batch
+
+
+class MidSpanExecutor(_ExecutorBase):
+    """The standard full hierarchy walk (the previous monolithic path)."""
+
+    def __init__(self, backend: str, interpret: Optional[bool] = None):
+        super().__init__()
+        self.backend = backend
+        self.interpret = interpret
+
+    def _make(self, h: Hierarchy, op: str) -> Callable:
+        if self.backend == "pallas":
+            from repro.kernels.rmq_scan import ops as scan_ops
+
+            if op == VALUE:
+                return lambda h, ls, rs: scan_ops.rmq_value_batch_pallas(
+                    h, ls, rs, interpret=self.interpret
+                )
+            return lambda h, ls, rs: scan_ops.rmq_index_batch_pallas(
+                h, ls, rs, interpret=self.interpret
+            )
+        from repro.core.query import rmq_index_batch, rmq_value_batch
+
+        return rmq_value_batch if op == VALUE else rmq_index_batch
+
+
+class LongSpanExecutor(_ExecutorBase):
+    """Hybrid sparse-table top: O(1) instead of the c·t top scan.
+
+    The hybrid wraps the engine's *live* hierarchy
+    (``HybridRMQ.from_hierarchy`` — no rebuild; one <= c·t-entry table
+    build), so it must be re-derived when the index mutates: the engine
+    calls :meth:`invalidate` on every attach.
+    """
+
+    def __init__(self):
+        super().__init__()
+        self._hybrid = None
+
+    def invalidate(self) -> None:
+        self._hybrid = None
+
+    def _hybrid_for(self, h: Hierarchy):
+        if self._hybrid is None or self._hybrid.hierarchy is not h:
+            from repro.core.hybrid import HybridRMQ
+
+            self._hybrid = HybridRMQ.from_hierarchy(h)
+        return self._hybrid
+
+    def _make(self, h: Hierarchy, op: str) -> Callable:
+        if op == VALUE:
+            return lambda h, ls, rs: self._hybrid_for(h).query(ls, rs)
+        return lambda h, ls, rs: self._hybrid_for(h).query_index(ls, rs)

@@ -1,0 +1,227 @@
+"""``QueryService`` — multi-index registry + micro-batching admission.
+
+Serving-shaped frontend for the query engine: many named indices, many
+small callers.  Small requests are the enemy of batched RMQ throughput
+(every dispatch pays fixed planner/launch cost), so the service holds an
+admission queue: ``submit`` enqueues a request and returns a ticket;
+``flush`` coalesces everything pending for the same (index, op) pair
+into one engine execution — one dedup pass, one set of padded buckets —
+then scatters each request's slice back to its ticket.  ``submit``
+auto-flushes once the pending query count crosses ``max_pending``, which
+bounds queue memory and gives an admission-control backstop.
+
+The registry is generation-aware: ``attach(name, successor)`` follows a
+mutation (the engine's result cache invalidates by generation key).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.qe.engine import QueryEngine
+from repro.qe.executors import INDEX, VALUE
+
+__all__ = ["QueryService"]
+
+
+@dataclasses.dataclass(frozen=True)
+class _Request:
+    ticket: int
+    name: str
+    op: str
+    ls: np.ndarray
+    rs: np.ndarray
+
+
+class QueryService:
+    """Named engines + a coalescing admission queue."""
+
+    def __init__(
+        self,
+        max_pending: int = 4096,
+        max_unclaimed: int = 4096,
+        **engine_defaults,
+    ):
+        self.max_pending = max_pending
+        # Results stay claimable via take() after a flush, but a caller
+        # that only reads flush()'s return value never claims — so the
+        # buffer is bounded (FIFO eviction of the oldest unclaimed),
+        # or a long-running service would leak one result per request.
+        self.max_unclaimed = max_unclaimed
+        self._engine_defaults = engine_defaults
+        self._engines: Dict[str, QueryEngine] = {}
+        self._pending: List[_Request] = []
+        self._pending_queries = 0
+        self._results: "OrderedDict[int, jnp.ndarray]" = OrderedDict()
+        self._next_ticket = 0
+        self.flushes = 0
+        self.coalesced_batches = 0
+        self.requests = 0
+        self.dropped_results = 0
+
+    # -- registry ---------------------------------------------------------
+    def register(self, name: str, index, **engine_kwargs) -> QueryEngine:
+        """Create (or replace) the engine serving ``name``.
+
+        Replacing a name whose queue still holds requests would answer
+        those tickets against the wrong index — flush first (same
+        contract as :meth:`unregister`; use :meth:`attach` to follow a
+        mutation of the *same* logical index).
+        """
+        if any(r.name == name for r in self._pending):
+            raise ValueError(
+                f"index {name!r} has pending requests; flush first"
+            )
+        kwargs = {**self._engine_defaults, **engine_kwargs}
+        engine = QueryEngine.for_index(index, **kwargs)
+        self._engines[name] = engine
+        return engine
+
+    def attach(self, name: str, index, **kwargs) -> None:
+        """Re-bind ``name`` to a successor index after a mutation."""
+        self._engine(name).attach(index, **kwargs)
+
+    def unregister(self, name: str) -> None:
+        if any(r.name == name for r in self._pending):
+            raise ValueError(
+                f"index {name!r} has pending requests; flush first"
+            )
+        del self._engines[name]
+
+    def engine(self, name: str) -> QueryEngine:
+        return self._engine(name)
+
+    def _engine(self, name: str) -> QueryEngine:
+        if name not in self._engines:
+            raise KeyError(
+                f"no index registered as {name!r}; "
+                f"have {sorted(self._engines)}"
+            )
+        return self._engines[name]
+
+    # -- admission queue --------------------------------------------------
+    def submit(self, name: str, ls, rs, op: str = VALUE) -> int:
+        """Enqueue a request; returns a ticket for :meth:`flush` results."""
+        engine = self._engine(name)  # fail fast on unknown names
+        if op not in (VALUE, INDEX):
+            raise ValueError(f"op must be 'value' or 'index', got {op!r}")
+        if op == INDEX and not engine.index.hierarchy.with_positions:
+            # fail at admission, not at flush time where the error would
+            # be detached from the caller that queued the bad request
+            raise ValueError(
+                f"index {name!r} was built without positions; "
+                "op='index' needs with_positions=True"
+            )
+        ls = np.atleast_1d(np.asarray(ls))
+        rs = np.atleast_1d(np.asarray(rs))
+        if ls.shape != rs.shape or ls.ndim != 1:
+            raise ValueError(
+                f"bounds must be matching 1-D batches, got "
+                f"{ls.shape} vs {rs.shape}"
+            )
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append(_Request(ticket, name, op, ls, rs))
+        self._pending_queries += ls.shape[0]
+        self.requests += 1
+        if self._pending_queries >= self.max_pending:
+            self.flush()
+        return ticket
+
+    def flush(self) -> Dict[int, jnp.ndarray]:
+        """Execute everything pending, coalesced per (index, op).
+
+        Returns {ticket: results}; results also stay claimable via
+        :meth:`take` until collected or until ``max_unclaimed`` newer
+        results push them out (oldest-first).
+
+        Failures are isolated per (index, op) group: a group that raises
+        (e.g. out-of-range bounds for one index) does not lose other
+        groups' results — those are stored and claimable as usual, and
+        the first error re-raises after the loop with the failed
+        groups' tickets in the message.
+        """
+        pending, self._pending = self._pending, []
+        self._pending_queries = 0
+        if pending:
+            self.flushes += 1
+        groups: Dict[Tuple[str, str], List[_Request]] = {}
+        for req in pending:
+            groups.setdefault((req.name, req.op), []).append(req)
+        out: Dict[int, jnp.ndarray] = {}
+        failures: List[Tuple[str, str, List[int], Exception]] = []
+        for (name, op), reqs in groups.items():
+            engine = self._engines[name]
+            ls = np.concatenate([r.ls for r in reqs])
+            rs = np.concatenate([r.rs for r in reqs])
+            try:
+                res = (
+                    engine.query(ls, rs) if op == VALUE
+                    else engine.query_index(ls, rs)
+                )
+            except Exception as e:
+                failures.append((name, op, [r.ticket for r in reqs], e))
+                continue
+            if len(reqs) > 1:
+                self.coalesced_batches += 1
+            off = 0
+            for r in reqs:
+                out[r.ticket] = res[off : off + r.ls.shape[0]]
+                off += r.ls.shape[0]
+        self._results.update(out)
+        while len(self._results) > self.max_unclaimed:
+            self._results.popitem(last=False)
+            self.dropped_results += 1
+        if failures:
+            name, op, tickets, err = failures[0]
+            raise RuntimeError(
+                f"flush failed for {len(failures)} group(s); first: "
+                f"index {name!r} op {op!r} tickets {tickets}: {err} "
+                "(other groups' results were stored and are claimable)"
+            ) from err
+        return out
+
+    def take(self, ticket: int) -> jnp.ndarray:
+        """Claim (and remove) a flushed result by ticket.
+
+        Raises ``KeyError`` for tickets never flushed *and* for results
+        evicted past ``max_unclaimed`` — claim promptly after flushing.
+        """
+        if ticket not in self._results:
+            raise KeyError(
+                f"ticket {ticket} has no result; flush() it first "
+                "(or it aged out of the unclaimed-results buffer)"
+            )
+        return self._results.pop(ticket)
+
+    # -- synchronous conveniences -----------------------------------------
+    def query(self, name: str, ls, rs) -> jnp.ndarray:
+        """Submit + flush + take in one call (still coalesces any queue)."""
+        ticket = self.submit(name, ls, rs, VALUE)
+        self.flush()
+        return self.take(ticket)
+
+    def query_index(self, name: str, ls, rs) -> jnp.ndarray:
+        ticket = self.submit(name, ls, rs, INDEX)
+        self.flush()
+        return self.take(ticket)
+
+    # -- introspection ----------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "requests": self.requests,
+            "flushes": self.flushes,
+            "coalesced_batches": self.coalesced_batches,
+            "pending_requests": len(self._pending),
+            "pending_queries": self._pending_queries,
+            "unclaimed_results": len(self._results),
+            "dropped_results": self.dropped_results,
+            "engines": {
+                name: eng.stats() for name, eng in self._engines.items()
+            },
+        }

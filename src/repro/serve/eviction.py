@@ -31,6 +31,16 @@ Two entry points:
   single fixed-shape batched update (chunk-granular re-reductions), then
   queried.  ``ServeEngine`` uses this path exclusively.
 
+Queries go through the adaptive batched engine (``repro.qe``) rather
+than the monolithic walk: eviction windows are ``evictable /
+evict_count`` wide, so under memory pressure (many victims per round)
+most of the batch lands in the engine's *short* class and skips the
+hierarchy entirely via the two-chunk kernel.  The streaming path keeps
+one engine for the generation and re-attaches it each round (the score
+update bumps the index generation, invalidating the engine's result
+cache by key); the result cache itself is disabled — scores change
+every round, so cross-round hits are impossible by construction.
+
 The manager is pure-functional: planners return indices (plus the updated
 index for the streaming path); ``apply_evictions`` compacts cache +
 scores.  Engine code owns the arrays.
@@ -93,13 +103,19 @@ class RMQEvictionManager:
         evictable, evict_count = round_
 
         # one RMQ_index per window — a batch of (l, r) pairs, the paper's
-        # exact query interface
+        # exact query interface.  The chunk size must stay a power of
+        # two even when the evictable region is smaller than self.c
+        # (e.g. a protected window covering almost the whole context).
+        c_fit = min(self.c, max(2, evictable))
+        c_fit = 1 << (c_fit.bit_length() - 1)   # largest pow2 <= c_fit
         rmq = RMQ.build(
-            scores[:evictable], c=min(self.c, max(2, evictable)),
+            scores[:evictable], c=c_fit,
             t=self.t, with_positions=True, backend=self.backend,
         )
         ls, rs = self._windows(evictable, evict_count)
-        victims = rmq.query_index(ls, rs)
+        # Span-routed argmin: a throwaway index gets a throwaway engine
+        # (no result cache — every build is a fresh generation anyway).
+        victims = rmq.engine(cache_size=0).query_index(ls, rs)
         # windows are disjoint and each argmin lies in its window => unique
         return jnp.sort(victims).astype(jnp.int32)
 
@@ -110,6 +126,21 @@ class RMQEvictionManager:
             jnp.full((capacity,), jnp.inf, jnp.float32),
             c=self.c, t=self.t, with_positions=True, backend=self.backend,
         )
+
+    def _engine_for(self, index: StreamingRMQ):
+        """One persistent query engine per manager, re-attached each round.
+
+        The manager dataclass is frozen (it is config, hashable); the
+        engine is runtime state, parked on the instance dict so jitted
+        bucket callables and planner stats persist across rounds.
+        """
+        eng = self.__dict__.get("_engine")
+        if eng is None:
+            eng = index.engine(cache_size=0)
+            object.__setattr__(self, "_engine", eng)
+        else:
+            eng.attach(index)
+        return eng
 
     def plan_evictions_streaming(
         self,
@@ -141,7 +172,7 @@ class RMQEvictionManager:
             jnp.arange(index.capacity, dtype=jnp.int32), slot_scores
         )
         ls, rs = self._windows(evictable, evict_count)
-        victims = index.query_index(ls, rs)
+        victims = self._engine_for(index).query_index(ls, rs)
         return index, jnp.sort(victims).astype(jnp.int32)
 
     def apply_evictions(

@@ -111,6 +111,10 @@ class StreamingRMQ:
     backend: str
     length: int
     start: int = 0
+    # Monotonic mutation counter (host-side, never traced): bumped by
+    # update/append/retire so the query engine's result cache can key
+    # entries to the array version they were computed against.
+    generation: int = 0
 
     # -- construction -----------------------------------------------------
     @staticmethod
@@ -160,6 +164,7 @@ class StreamingRMQ:
             hierarchy=dispatch_update(
                 self.hierarchy, idxs, vals, self.backend
             ),
+            generation=self.generation + 1,
         )
 
     def append(self, vals) -> "StreamingRMQ":
@@ -180,7 +185,10 @@ class StreamingRMQ:
             self.hierarchy, vals, jnp.int32(self.length), self.backend
         )
         return dataclasses.replace(
-            self, hierarchy=h, length=self.length + b
+            self,
+            hierarchy=h,
+            length=self.length + b,
+            generation=self.generation + 1,
         )
 
     def retire(self, count: int) -> "StreamingRMQ":
@@ -202,6 +210,7 @@ class StreamingRMQ:
                 self.hierarchy, idxs, vals, self.backend
             ),
             start=self.start + count,
+            generation=self.generation + 1,
         )
 
     # -- queries ----------------------------------------------------------
@@ -222,6 +231,17 @@ class StreamingRMQ:
 
             return scan_ops.rmq_index_batch_pallas(self.hierarchy, ls, rs)
         return rmq_index_batch(self.hierarchy, ls, rs)
+
+    # -- adaptive batched engine -------------------------------------------
+    def engine(self, **kwargs):
+        """A span-routed :class:`repro.qe.QueryEngine` over this index.
+
+        Re-attach (``engine.attach``) after any mutation — update/append/
+        retire return successor indices with a bumped ``generation``.
+        """
+        from repro.qe import QueryEngine
+
+        return QueryEngine.for_index(self, **kwargs)
 
     # -- introspection ----------------------------------------------------
     @property

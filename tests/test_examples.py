@@ -39,6 +39,41 @@ def test_chaining_recovers_chains():
     assert score.max() >= 0.6 * naive.max()  # generational relaxation
 
 
+def test_query_engine_example():
+    """Reduced-size pass through examples/query_engine.py's flow."""
+    sys.path.insert(0, "examples")
+    try:
+        from query_engine import mixed_workload
+    finally:
+        sys.path.pop(0)
+    from repro.core import RMQ
+    from repro.core.query import rmq_value_batch
+    from repro.qe import QueryService
+
+    rng = np.random.default_rng(0)
+    n, c = 1 << 14, 64
+    x = rng.random(n, dtype=np.float32)
+    rmq = RMQ.build(x, c=c, t=64, with_positions=True, backend="jax")
+    engine = rmq.engine()
+    ls, rs = mixed_workload(rng, n, c, 512)
+    got = np.asarray(engine.query(ls, rs))
+    want = np.asarray(
+        rmq_value_batch(rmq.hierarchy, jnp.asarray(ls), jnp.asarray(rs))
+    )
+    assert np.array_equal(got, want)
+    assert engine.stats()["class_counts"]["short"] > 0
+
+    svc = QueryService()
+    svc.register("scores", rmq)
+    t1 = svc.submit("scores", ls[:8], rs[:8])
+    t2 = svc.submit("scores", ls[8:16], rs[8:16])
+    res = svc.flush()
+    assert np.array_equal(
+        np.concatenate([np.asarray(res[t1]), np.asarray(res[t2])]),
+        want[:16],
+    )
+
+
 def test_distributed_example_subprocess():
     res = subprocess.run(
         [sys.executable, "examples/distributed_rmq.py"],

@@ -54,3 +54,51 @@ def test_hybrid_property(n, seed):
     r = int(rng.integers(l, n))
     got = float(h.query(np.array([l]), np.array([r]))[0])
     assert got == x[l : r + 1].min()
+
+
+@pytest.mark.parametrize("n,c,t", [
+    (50_000, 128, 2),
+    (4096, 8, 4),
+    (999, 8, 2),
+    (600, 1024, 64),   # single-level plan: table directly over the input
+])
+def test_hybrid_index_tracking_matches_naive(n, c, t):
+    """Index-tracking hybrid: leftmost-tie positions, incl. tie storms."""
+    rng = np.random.default_rng(n + 7)
+    x = rng.random(n).astype(np.float32)
+    x[rng.integers(0, n, n // 8)] = 0.25   # force ties
+    h = HybridRMQ.build(x, c=c, t=t, with_positions=True)
+    assert h.with_positions
+    ls = rng.integers(0, n, 256)
+    rs = np.minimum(ls + rng.integers(0, n, 256), n - 1)
+    ls, rs = np.minimum(ls, rs), np.maximum(ls, rs)
+    got = np.asarray(h.query_index(ls, rs))
+    want = np.array([l + np.argmin(x[l : r + 1]) for l, r in zip(ls, rs)])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_hybrid_from_hierarchy_reuses_levels():
+    """from_hierarchy wraps an existing build — no hierarchy rebuild."""
+    from repro.core.hierarchy import build_hierarchy
+    from repro.core.plan import make_plan
+
+    rng = np.random.default_rng(3)
+    n = 30_000
+    x = rng.random(n).astype(np.float32)
+    h = build_hierarchy(jnp.asarray(x), make_plan(n, c=64, t=4),
+                        with_positions=True)
+    hyb = HybridRMQ.from_hierarchy(h)
+    assert hyb.hierarchy is h
+    assert hyb.with_positions
+    ls = rng.integers(0, n, 128)
+    rs = np.minimum(ls + rng.integers(0, n, 128), n - 1)
+    ls, rs = np.minimum(ls, rs), np.maximum(ls, rs)
+    want = np.array([x[l : r + 1].min() for l, r in zip(ls, rs)])
+    np.testing.assert_array_equal(np.asarray(hyb.query(ls, rs)), want)
+
+
+def test_hybrid_value_only_query_index_raises():
+    x = np.random.default_rng(0).random(5000).astype(np.float32)
+    h = HybridRMQ.build(x, c=16, t=8)
+    with pytest.raises(ValueError, match="value-only"):
+        h.query_index(np.array([0]), np.array([10]))

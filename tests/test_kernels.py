@@ -137,6 +137,91 @@ class TestRmqScanKernel:
 
 
 # ---------------------------------------------------------------------------
+# rmq_short (two-chunk short-span scan)
+# ---------------------------------------------------------------------------
+class TestRmqShortKernel:
+    @staticmethod
+    def _short_queries(rng, n, c, m):
+        """Random queries satisfying the SHORT predicate (<= 2 chunks)."""
+        ls = rng.integers(0, n, m)
+        rs = np.minimum(ls + rng.integers(1, 2 * c + 1, m) - 1, n - 1)
+        keep = (rs // c) - (ls // c) <= 1
+        return ls[keep].astype(np.int32), rs[keep].astype(np.int32)
+
+    @pytest.mark.parametrize("n,c,qb", [
+        (100_000, 128, 64),
+        (4096, 8, 16),
+        (777, 128, 32),     # capacity > 2c but unaligned tail
+        (100, 64, 16),      # capacity < 2c -> ref fallback
+    ])
+    def test_matches_naive_and_walk(self, n, c, qb):
+        from repro.kernels.rmq_short.ops import (
+            rmq_short_index_batch_pallas,
+            rmq_short_value_batch_pallas,
+        )
+
+        rng = np.random.default_rng(n + c)
+        x = rng.random(n).astype(np.float32)
+        x[rng.integers(0, n, n // 8)] = 0.5   # ties: leftmost must win
+        h = build_hierarchy(jnp.asarray(x), make_plan(n, c=c, t=4),
+                            with_positions=True)
+        ls, rs = self._short_queries(rng, n, c, 300)
+        want = np.array([x[l : r + 1].min() for l, r in zip(ls, rs)])
+        wantp = np.array(
+            [l + np.argmin(x[l : r + 1]) for l, r in zip(ls, rs)]
+        )
+        got = np.asarray(rmq_short_value_batch_pallas(
+            h, jnp.asarray(ls), jnp.asarray(rs), qb=qb, interpret=True
+        ))
+        np.testing.assert_array_equal(got, want)
+        gotp = np.asarray(rmq_short_index_batch_pallas(
+            h, jnp.asarray(ls), jnp.asarray(rs), qb=qb, interpret=True
+        ))
+        np.testing.assert_array_equal(gotp, wantp)
+        # and bit-identical to the full-walk oracle (engine parity contract)
+        np.testing.assert_array_equal(
+            got, np.asarray(rmq_value_batch(h, jnp.asarray(ls),
+                                            jnp.asarray(rs)))
+        )
+        np.testing.assert_array_equal(
+            gotp, np.asarray(rmq_index_batch(h, jnp.asarray(ls),
+                                             jnp.asarray(rs)))
+        )
+
+    def test_index_without_positions(self):
+        """Level-0 positions are indices: works on value-only builds."""
+        from repro.kernels.rmq_short.ops import rmq_short_index_batch_pallas
+
+        rng = np.random.default_rng(9)
+        n, c = 20_000, 128
+        x = rng.random(n).astype(np.float32)
+        h = build_hierarchy(jnp.asarray(x), make_plan(n, c=c, t=2))
+        assert not h.with_positions
+        ls, rs = self._short_queries(rng, n, c, 100)
+        gotp = np.asarray(rmq_short_index_batch_pallas(
+            h, jnp.asarray(ls), jnp.asarray(rs), qb=16, interpret=True
+        ))
+        wantp = np.array(
+            [l + np.argmin(x[l : r + 1]) for l, r in zip(ls, rs)]
+        )
+        np.testing.assert_array_equal(gotp, wantp)
+
+    def test_query_batch_padding(self):
+        from repro.kernels.rmq_short.ops import rmq_short_value_batch_pallas
+
+        rng = np.random.default_rng(5)
+        n, c = 10_000, 128
+        x = rng.random(n).astype(np.float32)
+        h = build_hierarchy(jnp.asarray(x), make_plan(n, c=c, t=1))
+        ls, rs = self._short_queries(rng, n, c, 41)  # not qb-aligned
+        got = np.asarray(rmq_short_value_batch_pallas(
+            h, jnp.asarray(ls), jnp.asarray(rs), qb=16, interpret=True
+        ))
+        want = np.array([x[l : r + 1].min() for l, r in zip(ls, rs)])
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------
 class TestFlashAttentionKernel:

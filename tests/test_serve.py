@@ -57,6 +57,18 @@ class TestEvictionManager:
         v = mgr.plan_evictions(jnp.zeros(50), 50)
         assert v.shape[0] == 0
 
+    def test_tiny_non_pow2_evictable_region(self):
+        """Protected window nearly covering the context: the fitted
+        chunk size must stay a power of two (regression: evictable=5
+        used to feed c=5 into make_plan and crash)."""
+        mgr = RMQEvictionManager(budget=43, protected_window=40, c=8, t=4)
+        scores = np.ones(45, dtype=np.float32)
+        scores[2] = 0.0
+        victims = np.asarray(mgr.plan_evictions(jnp.asarray(scores), 45))
+        assert len(victims) == 2
+        assert 2 in victims.tolist()
+        assert victims.max() < 5   # evictable region is [0, 5)
+
 
 class TestStreamingEviction:
     def test_streaming_path_matches_one_shot_planner(self):
