@@ -22,6 +22,7 @@ MODULES = [
     ("update_throughput", "streaming updates vs full rebuild"),
     ("throughput", "Fig. 16 RMQ throughput by range class"),
     ("engine_throughput", "routed query engine vs monolithic walk"),
+    ("distributed_engine", "distributed routing + sharded update cost"),
     ("tuning", "Fig. 12 (c, t) tuning"),
     ("query_assignment", "Fig. 14 multi-load vs WLQ"),
     ("coalesced_access", "Fig. 4 access coalescing microbench"),

@@ -5,9 +5,18 @@ The codebase targets the modern ``jax.shard_map`` entry point (with its
 ``jax.experimental.shard_map.shard_map`` (whose equivalent knob is spelled
 ``check_rep``).  ``shard_map`` below presents the modern keyword surface on
 both.
+
+The replication-check keyword is detected by *keyword support*
+(``inspect.signature``), never by which module the function lives in:
+mid-band JAX versions promoted ``shard_map`` to ``jax.shard_map`` while it
+still only accepted ``check_rep``, so probing by attribute location would
+pass the wrong keyword there.
 """
 
 from __future__ import annotations
+
+import functools
+import inspect
 
 import jax
 
@@ -26,20 +35,51 @@ def cost_analysis_dict(compiled) -> dict:
     return dict(ca)
 
 
+def _resolve_shard_map():
+    """The installed shard_map entry point (modern location preferred)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    return _legacy
+
+
+@functools.lru_cache(maxsize=8)
+def _replication_check_kwarg(fn) -> str:
+    """The replication-check keyword ``fn`` actually accepts.
+
+    Decided by signature, NOT by where the function lives: the modern
+    ``jax.shard_map`` spelling pre-dates the ``check_vma`` rename in some
+    releases (they accept only ``check_rep``), so the two properties are
+    independent.  Falls back to ``check_vma`` when the signature is not
+    introspectable (builtins/wrappers) — the modern default.
+    """
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return "check_vma"
+    if "check_vma" in params:
+        return "check_vma"
+    if "check_rep" in params:
+        return "check_rep"
+    if any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
+    ):
+        return "check_vma"  # **kwargs: pass the modern spelling through
+    return ""  # accepts neither: omit the knob entirely
+
+
 def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=True):
     """``jax.shard_map`` on new JAX, ``jax.experimental.shard_map`` on old.
 
     Usable both as a direct call and inside ``functools.partial`` the way
-    ``jax.shard_map`` is (``f`` first, keywords after).
+    ``jax.shard_map`` is (``f`` first, keywords after).  The replication
+    check is forwarded under whichever keyword the installed version
+    supports (``check_vma`` or the older ``check_rep``).
     """
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=check_vma,
-        )
-    from jax.experimental.shard_map import shard_map as _legacy
-
-    return _legacy(
-        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_rep=check_vma,
-    )
+    impl = _resolve_shard_map()
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    kw = _replication_check_kwarg(impl)
+    if kw:
+        kwargs[kw] = check_vma
+    return impl(f, **kwargs)

@@ -13,6 +13,13 @@ Public API:
 from repro.core.api import RMQ
 from repro.core.hierarchy import Hierarchy, build_hierarchy, pos_dtype_for
 from repro.core.plan import HierarchyPlan, make_plan
+from repro.core.protocol import (
+    MutableRMQIndex,
+    RMQIndex,
+    is_distributed,
+    live_length,
+    supports_mutation,
+)
 from repro.core.query import (
     check_query_args,
     rmq_index,
@@ -23,6 +30,11 @@ from repro.core.query import (
 
 __all__ = [
     "RMQ",
+    "RMQIndex",
+    "MutableRMQIndex",
+    "is_distributed",
+    "live_length",
+    "supports_mutation",
     "Hierarchy",
     "HierarchyPlan",
     "build_hierarchy",

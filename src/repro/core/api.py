@@ -9,6 +9,11 @@ The index is not frozen at build time: ``update`` applies batched point
 mutations and ``append`` grows the array into reserved capacity, both in
 O(batch · log_c n) chunk re-reductions (see ``repro.streaming`` for the
 full streaming structure with sliding-window retirement).
+
+``RMQ`` implements the :class:`repro.core.protocol.RMQIndex` /
+``MutableRMQIndex`` protocol — the common surface shared with
+``StreamingRMQ``, ``HybridRMQ`` and ``DistributedRMQ`` that the batched
+query engine routes over.
 """
 
 from __future__ import annotations
@@ -19,19 +24,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.hierarchy import Hierarchy, build_hierarchy
+from repro.core import protocol as px
+from repro.core.hierarchy import Hierarchy
 from repro.core.plan import HierarchyPlan, make_plan
-from repro.core.query import (
-    check_query_args,
-    rmq_index_batch,
-    rmq_value_batch,
-)
+from repro.core.query import check_query_args
 
 __all__ = ["RMQ"]
-
-
-def _default_backend() -> str:
-    return "pallas" if jax.default_backend() == "tpu" else "jax"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,9 +59,7 @@ class RMQ:
         capacity: Optional[int] = None,
     ) -> "RMQ":
         """Build over ``x``; pass ``capacity > len(x)`` to allow appends."""
-        x = jnp.asarray(x)
-        if x.dtype not in (jnp.float32, jnp.bfloat16, jnp.float64):
-            x = x.astype(jnp.float32)
+        x = px.coerce_values(x)
         if plan is not None and capacity is not None:
             raise ValueError(
                 "pass capacity via make_plan(..., capacity=...) when "
@@ -71,18 +67,10 @@ class RMQ:
             )
         if plan is None:
             plan = make_plan(int(x.shape[0]), c=c, t=t, capacity=capacity)
-        if backend == "auto":
-            backend = _default_backend()
-        if backend == "pallas":
-            from repro.kernels.hierarchy_build import ops as build_ops
-
-            h = build_ops.build_hierarchy_pallas(
-                x, plan, with_positions=with_positions
-            )
-        elif backend == "jax":
-            h = build_hierarchy(x, plan, with_positions=with_positions)
-        else:
-            raise ValueError(f"unknown backend {backend!r}")
+        backend = px.resolve_backend(backend)
+        h = px.build_hierarchy_with_backend(
+            x, plan, with_positions=with_positions, backend=backend
+        )
         return RMQ(hierarchy=h, backend=backend, length=plan.n)
 
     # -- incremental maintenance ------------------------------------------
@@ -92,36 +80,23 @@ class RMQ:
         Touches one chunk per level per distinct index — O(B log_c n) —
         instead of rebuilding.
         """
-        from repro.streaming.structure import (
-            dispatch_update,
-            validate_update_batch,
-        )
-
-        idxs, vals = validate_update_batch(idxs, vals, n=self.n)
+        idxs, vals = px.validate_update_batch(idxs, vals, n=self.n)
         if idxs.shape[0] == 0:
             return self
-        h = dispatch_update(self.hierarchy, idxs, vals, self.backend)
+        h = px.dispatch_update(self.hierarchy, idxs, vals, self.backend)
         return dataclasses.replace(
             self, hierarchy=h, generation=self.generation + 1
         )
 
     def append(self, vals) -> "RMQ":
         """Grow the array with ``vals`` inside the reserved capacity."""
-        from repro.streaming.structure import dispatch_append
-
-        vals = jnp.asarray(vals)
-        if vals.ndim != 1:
-            raise ValueError(f"vals must be 1-D, got shape {vals.shape}")
+        vals = px.validate_append_batch(
+            vals, length=self.n, capacity=self.plan.capacity
+        )
         b = int(vals.shape[0])
         if b == 0:
             return self
-        cap = self.plan.capacity
-        if self.n + b > cap:
-            raise ValueError(
-                f"append of {b} overflows capacity {cap} (live length "
-                f"{self.n}); build with RMQ.build(..., capacity=...)"
-            )
-        h = dispatch_append(
+        h = px.dispatch_append(
             self.hierarchy, vals, jnp.int32(self.n), self.backend
         )
         return dataclasses.replace(
@@ -135,20 +110,16 @@ class RMQ:
     def query(self, ls, rs) -> jax.Array:
         """Batched ``RMQ_value`` over inclusive ranges."""
         ls, rs = check_query_args(ls, rs, self.n)
-        if self.backend == "pallas":
-            from repro.kernels.rmq_scan import ops as scan_ops
-
-            return scan_ops.rmq_value_batch_pallas(self.hierarchy, ls, rs)
-        return rmq_value_batch(self.hierarchy, ls, rs)
+        return px.dispatch_query_value(self.hierarchy, ls, rs, self.backend)
 
     def query_index(self, ls, rs) -> jax.Array:
         """Batched ``RMQ_index`` (leftmost minimum) over inclusive ranges."""
         ls, rs = check_query_args(ls, rs, self.n)
-        if self.backend == "pallas":
-            from repro.kernels.rmq_scan import ops as scan_ops
+        return px.dispatch_query_index(self.hierarchy, ls, rs, self.backend)
 
-            return scan_ops.rmq_index_batch_pallas(self.hierarchy, ls, rs)
-        return rmq_index_batch(self.hierarchy, ls, rs)
+    # protocol spellings (RMQIndex): same entry points, canonical names
+    query_value_batch = query
+    query_index_batch = query_index
 
     # -- adaptive batched engine -------------------------------------------
     def engine(self, **kwargs) -> "object":
@@ -162,9 +133,7 @@ class RMQ:
         ``repro.qe`` for knobs (``cache_size``, ``short_cutoff_chunks``,
         ``long_cutoff``...).
         """
-        from repro.qe import QueryEngine
-
-        return QueryEngine.for_index(self, **kwargs)
+        return px.make_engine(self, **kwargs)
 
     # -- introspection ----------------------------------------------------
     @property
@@ -175,6 +144,18 @@ class RMQ:
     @property
     def plan(self) -> HierarchyPlan:
         return self.hierarchy.plan
+
+    @property
+    def capacity(self) -> int:
+        return self.plan.capacity
+
+    @property
+    def with_positions(self) -> bool:
+        return self.hierarchy.with_positions
+
+    @property
+    def value_dtype(self):
+        return self.hierarchy.base.dtype
 
     def memory_bytes(self) -> int:
         return self.hierarchy.memory_bytes()

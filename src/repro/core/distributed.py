@@ -12,13 +12,37 @@ segment using the paper's algorithm, and a single ``pmin`` over the segment
 axis combines per-segment minima.
 
 Communication cost per batch: one all-reduce(min) of ``batch_local``
-floats over the segment axis — independent of n.  Capacity scales linearly
-with the number of devices: a 2×16×16 v5e mesh with the `model` axis as
-segment axis holds 512 GB of f32 input (n = 2^37), 64× beyond the paper's
-single-GPU ceiling.
+floats over the segment axis — independent of n.  Per-device memory
+scales down linearly with the number of segments, lifting the paper's
+single-device ceiling up to this implementation's own int32 index-space
+bound (total capacity < 2^31, enforced at build).
+
+``DistributedRMQ`` implements the full
+:class:`repro.core.protocol.MutableRMQIndex` protocol:
+
+* **streaming mutation** — :meth:`update` and :meth:`append` route each
+  batch to the owning segment under the same ``shard_map`` and re-reduce
+  shard-locally through the ``repro.streaming`` update machinery
+  (scatter + O(batch · log_c n_local) chunk re-reductions).  The batch is
+  replicated over the segment axis and every non-owned index is dropped by
+  the scatter's out-of-range semantics, so updates need **zero**
+  cross-segment communication and never rebuild.  Mutators return a
+  successor with ``generation + 1``.
+* **engine routing** — ``repro.qe``'s engine accepts a ``DistributedRMQ``
+  through the same ``attach()``/``register()`` surface as every other
+  index; spans that fall entirely inside one segment are answered
+  segment-locally (:meth:`_query_grouped` — no ``pmin`` at all), only
+  segment-crossing spans pay the all-reduce.
+
+Reserve headroom for appends with ``build(..., capacity=)``: each segment
+reserves ``ceil(capacity / S)`` +inf-padded slots and element ``g`` lives
+in segment ``g // segment_capacity`` — appends land on the tail segments.
 
 The same code path runs on the production meshes via ``shard_map`` and on
-a single CPU device (1×1 mesh) for tests.
+a single CPU device (1×1 mesh) for tests.  Query/position arithmetic is
+int32 (like the rest of the query stack), so ``build`` refuses total
+capacities at or past 2**31 — the same loud contract the batched engine
+enforces at ``attach`` — rather than letting bounds wrap silently.
 """
 
 from __future__ import annotations
@@ -32,9 +56,10 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.hierarchy import Hierarchy, build_hierarchy
+from repro.core import protocol as px
+from repro.core.hierarchy import build_hierarchy
 from repro.core.plan import HierarchyPlan, make_plan
-from repro.core.query import _rmq_batch
+from repro.core.query import _rmq_batch, check_query_args
 
 __all__ = ["DistributedRMQ"]
 
@@ -45,18 +70,193 @@ def _num_segments(mesh: Mesh, axis: str) -> int:
     return mesh.shape[axis]
 
 
+# ---------------------------------------------------------------------------
+# persistent jitted collectives, one per (mesh, geometry) — successor
+# indices produced by update/append reuse the same compiled executables
+# instead of retracing per call.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=64)
+def _build_fn(mesh: Mesh, seg: str, plan: HierarchyPlan,
+              with_positions: bool):
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=P(seg),
+        out_specs=(
+            P(seg),
+            P(seg),
+            P(seg) if with_positions else P(),
+        ),
+        check_vma=False,
+    )
+    def build_local(x_local):
+        h = build_hierarchy(x_local, plan, with_positions=with_positions)
+        pos = (
+            h.upper_pos
+            if with_positions
+            else jnp.zeros((), dtype=jnp.int32)
+        )
+        return h.base, h.upper, pos
+
+    return jax.jit(build_local)
+
+
+@functools.lru_cache(maxsize=64)
+def _allreduce_query_fn(mesh: Mesh, seg: str, qaxes: Tuple[str, ...],
+                        plan: HierarchyPlan, track: bool):
+    """The monolithic query path: every segment answers its intersection,
+    one ``pmin`` over the segment axis combines."""
+    n_local = plan.capacity
+    qspec = P(qaxes)
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(
+            P(seg),
+            P(seg),
+            P(seg) if track else P(),
+            qspec,
+            qspec,
+        ),
+        out_specs=(qspec, qspec),
+        check_vma=False,
+    )
+    def go(base_l, upper_l, pos_l, ls_l, rs_l):
+        seg_idx = jax.lax.axis_index(seg)
+        seg_start = (seg_idx * n_local).astype(jnp.int32)
+        # Intersect each global range with this segment.
+        ll = jnp.clip(ls_l - seg_start, 0, n_local - 1)
+        rr = jnp.clip(rs_l - seg_start, 0, n_local - 1)
+        nonempty = (rs_l >= seg_start) & (ls_l < seg_start + n_local)
+        m, p = _rmq_batch(
+            plan, base_l, upper_l,
+            pos_l if track else None,
+            ll, rr, track_pos=track,
+        )
+        inf = jnp.array(jnp.inf, dtype=m.dtype)
+        m = jnp.where(nonempty, m, inf)
+        if track:
+            p = jnp.where(nonempty, p + seg_start, _POS_INF_I32)
+            # Combine (value, pos) lexicographically across segments so
+            # ties stay leftmost: min on value, then min pos among argmin.
+            mins = jax.lax.pmin(m, seg)
+            p = jnp.where(m == mins, p, _POS_INF_I32)
+            p = jax.lax.pmin(p, seg)
+            return mins, p
+        return jax.lax.pmin(m, seg), jnp.zeros_like(ls_l)
+
+    return jax.jit(go)
+
+
+@functools.lru_cache(maxsize=64)
+def _grouped_query_fn(mesh: Mesh, seg: str, plan: HierarchyPlan,
+                      track: bool):
+    """Segment-local answering: the query batch arrives pre-grouped by
+    owning segment as ``(S, k)`` *local* bounds sharded over the segment
+    axis, each device answers only its own row, and no collective runs at
+    all — this is the engine's fast path for spans contained in one
+    segment."""
+    n_local = plan.capacity
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(
+            P(seg),
+            P(seg),
+            P(seg) if track else P(),
+            P(seg),
+            P(seg),
+        ),
+        out_specs=(P(seg), P(seg)),
+        check_vma=False,
+    )
+    def go(base_l, upper_l, pos_l, ls_l, rs_l):
+        seg_idx = jax.lax.axis_index(seg)
+        seg_start = (seg_idx * n_local).astype(jnp.int32)
+        m, p = _rmq_batch(
+            plan, base_l, upper_l,
+            pos_l if track else None,
+            ls_l[0], rs_l[0], track_pos=track,
+        )
+        if track:
+            p = p + seg_start  # globalize leftmost positions
+        else:
+            p = jnp.zeros_like(m, dtype=jnp.int32)
+        return m[None, :], p[None, :]
+
+    return jax.jit(go)
+
+
+@functools.lru_cache(maxsize=64)
+def _mutate_fn(mesh: Mesh, seg: str, plan: HierarchyPlan, track: bool):
+    """Sharded batched point mutation: the (idxs, vals) batch is replicated
+    over the segment axis; each device localizes the indices, the base
+    scatter drops everything outside its segment, and the streaming
+    machinery re-reduces only the touched shard-local chunks.  No
+    collective — updates are communication-free."""
+    from repro.streaming.updates import propagate_updates, scatter_base
+
+    n_local = plan.capacity
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(
+            P(seg),
+            P(seg),
+            P(seg) if track else P(),
+            P(),
+            P(),
+        ),
+        out_specs=(
+            P(seg),
+            P(seg),
+            P(seg) if track else P(),
+        ),
+        check_vma=False,
+    )
+    def go(base_l, upper_l, pos_l, idxs, vals):
+        seg_idx = jax.lax.axis_index(seg)
+        seg_start = (seg_idx * n_local).astype(idxs.dtype)
+        local = idxs - seg_start
+        # scatter_base drops local indices outside [0, n_local) — i.e.
+        # every index another segment owns; propagate_updates routes their
+        # chunk ids to an idempotent chunk-0 re-reduction, so each device
+        # does identical-shape work on its own slice only.
+        base2 = scatter_base(base_l, local, vals)
+        upper2, pos2 = propagate_updates(
+            plan, base2, upper_l, pos_l if track else None, local
+        )
+        if not track:
+            pos2 = jnp.zeros((), dtype=jnp.int32)
+        return base2, upper2, pos2
+
+    return jax.jit(go)
+
+
 @dataclasses.dataclass(frozen=True)
 class DistributedRMQ:
     """Segment-sharded RMQ index living on a device mesh."""
 
-    base: jax.Array          # (n_padded,) sharded over segment axis
-    upper: jax.Array         # (S * upper_local,) sharded over segment axis
+    base: jax.Array          # (S * segment_capacity,) sharded over seg axis
+    upper: jax.Array         # (S * upper_local,) sharded over seg axis
     upper_pos: Optional[jax.Array]
     local_plan: HierarchyPlan
     mesh: Mesh
     segment_axis: str
     query_axes: Tuple[str, ...]
-    n: int                   # logical (unpadded) length
+    n: int                   # logical (unpadded) live length
+    # Monotonic mutation counter (host-side, never traced): bumped by
+    # update/append so engine result caches invalidate correctly.
+    generation: int = 0
+
+    # protocol markers: the engine routes distributed indices through the
+    # segment-local/crossing executor instead of the span executors, and
+    # the sharded walk is pure JAX (shard_map) on every backend.
+    distributed = True
+    backend = "jax"
 
     # -- construction -----------------------------------------------------
     @staticmethod
@@ -68,41 +268,41 @@ class DistributedRMQ:
         c: int = 128,
         t: int = 64,
         with_positions: bool = False,
+        capacity: Optional[int] = None,
     ) -> "DistributedRMQ":
-        x = jnp.asarray(x)
+        """Build over ``x``; pass ``capacity > len(x)`` to allow appends.
+
+        ``capacity`` is the *global* reservation: each segment reserves
+        ``ceil(capacity / S)`` +inf-padded slots and the level geometry is
+        derived from that, so appends up to ``capacity`` reuse every jit
+        specialization (same contract as ``RMQ``/``StreamingRMQ``).
+        """
+        x = px.coerce_values(x)
         n = int(x.shape[0])
         s = _num_segments(mesh, segment_axis)
-        n_local = -(-n // s)
-        n_padded = n_local * s
-        if n_padded != n:
-            x = jnp.pad(x, (0, n_padded - n), constant_values=jnp.inf)
-        local_plan = make_plan(n_local, c=c, t=t)
+        if capacity is None:
+            capacity = n
+        if capacity < n:
+            raise ValueError(f"capacity {capacity} < n {n}")
+        cap_local = -(-capacity // s)
+        cap_padded = cap_local * s
+        # Bounds, positions and update indices all flow through int32
+        # (here and in the whole query stack); refuse loudly rather than
+        # wrap — mirrors the engine's attach-time guard.
+        if cap_padded >= 2**31:
+            raise ValueError(
+                f"total capacity {cap_padded} (= {s} segments x "
+                f"{cap_local}) exceeds the int32 query index space; "
+                "DistributedRMQ supports total capacity < 2**31"
+            )
+        if cap_padded != n:
+            x = jnp.pad(x, (0, cap_padded - n), constant_values=jnp.inf)
+        local_plan = make_plan(cap_local, c=c, t=t)
 
         x = jax.device_put(x, NamedSharding(mesh, P(segment_axis)))
-
-        @functools.partial(
-            shard_map,
-            mesh=mesh,
-            in_specs=P(segment_axis),
-            out_specs=(
-                P(segment_axis),
-                P(segment_axis),
-                P(segment_axis) if with_positions else P(),
-            ),
-            check_vma=False,
-        )
-        def build_local(x_local):
-            h = build_hierarchy(
-                x_local, local_plan, with_positions=with_positions
-            )
-            pos = (
-                h.upper_pos
-                if with_positions
-                else jnp.zeros((), dtype=jnp.int32)
-            )
-            return h.base, h.upper, pos
-
-        base, upper, pos = jax.jit(build_local)(x)
+        base, upper, pos = _build_fn(
+            mesh, segment_axis, local_plan, with_positions
+        )(x)
         return DistributedRMQ(
             base=base,
             upper=upper,
@@ -112,6 +312,62 @@ class DistributedRMQ:
             segment_axis=segment_axis,
             query_axes=tuple(query_axes),
             n=n,
+        )
+
+    # -- incremental maintenance ------------------------------------------
+    def _mutate(self, idxs, vals) -> Tuple[jax.Array, ...]:
+        """Run the sharded scatter + shard-local re-reduction."""
+        track = self.with_positions
+        repl = NamedSharding(self.mesh, P())
+        idxs = jax.device_put(jnp.asarray(idxs, jnp.int32), repl)
+        vals = jax.device_put(jnp.asarray(vals), repl)
+        pos_in = (
+            self.upper_pos if track else jnp.zeros((), dtype=jnp.int32)
+        )
+        return _mutate_fn(
+            self.mesh, self.segment_axis, self.local_plan, track
+        )(self.base, self.upper, pos_in, idxs, vals)
+
+    def update(self, idxs, vals) -> "DistributedRMQ":
+        """Batched point updates ``a[idxs] = vals`` (last wins on dups).
+
+        Global indices; each lands on its owning segment and re-reduces
+        O(log_c n_local) shard-local chunks.  No cross-segment traffic.
+        """
+        idxs, vals = px.validate_update_batch(idxs, vals, n=self.n)
+        if idxs.shape[0] == 0:
+            return self
+        base, upper, pos = self._mutate(idxs, vals)
+        return dataclasses.replace(
+            self,
+            base=base,
+            upper=upper,
+            upper_pos=pos if self.with_positions else None,
+            generation=self.generation + 1,
+        )
+
+    def append(self, vals) -> "DistributedRMQ":
+        """Grow the array with ``vals`` inside the reserved capacity.
+
+        Appends are point updates over the +inf-reserved tail: positions
+        ``[n, n + B)`` are routed to their owning segment(s) — a batch may
+        straddle a segment boundary — and repaired shard-locally.
+        """
+        vals = px.validate_append_batch(
+            vals, length=self.n, capacity=self.capacity
+        )
+        b = int(vals.shape[0])
+        if b == 0:
+            return self
+        idxs = self.n + jnp.arange(b, dtype=jnp.int32)
+        base, upper, pos = self._mutate(idxs, vals)
+        return dataclasses.replace(
+            self,
+            base=base,
+            upper=upper,
+            upper_pos=pos if self.with_positions else None,
+            n=self.n + b,
+            generation=self.generation + 1,
         )
 
     # -- queries ----------------------------------------------------------
@@ -124,64 +380,123 @@ class DistributedRMQ:
             raise ValueError("built without positions")
         return self._query(ls, rs, track_pos=True)[1]
 
+    # protocol spellings (RMQIndex): same entry points, canonical names
+    query_value_batch = query
+    query_index_batch = query_index
+
     def _query(self, ls, rs, track_pos: bool):
+        ls, rs = check_query_args(ls, rs, self.n)
         mesh = self.mesh
-        seg = self.segment_axis
         qspec = P(self.query_axes)
         ls = jnp.asarray(ls, dtype=jnp.int32)
         rs = jnp.asarray(rs, dtype=jnp.int32)
+        # The batch is sharded over the query axes, so its size must
+        # divide evenly; pad with (0, 0) sentinels (valid on any
+        # non-empty array) and slice the results back.
+        m = int(ls.shape[0])
+        q = 1
+        for a in self.query_axes:
+            q *= mesh.shape[a]
+        pad = (-m) % q
+        if pad:
+            ls = jnp.pad(ls, (0, pad))
+            rs = jnp.pad(rs, (0, pad))
         ls = jax.device_put(ls, NamedSharding(mesh, qspec))
         rs = jax.device_put(rs, NamedSharding(mesh, qspec))
-        n_local = self.local_plan.n
-        plan = self.local_plan
         pos_in = (
             self.upper_pos
             if track_pos
             else jnp.zeros((0,), dtype=jnp.int32)
         )
-
-        @functools.partial(
-            shard_map,
-            mesh=mesh,
-            in_specs=(
-                P(seg),
-                P(seg),
-                P(seg) if track_pos else P(),
-                qspec,
-                qspec,
-            ),
-            out_specs=(qspec, qspec),
-            check_vma=False,
+        fn = _allreduce_query_fn(
+            mesh, self.segment_axis, self.query_axes, self.local_plan,
+            track_pos,
         )
-        def go(base_l, upper_l, pos_l, ls_l, rs_l):
-            seg_idx = jax.lax.axis_index(seg)
-            seg_start = (seg_idx * n_local).astype(jnp.int32)
-            # Intersect each global range with this segment.
-            ll = jnp.clip(ls_l - seg_start, 0, n_local - 1)
-            rr = jnp.clip(rs_l - seg_start, 0, n_local - 1)
-            nonempty = (rs_l >= seg_start) & (ls_l < seg_start + n_local)
-            m, p = _rmq_batch(
-                plan, base_l, upper_l,
-                pos_l if track_pos else None,
-                ll, rr, track_pos=track_pos,
-            )
-            inf = jnp.array(jnp.inf, dtype=m.dtype)
-            m = jnp.where(nonempty, m, inf)
-            if track_pos:
-                p = jnp.where(nonempty, p + seg_start, _POS_INF_I32)
-                # Combine (value, pos) lexicographically across segments so
-                # ties stay leftmost: min on value, then min pos among argmin.
-                mins = jax.lax.pmin(m, seg)
-                p = jnp.where(m == mins, p, _POS_INF_I32)
-                p = jax.lax.pmin(p, seg)
-                return mins, p
-            return jax.lax.pmin(m, seg), jnp.zeros_like(ls_l)
+        vals, poss = fn(self.base, self.upper, pos_in, ls, rs)
+        if pad:
+            vals, poss = vals[:m], poss[:m]
+        return vals, poss
 
-        return jax.jit(go)(self.base, self.upper, pos_in, ls, rs)
+    def _query_grouped(self, ls_local, rs_local, track_pos: bool):
+        """Answer pre-grouped segment-local queries without the all-reduce.
+
+        ``ls_local``/``rs_local`` are ``(S, k)`` arrays of *segment-local*
+        inclusive bounds — row ``i`` holds only queries whose global range
+        falls entirely inside segment ``i`` (pad unused slots with
+        ``(0, 0)``; their results are garbage to be dropped by the
+        caller).  Returns ``(S, k)`` values and *global* leftmost
+        positions.  This is the engine's fast path: zero cross-device
+        communication.
+        """
+        if track_pos and self.upper_pos is None:
+            raise ValueError("built without positions")
+        mesh = self.mesh
+        seg = self.segment_axis
+        s = self.num_segments
+        ls_local = jnp.asarray(ls_local, jnp.int32)
+        rs_local = jnp.asarray(rs_local, jnp.int32)
+        if ls_local.ndim != 2 or ls_local.shape[0] != s:
+            raise ValueError(
+                f"grouped bounds must be (num_segments={s}, k), got "
+                f"{ls_local.shape}"
+            )
+        sh = NamedSharding(mesh, P(seg))
+        ls_local = jax.device_put(ls_local, sh)
+        rs_local = jax.device_put(rs_local, sh)
+        pos_in = (
+            self.upper_pos
+            if track_pos
+            else jnp.zeros((0,), dtype=jnp.int32)
+        )
+        fn = _grouped_query_fn(mesh, seg, self.local_plan, track_pos)
+        return fn(self.base, self.upper, pos_in, ls_local, rs_local)
+
+    # -- adaptive batched engine -------------------------------------------
+    def engine(self, **kwargs):
+        """A :class:`repro.qe.QueryEngine` routed over this sharded index.
+
+        Spans contained in one segment are answered segment-locally (no
+        all-reduce); crossing spans take the ``pmin`` path.  Results are
+        bit-identical to :meth:`query`/:meth:`query_index`.  Re-attach
+        after ``update``/``append`` (successors bump ``generation``).
+        """
+        return px.make_engine(self, **kwargs)
 
     # -- introspection ------------------------------------------------------
+    @property
+    def plan(self) -> HierarchyPlan:
+        """The *per-segment* plan (see ``capacity`` for the global space)."""
+        return self.local_plan
+
+    @property
+    def length(self) -> int:
+        return self.n
+
+    @property
+    def num_segments(self) -> int:
+        return _num_segments(self.mesh, self.segment_axis)
+
+    @property
+    def segment_capacity(self) -> int:
+        """Slots per segment; element ``g`` lives in segment
+        ``g // segment_capacity``."""
+        return self.local_plan.capacity
+
+    @property
+    def capacity(self) -> int:
+        """Total reserved (appendable) index space across segments."""
+        return self.segment_capacity * self.num_segments
+
+    @property
+    def with_positions(self) -> bool:
+        return self.upper_pos is not None
+
+    @property
+    def value_dtype(self):
+        return self.base.dtype
+
     def memory_bytes_per_device(self) -> int:
-        s = _num_segments(self.mesh, self.segment_axis)
+        s = self.num_segments
         total = self.base.size * self.base.dtype.itemsize
         total += self.upper.size * self.upper.dtype.itemsize
         if self.upper_pos is not None:

@@ -63,7 +63,9 @@ class HybridRMQ:
         """Note the default t is 16x the scan version's: the O(1) top
         makes large tops free at query time (paper §4.5 implication (1)),
         which in turn removes one hierarchy level."""
-        x = jnp.asarray(x, jnp.float32)
+        from repro.core.protocol import coerce_values
+
+        x = coerce_values(x)
         plan = make_plan(int(x.shape[0]), c=c, t=t)
         h = build_hierarchy(x, plan, with_positions=with_positions)
         return HybridRMQ.from_hierarchy(h)
@@ -96,9 +98,35 @@ class HybridRMQ:
             hierarchy=h, top_table=SparseTable.build(top, positions=top_pos)
         )
 
+    # -- protocol surface (repro.core.protocol.RMQIndex) -------------------
+    # The hybrid is read-only (no update/append): a point update could move
+    # the top level's minima, invalidating sparse-table rows wholesale.
+    # Mutating workloads should hold a mutable index and let the engine
+    # re-derive the hybrid top per generation (LongSpanExecutor does).
+    backend = "jax"  # the hybrid walk is pure JAX on every backend
+    generation = 0
+
     @property
     def plan(self) -> HierarchyPlan:
         return self.hierarchy.plan
+
+    @property
+    def length(self) -> int:
+        return self.plan.n
+
+    @property
+    def capacity(self) -> int:
+        return self.plan.capacity
+
+    @property
+    def value_dtype(self):
+        return self.hierarchy.base.dtype
+
+    def engine(self, **kwargs):
+        """A span-routed :class:`repro.qe.QueryEngine` over this index."""
+        from repro.core.protocol import make_engine
+
+        return make_engine(self, **kwargs)
 
     @property
     def with_positions(self) -> bool:
@@ -134,6 +162,10 @@ class HybridRMQ:
             self.top_table.pos, ls, rs, track_pos=True,
         )
         return p
+
+    # protocol spellings (RMQIndex): same entry points, canonical names
+    query_value_batch = query
+    query_index_batch = query_index
 
 
 @functools.partial(jax.jit, static_argnames=("plan", "track_pos"))

@@ -1,0 +1,324 @@
+"""The common index protocol every RMQ implementation speaks.
+
+Four index implementations grew up around the paper's hierarchy —
+:class:`repro.core.api.RMQ` (the facade), :class:`repro.streaming.StreamingRMQ`
+(sliding windows), :class:`repro.core.hybrid.HybridRMQ` (O(1) sparse-table
+top), and :class:`repro.core.distributed.DistributedRMQ` (segment-sharded
+across a mesh) — each initially with its own private query/validation/
+backend-selection plumbing.  This module is the contract that unifies them
+so the layers above (``repro.qe``'s engine/service, ``repro.serve``) route
+over *capabilities*, not concrete types:
+
+* :class:`RMQIndex` — the read surface: static ``plan`` geometry, live
+  ``length``, a monotonic ``generation`` counter (the cache-invalidation
+  key), and the two batched query entry points
+  ``query_value_batch`` / ``query_index_batch`` (aliases of the historical
+  ``query`` / ``query_index`` names, which remain).
+* :class:`MutableRMQIndex` — the optional mutation surface: batched point
+  ``update`` and ``append`` into reserved capacity, both returning a
+  *successor* index with ``generation + 1`` (every implementation is
+  pure-functional).  Probe with :func:`supports_mutation`.
+* shared helpers — the previously-duplicated plumbing, now in one place:
+  backend resolution (:func:`resolve_backend`), input dtype coercion
+  (:func:`coerce_values`), build/query/update backend dispatch
+  (:func:`build_hierarchy_with_backend`, :func:`dispatch_query_value`,
+  :func:`dispatch_query_index`, :func:`dispatch_update`,
+  :func:`dispatch_append`) and batch validation
+  (:func:`validate_update_batch`, :func:`validate_append_batch`).
+
+Which implementation to pick (see README "Choosing an index"):
+
+=================  ==========================================================
+``RMQ``            default: build + query + incremental update/append.
+``StreamingRMQ``   online arrays: adds sliding-window ``retire``.
+``HybridRMQ``      long-span-heavy read-only workloads (O(1) top); usually
+                   reached *through* the engine's long-span route instead.
+``DistributedRMQ`` arrays past one device's memory: segment-sharded, same
+                   protocol (including update/append), engine-routable.
+=================  ==========================================================
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hierarchy import Hierarchy, build_hierarchy
+from repro.core.plan import HierarchyPlan
+from repro.core.query import _debug_checks_enabled
+
+__all__ = [
+    "RMQIndex",
+    "MutableRMQIndex",
+    "default_backend",
+    "resolve_backend",
+    "coerce_values",
+    "build_hierarchy_with_backend",
+    "dispatch_query_value",
+    "dispatch_query_index",
+    "dispatch_update",
+    "dispatch_append",
+    "validate_update_batch",
+    "validate_append_batch",
+    "live_length",
+    "is_distributed",
+    "supports_mutation",
+    "make_engine",
+]
+
+_VALUE_DTYPES = (jnp.float32, jnp.bfloat16, jnp.float64)
+
+
+# ---------------------------------------------------------------------------
+# the protocol
+# ---------------------------------------------------------------------------
+@runtime_checkable
+class RMQIndex(Protocol):
+    """Read surface shared by every RMQ index implementation.
+
+    ``plan`` is the static level geometry (for the sharded index: the
+    *per-segment* plan — use ``capacity`` for the total addressable index
+    space).  ``length`` is the live element count (may be ``None`` on
+    implementations whose live length equals the build length; use
+    :func:`live_length` to normalize).  ``generation`` increments on every
+    mutation, keying engine result caches to the array version.
+    """
+
+    backend: str
+
+    @property
+    def plan(self) -> HierarchyPlan: ...
+
+    @property
+    def length(self) -> Optional[int]: ...
+
+    @property
+    def generation(self) -> int: ...
+
+    @property
+    def value_dtype(self): ...
+
+    @property
+    def capacity(self) -> int: ...
+
+    @property
+    def with_positions(self) -> bool: ...
+
+    def query_value_batch(self, ls, rs) -> jax.Array: ...
+
+    def query_index_batch(self, ls, rs) -> jax.Array: ...
+
+
+@runtime_checkable
+class MutableRMQIndex(RMQIndex, Protocol):
+    """Optional mutation surface: pure-functional batched maintenance.
+
+    Both mutators return a *successor* index sharing unmodified buffers,
+    with ``generation`` bumped by one; the receiver is unchanged.  Cost is
+    O(batch · log_c n) chunk re-reductions — never a rebuild.
+    """
+
+    def update(self, idxs, vals) -> "MutableRMQIndex": ...
+
+    def append(self, vals) -> "MutableRMQIndex": ...
+
+
+def supports_mutation(index) -> bool:
+    """Does ``index`` expose the ``update``/``append`` capability?"""
+    return isinstance(index, MutableRMQIndex)
+
+
+def is_distributed(index) -> bool:
+    """Is ``index`` a mesh-sharded implementation (no local hierarchy)?
+
+    Distributed indices answer queries through sharded per-segment
+    hierarchies; the engine routes them through the distributed executor
+    (segment-local fast path + all-reduce for crossing spans) instead of
+    the single-hierarchy span executors.
+    """
+    return bool(getattr(index, "distributed", False))
+
+
+def live_length(index) -> int:
+    """The live element count, normalized across implementations.
+
+    ``RMQ`` permits ``length=None`` meaning "the build length" (on
+    directly-constructed instances; ``RMQ.build`` always sets it), so a
+    plain ``.length`` read is not universally an int — use this helper.
+    """
+    length = getattr(index, "length", None)
+    if length is not None:
+        return int(length)
+    n = getattr(index, "n", None)
+    if n is not None:
+        return int(n)
+    return int(index.plan.n)
+
+
+# ---------------------------------------------------------------------------
+# backend selection + input coercion (previously duplicated per facade)
+# ---------------------------------------------------------------------------
+def default_backend() -> str:
+    """Pallas kernels on TPU, the pure-JAX reference elsewhere."""
+    return "pallas" if jax.default_backend() == "tpu" else "jax"
+
+
+def resolve_backend(backend: str) -> str:
+    """Normalize a user-facing backend name (``"auto"`` included)."""
+    if backend == "auto":
+        return default_backend()
+    if backend not in ("jax", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    return backend
+
+
+def coerce_values(x) -> jax.Array:
+    """The input array as a supported 1-D float dtype."""
+    x = jnp.asarray(x)
+    if x.ndim != 1:
+        raise ValueError(f"input must be rank-1, got shape {x.shape}")
+    if x.dtype not in _VALUE_DTYPES:
+        x = x.astype(jnp.float32)
+    return x
+
+
+def build_hierarchy_with_backend(
+    x: jax.Array,
+    plan: HierarchyPlan,
+    with_positions: bool,
+    backend: str,
+) -> Hierarchy:
+    """Backend dispatch for hierarchy construction."""
+    if backend == "pallas":
+        from repro.kernels.hierarchy_build import ops as build_ops
+
+        return build_ops.build_hierarchy_pallas(
+            x, plan, with_positions=with_positions
+        )
+    if backend == "jax":
+        return build_hierarchy(x, plan, with_positions=with_positions)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+# ---------------------------------------------------------------------------
+# query dispatch (previously duplicated in api.py / structure.py)
+# ---------------------------------------------------------------------------
+def dispatch_query_value(h: Hierarchy, ls, rs, backend: str) -> jax.Array:
+    """Batched ``RMQ_value`` through the chosen backend."""
+    if backend == "pallas":
+        from repro.kernels.rmq_scan import ops as scan_ops
+
+        return scan_ops.rmq_value_batch_pallas(h, ls, rs)
+    from repro.core.query import rmq_value_batch
+
+    return rmq_value_batch(h, ls, rs)
+
+
+def dispatch_query_index(h: Hierarchy, ls, rs, backend: str) -> jax.Array:
+    """Batched ``RMQ_index`` (leftmost minimum) through the chosen backend."""
+    if backend == "pallas":
+        from repro.kernels.rmq_scan import ops as scan_ops
+
+        return scan_ops.rmq_index_batch_pallas(h, ls, rs)
+    from repro.core.query import rmq_index_batch
+
+    return rmq_index_batch(h, ls, rs)
+
+
+# ---------------------------------------------------------------------------
+# mutation dispatch + validation (shared by all mutable implementations)
+# ---------------------------------------------------------------------------
+def dispatch_update(h: Hierarchy, idxs, vals, backend: str) -> Hierarchy:
+    """Backend dispatch for batched point updates."""
+    if backend == "pallas":
+        from repro.kernels.hierarchy_update import ops as upd_ops
+
+        return upd_ops.update_hierarchy_pallas(h, idxs, vals)
+    from repro.streaming import updates as U
+
+    return U.update_hierarchy(h, idxs, vals)
+
+
+def dispatch_append(h: Hierarchy, vals, start, backend: str) -> Hierarchy:
+    """Backend dispatch for appends at live offset ``start``."""
+    if backend == "pallas":
+        from repro.kernels.hierarchy_update import ops as upd_ops
+
+        return upd_ops.append_hierarchy_pallas(h, vals, start)
+    from repro.streaming import updates as U
+
+    return U.append_hierarchy(h, vals, start)
+
+
+def validate_update_batch(idxs, vals, n: Optional[int] = None):
+    """Shared idxs/vals checking for every ``update`` entry point.
+
+    Out-of-range indices are dropped silently in normal operation (a
+    jit-friendly contract); under ``REPRO_RMQ_DEBUG=1`` concrete batches
+    are value-checked against the live length ``n`` so indexing bugs
+    fail loudly instead of as stale minima — mirroring query validation.
+    """
+    idxs = jnp.asarray(idxs)
+    vals = jnp.asarray(vals)
+    if idxs.ndim != 1 or idxs.shape != vals.shape:
+        raise ValueError(
+            f"idxs/vals must be matching 1-D batches, got "
+            f"{idxs.shape} vs {vals.shape}"
+        )
+    if not jnp.issubdtype(idxs.dtype, jnp.integer):
+        raise TypeError(f"idxs must be integers, got {idxs.dtype}")
+    if (
+        n is not None
+        and _debug_checks_enabled()
+        and not isinstance(idxs, jax.core.Tracer)
+    ):
+        import numpy as np
+
+        i_np = np.asarray(idxs)
+        bad = (i_np < 0) | (i_np >= n)
+        if bad.any():
+            j = int(np.argmax(bad))
+            raise ValueError(
+                f"update index {j} = {i_np.flat[j]} out of range for "
+                f"live length {n}"
+            )
+    return idxs, vals
+
+
+def validate_append_batch(vals, length: int, capacity: int) -> jax.Array:
+    """Shared vals checking for every ``append`` entry point.
+
+    Rejects non-1-D batches and appends that would overflow the reserved
+    capacity (the level geometry is capacity-derived, so growing past it
+    would need a new plan — i.e. a rebuild, which ``append`` must never
+    silently do).
+    """
+    vals = jnp.asarray(vals)
+    if vals.ndim != 1:
+        raise ValueError(f"vals must be 1-D, got shape {vals.shape}")
+    b = int(vals.shape[0])
+    if length + b > capacity:
+        raise ValueError(
+            f"append of {b} overflows capacity {capacity} (live length "
+            f"{length}); build with a larger capacity reservation"
+        )
+    return vals
+
+
+# ---------------------------------------------------------------------------
+# engine hook (shared by every implementation's .engine())
+# ---------------------------------------------------------------------------
+def make_engine(index, **kwargs):
+    """A span-routed :class:`repro.qe.QueryEngine` over ``index``.
+
+    The engine classifies queries, executes each class on the cheapest
+    applicable path (for distributed indices: segment-local answering
+    without the all-reduce where possible), dedups duplicates, and caches
+    results keyed by ``generation`` — re-attach (``engine.attach``) after
+    any mutation, which returns a *successor* index.
+    """
+    from repro.qe import QueryEngine
+
+    return QueryEngine.for_index(index, **kwargs)

@@ -156,16 +156,22 @@ def train_loop(args) -> dict:
         # sys.exc_info() would report the writer error itself).
         unwinding = sys.exc_info()[0] is not None
         try:
-            ckpt.wait()
-        except Exception as werr:  # noqa: BLE001
-            # While unwinding another exception, a buffered writer error
-            # must not mask it (the restart loop keys on the original);
-            # on a normal exit it IS the failure and must propagate.
-            if not unwinding:
-                raise
-            print(f"[train] checkpoint writer error during teardown: "
-                  f"{werr}")
-        ckpt.close()
+            try:
+                ckpt.wait()
+            except Exception as werr:  # noqa: BLE001
+                # While unwinding another exception, a buffered writer
+                # error must not mask it (the restart loop keys on the
+                # original); on a normal exit it IS the failure and must
+                # propagate.
+                if not unwinding:
+                    raise
+                print(f"[train] checkpoint writer error during teardown: "
+                      f"{werr}")
+        finally:
+            # The async checkpointer must always be shut down — including
+            # when wait() raised a writer error on a normal exit — or its
+            # executor threads outlive the (restarted) loop.
+            ckpt.close()
     return {"losses": losses, "final_step": tc.total_steps}
 
 

@@ -18,21 +18,29 @@ that observation into an execution layer:
   by ``(op, index generation, l, r)``; ``RMQ.update``/``append`` bump
   the generation so streaming mutations invalidate correctly;
 * :class:`QueryEngine` — ties the three together for one index
-  (``RMQ.engine()`` on the facade);
+  (``RMQ.engine()`` on the facade); any
+  :class:`repro.core.protocol.RMQIndex` attaches, including the
+  mesh-sharded ``DistributedRMQ``, whose batches route through
+  :class:`DistributedExecutor` instead (segment-contained spans answered
+  shard-locally with no all-reduce, crossing spans via ``pmin``);
 * :class:`QueryService` — a multi-index registry with a micro-batching
   admission queue that coalesces small requests into one padded
   execution with per-request scatter-back.
 """
 
 from repro.qe.cache import ResultCache
+from repro.qe.distributed import CROSSING, SEG_LOCAL, DistributedExecutor
 from repro.qe.engine import QueryEngine
 from repro.qe.planner import LONG, MID, SHORT, Bucket, QueryPlanner
 from repro.qe.service import QueryService
 
 __all__ = [
     "Bucket",
+    "CROSSING",
+    "DistributedExecutor",
     "LONG",
     "MID",
+    "SEG_LOCAL",
     "SHORT",
     "QueryEngine",
     "QueryPlanner",

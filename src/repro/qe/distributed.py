@@ -1,0 +1,140 @@
+"""Distributed executor: segment-aware routing for sharded indices.
+
+A :class:`repro.core.distributed.DistributedRMQ` has no single local
+hierarchy, so the span executors (short/mid/long) don't apply.  What *does*
+transfer is the engine's core observation — different queries want
+different execution — with a sharding-native routing predicate:
+
+* **seg_local** — the span falls entirely inside one segment
+  (``l // segment_capacity == r // segment_capacity``).  The batch is
+  grouped by owning segment on the host, localized, packed into one
+  ``(S, k)`` array sharded over the segment axis, and each device answers
+  only its own row — **no all-reduce at all** (zero cross-device
+  communication, vs. one ``pmin`` per batch on the monolithic path).
+  Short and mid spans land here with probability ``≈ 1 - span/seg_cap``.
+* **crossing** — the span straddles a segment boundary; routed to the
+  monolithic all-reduce path (``DistributedRMQ._query``), which is the
+  engine's oracle.
+
+Both paths produce values and leftmost-tie positions bit-identical to
+``DistributedRMQ.query``/``query_index``.  Shapes are padded to powers of
+two (``(0, 0)`` sentinel queries, dropped at scatter-back) so the set of
+jit specializations stays bounded as batch composition shifts — the same
+discipline as the planner's buckets.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.qe.executors import INDEX
+from repro.qe.planner import _next_pow2
+
+__all__ = ["SEG_LOCAL", "CROSSING", "DistributedExecutor"]
+
+SEG_LOCAL = "seg_local"
+CROSSING = "crossing"
+
+
+class DistributedExecutor:
+    """Routes one deduped miss batch over a segment-sharded index."""
+
+    def __init__(self, min_bucket: int = 16, max_bucket: int = 4096):
+        self.min_bucket = min_bucket
+        self.max_bucket = max_bucket
+        self.calls = 0
+        self.queries = 0
+        self.class_counts: Dict[str, int] = {SEG_LOCAL: 0, CROSSING: 0}
+
+    def run(self, index, ls: np.ndarray, rs: np.ndarray,
+            op: str) -> np.ndarray:
+        """Answer ``(ls, rs)`` (np.int32, deduped) against ``index``."""
+        self.calls += 1
+        m = ls.shape[0]
+        self.queries += m
+        cap = index.segment_capacity
+        out_dtype = np.int32 if op == INDEX else np.dtype(index.value_dtype)
+        out = np.empty((m,), out_dtype)
+        owner = ls // cap
+        local = owner == (rs // cap)
+        self.class_counts[SEG_LOCAL] += int(local.sum())
+        self.class_counts[CROSSING] += int(m - local.sum())
+
+        cross_idx = np.nonzero(~local)[0]
+        if cross_idx.shape[0]:
+            out[cross_idx] = self._run_crossing(
+                index, ls[cross_idx], rs[cross_idx], op, out_dtype
+            )
+        local_idx = np.nonzero(local)[0]
+        if local_idx.shape[0]:
+            out[local_idx] = self._run_seg_local(
+                index, ls[local_idx], rs[local_idx], owner[local_idx], op,
+                out_dtype,
+            )
+        return out
+
+    # -- crossing spans: the pmin oracle, padded to bounded shapes --------
+    def _run_crossing(self, index, ls, rs, op, out_dtype) -> np.ndarray:
+        k = ls.shape[0]
+        shape = min(
+            max(_next_pow2(k), self.min_bucket), self.max_bucket
+        )
+        res = np.empty((k,), out_dtype)
+        for lo in range(0, k, shape):
+            cnt = min(shape, k - lo)
+            pl = np.zeros((shape,), np.int32)
+            pr = np.zeros((shape,), np.int32)
+            pl[:cnt] = ls[lo : lo + cnt]
+            pr[:cnt] = rs[lo : lo + cnt]
+            r = index.query_index(pl, pr) if op == INDEX \
+                else index.query(pl, pr)
+            res[lo : lo + cnt] = np.asarray(r)[:cnt]
+        return res
+
+    # -- contained spans: grouped per owner, answered without collectives -
+    def _run_seg_local(self, index, ls, rs, owner, op,
+                       out_dtype) -> np.ndarray:
+        cap = index.segment_capacity
+        s = index.num_segments
+        # stable sort by owner -> contiguous per-segment runs; row_pos is
+        # each query's slot inside its segment's row
+        order = np.argsort(owner, kind="stable")
+        so = owner[order]
+        counts = np.bincount(so, minlength=s)
+        starts = np.cumsum(counts) - counts
+        row_pos = np.arange(so.shape[0]) - starts[so]
+        lloc = ls[order] - so.astype(np.int32) * cap
+        rloc = rs[order] - so.astype(np.int32) * cap
+        picked = np.empty((so.shape[0],), out_dtype)
+        # row width is bounded at max_bucket (same discipline as the
+        # planner's buckets): a skewed batch runs in several rounds of
+        # already-compiled shapes instead of tracing one giant one
+        for lo in range(0, int(counts.max()), self.max_bucket):
+            sel = (row_pos >= lo) & (row_pos < lo + self.max_bucket)
+            rp = row_pos[sel] - lo
+            k = max(_next_pow2(int(rp.max()) + 1), self.min_bucket)
+            gl = np.zeros((s, k), np.int32)
+            gr = np.zeros((s, k), np.int32)
+            gl[so[sel], rp] = lloc[sel]
+            gr[so[sel], rp] = rloc[sel]
+            vals, poss = index._query_grouped(
+                gl, gr, track_pos=(op == INDEX)
+            )
+            picked[sel] = np.asarray(
+                poss if op == INDEX else vals
+            )[so[sel], rp].astype(out_dtype, copy=False)
+        res = np.empty((ls.shape[0],), out_dtype)
+        res[order] = picked
+        return res
+
+    def stats(self) -> dict:
+        return {
+            "calls": self.calls,
+            "queries": self.queries,
+            "class_counts": dict(self.class_counts),
+        }
+
+    def invalidate(self) -> None:
+        """No per-index state (the sharded fns are cached by geometry)."""

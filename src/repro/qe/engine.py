@@ -1,22 +1,28 @@
 """``QueryEngine`` — span-routed, deduped, cached batched RMQ execution.
 
-One engine serves one index (an :class:`repro.core.api.RMQ`, a
-:class:`repro.streaming.StreamingRMQ`, or anything exposing
-``hierarchy`` / ``backend`` / a live length / ``generation``).  The
-engine is a *host-side* orchestration layer: classification, packing,
-dedup and cache bookkeeping run in numpy; only the packed buckets touch
-the device, through persistent jitted callables (see
-:mod:`repro.qe.executors`).
+One engine serves one index — anything implementing the
+:class:`repro.core.protocol.RMQIndex` protocol: ``RMQ``, ``StreamingRMQ``,
+``HybridRMQ``, or the mesh-sharded ``DistributedRMQ``.  The engine is a
+*host-side* orchestration layer: classification, packing, dedup and cache
+bookkeeping run in numpy; only the packed buckets touch the device,
+through persistent jitted callables (see :mod:`repro.qe.executors`).
 
 Execution pipeline per batch::
 
     validate -> dedup (np.unique) -> LRU lookup -> planner buckets
              -> per-class executors -> scatter-back -> LRU insert
 
+For single-hierarchy indices the miss classes are short / mid / long span
+buckets; for distributed indices the planner is replaced by the
+segment-aware :class:`repro.qe.distributed.DistributedExecutor`
+(segment-contained spans answered shard-locally with no all-reduce,
+crossing spans through the ``pmin`` path).
+
 Results are bit-identical — values *and* leftmost-tie positions — to
-the monolithic ``rmq_value_batch`` / ``rmq_index_batch`` oracles: every
-routed path computes the exact lexicographic (value, position) minimum
-over the same range, just over a cheaper decomposition.
+the index's monolithic oracles (``rmq_value_batch``/``rmq_index_batch``,
+or ``DistributedRMQ.query``/``query_index``): every routed path computes
+the exact lexicographic (value, position) minimum over the same range,
+just over a cheaper decomposition.
 
 Mutation protocol: the index is pure-functional, so ``update``/
 ``append`` return a *successor* with ``generation + 1``.  Call
@@ -34,8 +40,10 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.protocol import is_distributed, live_length
 from repro.core.query import check_query_args
 from repro.qe.cache import ResultCache
+from repro.qe.distributed import DistributedExecutor
 from repro.qe.executors import (
     INDEX,
     VALUE,
@@ -46,13 +54,6 @@ from repro.qe.executors import (
 from repro.qe.planner import LONG, MID, SHORT, QueryPlanner
 
 __all__ = ["QueryEngine"]
-
-
-def _live_length(index) -> int:
-    n = getattr(index, "n", None)
-    if isinstance(n, int):
-        return n
-    return int(index.length)
 
 
 class QueryEngine:
@@ -87,6 +88,7 @@ class QueryEngine:
         self.class_counts = {SHORT: 0, MID: 0, LONG: 0}
         self._index = None
         self.planner: Optional[QueryPlanner] = None
+        self.distributed: Optional[DistributedExecutor] = None
         self.attach(index)
 
     @classmethod
@@ -114,61 +116,76 @@ class QueryEngine:
         if reset_cache is None:
             reset_cache = not (
                 prev is not None
-                and index.hierarchy.plan == prev.hierarchy.plan
+                and index.plan == prev.plan
                 and getattr(index, "generation", 0)
                 > getattr(prev, "generation", 0)
             )
         if reset_cache:
             self.cache.clear()
-        plan = index.hierarchy.plan
+        plan = index.plan
         # Query bounds/positions flow through int32 index space (planner
         # packing, the short kernel's iota, the hybrid top, and the core
         # walk's window math alike).  Refuse loudly rather than wrap.
-        if plan.capacity >= 2**31:
+        # ``capacity`` is the total addressable space — for sharded
+        # indices that is segments * per-segment capacity, not the
+        # (per-segment) plan's.
+        if index.capacity >= 2**31:
             raise ValueError(
-                f"capacity {plan.capacity} exceeds the int32 query index "
+                f"capacity {index.capacity} exceeds the int32 query index "
                 "space; the batched query engine (and the underlying "
                 "query kernels) support capacity < 2**31"
             )
-        if self.planner is None or (
-            plan.c != self.planner.c
-            or plan.num_levels != self.planner.num_levels
-        ):
-            self.planner = QueryPlanner(
-                c=plan.c,
-                num_levels=plan.num_levels,
-                long_cutoff=self._long_cutoff,
-                long_enabled=self._long_enabled,
-                min_bucket=self._min_bucket,
-                max_bucket=self._max_bucket,
-            )
+        if is_distributed(index):
+            # Sharded index: routing is by segment containment, not span
+            # class — the planner and span executors never run.
+            self.planner = None
+            if self.distributed is None:
+                self.distributed = DistributedExecutor(
+                    min_bucket=self._min_bucket,
+                    max_bucket=self._max_bucket,
+                )
+        else:
+            self.distributed = None
+            if self.planner is None or (
+                plan.c != self.planner.c
+                or plan.num_levels != self.planner.num_levels
+            ):
+                self.planner = QueryPlanner(
+                    c=plan.c,
+                    num_levels=plan.num_levels,
+                    long_cutoff=self._long_cutoff,
+                    long_enabled=self._long_enabled,
+                    min_bucket=self._min_bucket,
+                    max_bucket=self._max_bucket,
+                )
         self._index = index
         self.executors[LONG].invalidate()
 
     # -- public query surface ---------------------------------------------
     def query(self, ls, rs) -> jnp.ndarray:
-        """Batched ``RMQ_value``; bit-identical to ``rmq_value_batch``."""
+        """Batched ``RMQ_value``; bit-identical to the index's oracle."""
         return self._execute(ls, rs, VALUE)
 
     def query_index(self, ls, rs) -> jnp.ndarray:
-        """Batched ``RMQ_index``; bit-identical to ``rmq_index_batch``."""
-        if not self._index.hierarchy.with_positions:
+        """Batched ``RMQ_index``; bit-identical to the index's oracle."""
+        if not self._index.with_positions:
             raise ValueError(
-                "hierarchy was built without positions; "
-                "use build_hierarchy(..., with_positions=True)"
+                "index was built without positions; rebuild it with "
+                "with_positions=True to serve RMQ_index queries"
             )
         return self._execute(ls, rs, INDEX)
 
     # -- execution --------------------------------------------------------
     def _execute(self, ls, rs, op: str) -> jnp.ndarray:
         index = self._index
-        h = index.hierarchy
-        n = _live_length(index)
+        n = live_length(index)
         ls, rs = check_query_args(ls, rs, n)
         ls = np.asarray(ls, np.int32).ravel()
         rs = np.asarray(rs, np.int32).ravel()
         m = ls.shape[0]
-        out_dtype = np.int32 if op == INDEX else np.dtype(h.base.dtype)
+        out_dtype = (
+            np.int32 if op == INDEX else np.dtype(index.value_dtype)
+        )
         if m == 0:
             return jnp.zeros((0,), out_dtype)
 
@@ -200,17 +217,23 @@ class QueryEngine:
         # -- plan + execute the misses ------------------------------------
         if miss_idx.shape[0]:
             mls, mrs = uls[miss_idx], urs[miss_idx]
-            for bucket in self.planner.plan(mls, mrs):
-                if bucket.count == 0:
-                    continue
-                self.class_counts[bucket.cls] += bucket.count
-                res = self.executors[bucket.cls].run(
-                    h, jnp.asarray(bucket.ls), jnp.asarray(bucket.rs), op
-                )
-                res = np.asarray(res)[: bucket.count].astype(
-                    out_dtype, copy=False
-                )
-                uniq_res[miss_idx[bucket.idxs]] = res
+            if self.distributed is not None:
+                res = self.distributed.run(index, mls, mrs, op)
+                uniq_res[miss_idx] = res.astype(out_dtype, copy=False)
+            else:
+                h = index.hierarchy
+                for bucket in self.planner.plan(mls, mrs):
+                    if bucket.count == 0:
+                        continue
+                    self.class_counts[bucket.cls] += bucket.count
+                    res = self.executors[bucket.cls].run(
+                        h, jnp.asarray(bucket.ls), jnp.asarray(bucket.rs),
+                        op,
+                    )
+                    res = np.asarray(res)[: bucket.count].astype(
+                        out_dtype, copy=False
+                    )
+                    uniq_res[miss_idx[bucket.idxs]] = res
             if self.cache.capacity > 0:
                 for i in miss_idx:
                     self.cache.put(
@@ -222,15 +245,20 @@ class QueryEngine:
 
     # -- introspection ----------------------------------------------------
     def stats(self) -> dict:
+        counts = dict(self.class_counts)
+        executors = {
+            cls: ex.stats() for cls, ex in self.executors.items()
+        }
+        if self.distributed is not None:
+            counts = dict(self.distributed.class_counts)
+            executors = {"distributed": self.distributed.stats()}
         return {
             "backend": self.backend,
             "generation": self.generation,
             "batches": self.batches,
             "queries": self.queries_in,
             "dedup_saved": self.dedup_saved,
-            "class_counts": dict(self.class_counts),
+            "class_counts": counts,
             "cache": self.cache.stats(),
-            "executors": {
-                cls: ex.stats() for cls, ex in self.executors.items()
-            },
+            "executors": executors,
         }

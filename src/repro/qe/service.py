@@ -110,7 +110,7 @@ class QueryService:
         engine = self._engine(name)  # fail fast on unknown names
         if op not in (VALUE, INDEX):
             raise ValueError(f"op must be 'value' or 'index', got {op!r}")
-        if op == INDEX and not engine.index.hierarchy.with_positions:
+        if op == INDEX and not engine.index.with_positions:
             # fail at admission, not at flush time where the error would
             # be detached from the caller that queued the bad request
             raise ValueError(
@@ -200,16 +200,24 @@ class QueryService:
         return self._results.pop(ticket)
 
     # -- synchronous conveniences -----------------------------------------
-    def query(self, name: str, ls, rs) -> jnp.ndarray:
-        """Submit + flush + take in one call (still coalesces any queue)."""
-        ticket = self.submit(name, ls, rs, VALUE)
-        self.flush()
+    def _query_sync(self, name: str, ls, rs, op: str) -> jnp.ndarray:
+        ticket = self.submit(name, ls, rs, op)
+        try:
+            self.flush()
+        except RuntimeError:
+            # flush failures are per-(index, op) group: if OUR group
+            # executed, its result is stored and claimable — an unrelated
+            # group's bad request must not lose this caller's answer.
+            if ticket not in self._results:
+                raise
         return self.take(ticket)
 
+    def query(self, name: str, ls, rs) -> jnp.ndarray:
+        """Submit + flush + take in one call (still coalesces any queue)."""
+        return self._query_sync(name, ls, rs, VALUE)
+
     def query_index(self, name: str, ls, rs) -> jnp.ndarray:
-        ticket = self.submit(name, ls, rs, INDEX)
-        self.flush()
-        return self.take(ticket)
+        return self._query_sync(name, ls, rs, INDEX)
 
     # -- introspection ----------------------------------------------------
     def stats(self) -> dict:

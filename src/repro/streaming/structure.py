@@ -6,7 +6,7 @@ re-reductions instead of a rebuild:
 
 * :meth:`update` — batched point updates (duplicate indices: last wins);
 * :meth:`append` — extend the live region into pre-reserved,
-  ``+inf``-padded capacity (``make_plan(..., capacity=...)`` keeps the
+  ``+inf``-padded capacity (``make_plan(..., capacity=)`` keeps the
   level geometry static under jit across appends);
 * :meth:`retire` — slide the window start forward for ring-buffer
   workloads by writing ``+inf`` over the oldest entries, so they can never
@@ -16,6 +16,10 @@ The structure is pure-functional: every mutator returns a new
 ``StreamingRMQ`` sharing unmodified buffers.  ``backend="pallas"`` routes
 chunk re-reductions through ``repro.kernels.hierarchy_update``; both
 backends are bit-identical to a fresh build of the mutated array.
+
+Implements :class:`repro.core.protocol.MutableRMQIndex`; the shared
+validation/dispatch plumbing lives in :mod:`repro.core.protocol` (the
+names below are re-exported for back-compat).
 """
 
 from __future__ import annotations
@@ -26,16 +30,15 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import _default_backend
-from repro.core.hierarchy import Hierarchy, build_hierarchy
+from repro.core import protocol as px
+from repro.core.hierarchy import Hierarchy
 from repro.core.plan import HierarchyPlan, make_plan
-from repro.core.query import (
-    _debug_checks_enabled,
-    check_query_args,
-    rmq_index_batch,
-    rmq_value_batch,
+from repro.core.protocol import (  # noqa: F401  (re-exported for back-compat)
+    dispatch_append,
+    dispatch_update,
+    validate_update_batch,
 )
-from repro.streaming import updates as U
+from repro.core.query import check_query_args
 
 __all__ = [
     "StreamingRMQ",
@@ -43,59 +46,6 @@ __all__ = [
     "dispatch_update",
     "dispatch_append",
 ]
-
-
-def validate_update_batch(idxs, vals, n: Optional[int] = None):
-    """Shared idxs/vals checking for ``update`` entry points.
-
-    Out-of-range indices are dropped silently in normal operation (a
-    jit-friendly contract); under ``REPRO_RMQ_DEBUG=1`` concrete batches
-    are value-checked against the live length ``n`` so indexing bugs
-    fail loudly instead of as stale minima — mirroring query validation.
-    """
-    idxs = jnp.asarray(idxs)
-    vals = jnp.asarray(vals)
-    if idxs.ndim != 1 or idxs.shape != vals.shape:
-        raise ValueError(
-            f"idxs/vals must be matching 1-D batches, got "
-            f"{idxs.shape} vs {vals.shape}"
-        )
-    if not jnp.issubdtype(idxs.dtype, jnp.integer):
-        raise TypeError(f"idxs must be integers, got {idxs.dtype}")
-    if (
-        n is not None
-        and _debug_checks_enabled()
-        and not isinstance(idxs, jax.core.Tracer)
-    ):
-        import numpy as np
-
-        i_np = np.asarray(idxs)
-        bad = (i_np < 0) | (i_np >= n)
-        if bad.any():
-            j = int(np.argmax(bad))
-            raise ValueError(
-                f"update index {j} = {i_np.flat[j]} out of range for "
-                f"live length {n}"
-            )
-    return idxs, vals
-
-
-def dispatch_update(h: Hierarchy, idxs, vals, backend: str) -> Hierarchy:
-    """Backend dispatch for batched point updates (used by RMQ too)."""
-    if backend == "pallas":
-        from repro.kernels.hierarchy_update import ops as upd_ops
-
-        return upd_ops.update_hierarchy_pallas(h, idxs, vals)
-    return U.update_hierarchy(h, idxs, vals)
-
-
-def dispatch_append(h: Hierarchy, vals, start, backend: str) -> Hierarchy:
-    """Backend dispatch for appends at live offset ``start``."""
-    if backend == "pallas":
-        from repro.kernels.hierarchy_update import ops as upd_ops
-
-        return upd_ops.append_hierarchy_pallas(h, vals, start)
-    return U.append_hierarchy(h, vals, start)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,9 +78,7 @@ class StreamingRMQ:
         plan: Optional[HierarchyPlan] = None,
     ) -> "StreamingRMQ":
         """Build over ``x``, reserving ``capacity`` slots for appends."""
-        x = jnp.asarray(x)
-        if x.dtype not in (jnp.float32, jnp.bfloat16, jnp.float64):
-            x = x.astype(jnp.float32)
+        x = px.coerce_values(x)
         n = int(x.shape[0])
         if plan is not None and capacity is not None:
             raise ValueError(
@@ -139,29 +87,21 @@ class StreamingRMQ:
             )
         if plan is None:
             plan = make_plan(n, c=c, t=t, capacity=capacity)
-        if backend == "auto":
-            backend = _default_backend()
-        if backend == "pallas":
-            from repro.kernels.hierarchy_build import ops as build_ops
-
-            h = build_ops.build_hierarchy_pallas(
-                x, plan, with_positions=with_positions
-            )
-        elif backend == "jax":
-            h = build_hierarchy(x, plan, with_positions=with_positions)
-        else:
-            raise ValueError(f"unknown backend {backend!r}")
+        backend = px.resolve_backend(backend)
+        h = px.build_hierarchy_with_backend(
+            x, plan, with_positions=with_positions, backend=backend
+        )
         return StreamingRMQ(hierarchy=h, backend=backend, length=n)
 
     # -- mutation ---------------------------------------------------------
     def update(self, idxs, vals) -> "StreamingRMQ":
         """Batched point updates ``a[idxs] = vals`` (last wins on dups)."""
-        idxs, vals = validate_update_batch(idxs, vals, n=self.length)
+        idxs, vals = px.validate_update_batch(idxs, vals, n=self.length)
         if idxs.shape[0] == 0:
             return self
         return dataclasses.replace(
             self,
-            hierarchy=dispatch_update(
+            hierarchy=px.dispatch_update(
                 self.hierarchy, idxs, vals, self.backend
             ),
             generation=self.generation + 1,
@@ -169,19 +109,13 @@ class StreamingRMQ:
 
     def append(self, vals) -> "StreamingRMQ":
         """Extend the array with ``vals``; fails when capacity is spent."""
-        vals = jnp.asarray(vals)
-        if vals.ndim != 1:
-            raise ValueError(f"vals must be 1-D, got shape {vals.shape}")
+        vals = px.validate_append_batch(
+            vals, length=self.length, capacity=self.capacity
+        )
         b = int(vals.shape[0])
         if b == 0:
             return self
-        if self.length + b > self.capacity:
-            raise ValueError(
-                f"append of {b} overflows capacity {self.capacity} "
-                f"(live length {self.length}); build with a larger "
-                "make_plan(..., capacity=...) reservation"
-            )
-        h = dispatch_append(
+        h = px.dispatch_append(
             self.hierarchy, vals, jnp.int32(self.length), self.backend
         )
         return dataclasses.replace(
@@ -206,7 +140,7 @@ class StreamingRMQ:
         vals = jnp.full((count,), jnp.inf, self.hierarchy.base.dtype)
         return dataclasses.replace(
             self,
-            hierarchy=dispatch_update(
+            hierarchy=px.dispatch_update(
                 self.hierarchy, idxs, vals, self.backend
             ),
             start=self.start + count,
@@ -217,20 +151,16 @@ class StreamingRMQ:
     def query(self, ls, rs) -> jax.Array:
         """Batched ``RMQ_value`` over inclusive ranges in the live window."""
         ls, rs = check_query_args(ls, rs, self.length)
-        if self.backend == "pallas":
-            from repro.kernels.rmq_scan import ops as scan_ops
-
-            return scan_ops.rmq_value_batch_pallas(self.hierarchy, ls, rs)
-        return rmq_value_batch(self.hierarchy, ls, rs)
+        return px.dispatch_query_value(self.hierarchy, ls, rs, self.backend)
 
     def query_index(self, ls, rs) -> jax.Array:
         """Batched ``RMQ_index`` (leftmost minimum) over inclusive ranges."""
         ls, rs = check_query_args(ls, rs, self.length)
-        if self.backend == "pallas":
-            from repro.kernels.rmq_scan import ops as scan_ops
+        return px.dispatch_query_index(self.hierarchy, ls, rs, self.backend)
 
-            return scan_ops.rmq_index_batch_pallas(self.hierarchy, ls, rs)
-        return rmq_index_batch(self.hierarchy, ls, rs)
+    # protocol spellings (RMQIndex): same entry points, canonical names
+    query_value_batch = query
+    query_index_batch = query_index
 
     # -- adaptive batched engine -------------------------------------------
     def engine(self, **kwargs):
@@ -239,9 +169,7 @@ class StreamingRMQ:
         Re-attach (``engine.attach``) after any mutation — update/append/
         retire return successor indices with a bumped ``generation``.
         """
-        from repro.qe import QueryEngine
-
-        return QueryEngine.for_index(self, **kwargs)
+        return px.make_engine(self, **kwargs)
 
     # -- introspection ----------------------------------------------------
     @property
@@ -255,6 +183,10 @@ class StreamingRMQ:
     @property
     def with_positions(self) -> bool:
         return self.hierarchy.with_positions
+
+    @property
+    def value_dtype(self):
+        return self.hierarchy.base.dtype
 
     def memory_bytes(self) -> int:
         return self.hierarchy.memory_bytes()

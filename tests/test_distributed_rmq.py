@@ -2,16 +2,23 @@
 
 Multi-device cases run in a subprocess so the fake-device XLA flag never
 leaks into this test process (smoke tests must see 1 device).
+
+The streaming/engine additions (sharded update/append, engine routing)
+share one small 2-level geometry — the first compile of a 3-level
+distributed walk is pathologically slow on CPU XLA, and the pre-existing
+tests below already cover that depth.
 """
 
 import subprocess
 import sys
 
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
 
 from repro.core.distributed import DistributedRMQ
+from repro.qe import CROSSING, SEG_LOCAL, QueryService
 
 
 def test_distributed_on_1x1_mesh_matches_naive():
@@ -59,9 +66,9 @@ print("SUBPROCESS_OK")
 """
 
 
-def test_distributed_on_2x4_fake_mesh():
+def _run_fake_mesh_subprocess(prog: str) -> None:
     res = subprocess.run(
-        [sys.executable, "-c", _SUBPROCESS_PROG],
+        [sys.executable, "-c", prog],
         capture_output=True,
         text=True,
         env={
@@ -76,6 +83,290 @@ def test_distributed_on_2x4_fake_mesh():
     assert "SUBPROCESS_OK" in res.stdout, res.stdout + res.stderr
 
 
+def test_distributed_on_2x4_fake_mesh():
+    _run_fake_mesh_subprocess(_SUBPROCESS_PROG)
+
+
+_MUTATION_PROG = r"""
+import numpy as np, jax
+from repro.core.distributed import DistributedRMQ
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(5)
+n = 2901  # not divisible by 4 segments
+x = rng.random(n).astype(np.float32)
+x[rng.integers(0, n, 600)] = 0.25  # cross-segment ties
+kw = dict(c=16, t=16, with_positions=True, capacity=4000)
+d = DistributedRMQ.build(x, mesh, **kw)
+assert d.num_segments == 4 and d.segment_capacity == 1000
+
+# sharded update (dups last-wins) + boundary-straddling append vs fresh:
+# the 300-element tail fills global slots 2901..3200, crossing the
+# segment 2 -> 3 boundary at 3000, so both owners repair their shard
+idxs = rng.integers(0, n, 64).astype(np.int32); idxs[5] = idxs[4]
+vals = (rng.random(64) - 0.5).astype(np.float32)
+tail = (rng.random(300) - 0.2).astype(np.float32)
+d2 = d.update(idxs, vals).append(tail)
+assert d2.generation == 2 and d2.n == n + 300
+x2 = x.copy()
+for i, v in zip(idxs, vals):
+    x2[i] = v
+x2 = np.concatenate([x2, tail])
+ref = DistributedRMQ.build(x2, mesh, **kw)
+m = 192
+ls = rng.integers(0, d2.n, m)
+rs = np.minimum(ls + rng.integers(0, d2.n, m), d2.n - 1)
+ls, rs = np.minimum(ls, rs).astype(np.int32), np.maximum(ls, rs).astype(np.int32)
+np.testing.assert_array_equal(np.asarray(d2.query(ls, rs)),
+                              np.asarray(ref.query(ls, rs)))
+np.testing.assert_array_equal(np.asarray(d2.query_index(ls, rs)),
+                              np.asarray(ref.query_index(ls, rs)))
+
+# engine routing: seg-local answers skip the all-reduce, crossing spans
+# take it; both bit-identical to the monolithic oracle
+eng = d2.engine()
+np.testing.assert_array_equal(np.asarray(eng.query(ls, rs)),
+                              np.asarray(d2.query(ls, rs)))
+np.testing.assert_array_equal(np.asarray(eng.query_index(ls, rs)),
+                              np.asarray(d2.query_index(ls, rs)))
+cc = eng.stats()["class_counts"]
+assert cc["seg_local"] > 0 and cc["crossing"] > 0, cc
+
+# engine stale-cache regression across a mutation on the fake mesh
+l0, r0 = 50, 2500
+before = float(eng.query(np.array([l0]), np.array([r0]))[0])
+d3 = d2.update(np.array([1500]), np.array([-9.0], np.float32))
+eng.attach(d3)
+assert float(eng.query(np.array([l0]), np.array([r0]))[0]) == -9.0
+assert int(eng.query_index(np.array([l0]), np.array([r0]))[0]) == 1500
+print("SUBPROCESS_OK")
+"""
+
+
+def test_distributed_mutation_and_engine_on_2x4_fake_mesh():
+    _run_fake_mesh_subprocess(_MUTATION_PROG)
+
+
 def test_process_sees_one_device():
     """Guard: the fake-device flag must never leak into the test process."""
     assert jax.device_count() == 1
+
+
+# ---------------------------------------------------------------------------
+# streaming mutation (sharded update/append) + engine routing, 1x1 mesh
+# ---------------------------------------------------------------------------
+N = 800
+CAP = 1000  # ceil(1000/16) = 63 <= c*t: exactly 2 levels
+GEOM = dict(c=16, t=4, with_positions=True)
+
+
+def _mixed_queries(rng, n, m):
+    ls = rng.integers(0, n, m)
+    rs = np.minimum(ls + rng.integers(0, n, m), n - 1)
+    ls, rs = np.minimum(ls, rs), np.maximum(ls, rs)
+    return ls.astype(np.int32), rs.astype(np.int32)
+
+
+@pytest.fixture(scope="module")
+def dist_setup():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rng = np.random.default_rng(7)
+    x = rng.random(N).astype(np.float32)
+    x[rng.integers(0, N, N // 4)] = 0.25  # plant ties
+    d = DistributedRMQ.build(x, mesh, capacity=CAP, **GEOM)
+    return mesh, rng, x, d
+
+
+def _assert_matches_fresh_build(d, x, mesh, rng):
+    """Mutated index must be bit-identical to a from-scratch build —
+    values AND leftmost-tie positions."""
+    ref = DistributedRMQ.build(x, mesh, capacity=CAP, **GEOM)
+    ls, rs = _mixed_queries(rng, len(x), 128)
+    np.testing.assert_array_equal(
+        np.asarray(d.query(ls, rs)), np.asarray(ref.query(ls, rs))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(d.query_index(ls, rs)),
+        np.asarray(ref.query_index(ls, rs)),
+    )
+    # and both match naive numpy (incl. leftmost ties)
+    want = np.array([x[l : r + 1].min() for l, r in zip(ls, rs)])
+    wantp = np.array(
+        [l + np.argmin(x[l : r + 1]) for l, r in zip(ls, rs)]
+    )
+    np.testing.assert_allclose(np.asarray(d.query(ls, rs)), want)
+    np.testing.assert_array_equal(np.asarray(d.query_index(ls, rs)), wantp)
+
+
+class TestShardedMutation:
+    def test_update_matches_fresh_build(self, dist_setup):
+        mesh, rng, x, d = dist_setup
+        idxs = rng.integers(0, N, 64).astype(np.int32)
+        vals = (rng.random(64) - 0.5).astype(np.float32)
+        # duplicate indices: last wins, as on every other implementation
+        idxs[5] = idxs[4]
+        d2 = d.update(idxs, vals)
+        assert d2.generation == d.generation + 1
+        assert d2.n == d.n
+        x2 = x.copy()
+        for i, v in zip(idxs, vals):  # sequential => last wins
+            x2[i] = v
+        _assert_matches_fresh_build(d2, x2, mesh, rng)
+        # the source index is unmodified (pure-functional successor)
+        assert float(d.query(np.array([0]), np.array([N - 1]))[0]) \
+            == x.min()
+
+    def test_append_matches_fresh_build(self, dist_setup):
+        mesh, rng, x, d = dist_setup
+        tail = (rng.random(120) - 0.2).astype(np.float32)
+        d2 = d.append(tail)
+        assert d2.n == N + 120 and d2.generation == d.generation + 1
+        _assert_matches_fresh_build(
+            d2, np.concatenate([x, tail]), mesh, rng
+        )
+
+    def test_interleaved_mutations_match_fresh_build(self, dist_setup):
+        mesh, rng, x, d = dist_setup
+        cur = x.copy()
+        for _ in range(3):
+            idxs = rng.integers(0, d.n, 32).astype(np.int32)
+            vals = (rng.random(32) - 0.5).astype(np.float32)
+            d = d.update(idxs, vals)
+            cur[idxs] = vals
+            tail = rng.random(40).astype(np.float32)
+            d = d.append(tail)
+            cur = np.concatenate([cur, tail])
+        _assert_matches_fresh_build(d, cur, mesh, rng)
+
+    def test_append_overflow_raises(self, dist_setup):
+        _, _, _, d = dist_setup
+        with pytest.raises(ValueError, match="overflows capacity"):
+            d.append(np.zeros(CAP - N + 1, np.float32))
+
+    def test_empty_batches_are_noops(self, dist_setup):
+        _, _, _, d = dist_setup
+        assert d.update(
+            np.zeros(0, np.int32), np.zeros(0, np.float32)
+        ) is d
+        assert d.append(np.zeros(0, np.float32)) is d
+
+    def test_capacity_layout(self, dist_setup):
+        _, _, _, d = dist_setup
+        assert d.capacity == d.segment_capacity * d.num_segments
+        assert d.capacity >= CAP
+        assert d.length == N
+
+    def test_build_refuses_int32_overflowing_capacity(self, dist_setup):
+        """Bounds/positions are int32 throughout — same loud contract as
+        the engine's attach guard, at build time."""
+        mesh, _, _, _ = dist_setup
+        with pytest.raises(ValueError, match="int32 query index space"):
+            DistributedRMQ.build(
+                np.zeros(8, np.float32), mesh, c=16, t=4, capacity=2**31
+            )
+
+
+class TestEngineOverDistributed:
+    def test_parity_with_monolithic_oracle(self, dist_setup):
+        _, rng, x, d = dist_setup
+        engine = d.engine()
+        ls, rs = _mixed_queries(rng, N, 160)
+        ls[10:30], rs[10:30] = ls[0], rs[0]  # dedup scatter-back
+        np.testing.assert_array_equal(
+            np.asarray(engine.query(ls, rs)), np.asarray(d.query(ls, rs))
+        )
+        np.testing.assert_array_equal(
+            np.asarray(engine.query_index(ls, rs)),
+            np.asarray(d.query_index(ls, rs)),
+        )
+        counts = engine.stats()["class_counts"]
+        # 1x1 mesh: every span is contained in the single segment, so
+        # nothing pays the all-reduce
+        assert counts[SEG_LOCAL] > 0 and counts[CROSSING] == 0
+
+    def test_stale_cache_regression_after_update(self, dist_setup):
+        """Same (l, r) served from cache must invalidate on attach of a
+        mutated successor — keyed by generation."""
+        _, _, x, d = dist_setup
+        engine = d.engine()
+        l, r = 100, 700
+        before = float(engine.query(np.array([l]), np.array([r]))[0])
+        assert before == x[l : r + 1].min()
+        h0 = engine.cache.hits
+        engine.query(np.array([l]), np.array([r]))
+        assert engine.cache.hits == h0 + 1  # cached
+        d2 = d.update(np.array([300]), np.array([-5.0], np.float32))
+        engine.attach(d2)
+        assert float(
+            engine.query(np.array([l]), np.array([r]))[0]
+        ) == -5.0
+        assert int(
+            engine.query_index(np.array([l]), np.array([r]))[0]
+        ) == 300
+
+    def test_stale_cache_regression_after_append(self, dist_setup):
+        _, _, x, d = dist_setup
+        engine = d.engine()
+        v0 = float(engine.query(np.array([0]), np.array([N - 1]))[0])
+        d2 = d.append(np.array([-7.0], np.float32))
+        engine.attach(d2)
+        assert float(
+            engine.query(np.array([0]), np.array([N - 1]))[0]
+        ) == v0
+        assert float(engine.query(np.array([0]), np.array([N]))[0]) \
+            == -7.0
+        assert int(
+            engine.query_index(np.array([0]), np.array([N]))[0]
+        ) == N
+
+    def test_parity_after_interleaved_mutations(self, dist_setup):
+        _, rng, x, d = dist_setup
+        engine = d.engine()
+        for _ in range(2):
+            idxs = rng.integers(0, d.n, 24).astype(np.int32)
+            vals = (rng.random(24) - 0.5).astype(np.float32)
+            d = d.update(idxs, vals).append(
+                rng.random(40).astype(np.float32)
+            )
+            engine.attach(d)
+            ls, rs = _mixed_queries(rng, d.n, 128)
+            np.testing.assert_array_equal(
+                np.asarray(engine.query(ls, rs)),
+                np.asarray(d.query(ls, rs)),
+            )
+            np.testing.assert_array_equal(
+                np.asarray(engine.query_index(ls, rs)),
+                np.asarray(d.query_index(ls, rs)),
+            )
+
+    def test_service_register_attach_surface(self, dist_setup):
+        """The same register()/attach() surface as RMQ/StreamingRMQ."""
+        _, _, x, d = dist_setup
+        svc = QueryService()
+        svc.register("dist", d)
+        got = float(svc.query("dist", np.array([0]), np.array([N - 1]))[0])
+        assert got == x.min()
+        d2 = d.update(
+            np.array([int(np.argmax(x))]), np.array([-2.0], np.float32)
+        )
+        svc.attach("dist", d2)
+        assert float(
+            svc.query("dist", np.array([0]), np.array([N - 1]))[0]
+        ) == -2.0
+        t = svc.submit("dist", np.array([3]), np.array([40]), op="index")
+        svc.flush()
+        assert int(svc.take(t)[0]) == 3 + int(
+            np.argmin(np.where(np.arange(N) == int(np.argmax(x)), -2.0,
+                               x)[3:41])
+        )
+
+    def test_value_only_build_refuses_index_ops(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        d = DistributedRMQ.build(
+            np.random.default_rng(0).random(300).astype(np.float32),
+            mesh, c=16, t=4,
+        )
+        with pytest.raises(ValueError, match="without positions"):
+            d.query_index(np.array([0]), np.array([10]))
+        with pytest.raises(ValueError, match="without positions"):
+            d.engine().query_index(np.array([0]), np.array([10]))

@@ -1,0 +1,137 @@
+"""The common index protocol: conformance + shared validation helpers.
+
+Every index implementation must satisfy :class:`repro.core.RMQIndex`
+(the engine routes over the protocol, not concrete types), the mutable
+ones additionally :class:`repro.core.MutableRMQIndex`, and all of them
+must reject malformed mutation batches through the *shared* validators —
+one error surface, not four drifting copies.
+"""
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core import (
+    RMQ,
+    MutableRMQIndex,
+    RMQIndex,
+    is_distributed,
+    live_length,
+    supports_mutation,
+)
+from repro.core import protocol as px
+from repro.core.hybrid import HybridRMQ
+from repro.streaming import StreamingRMQ
+
+
+@pytest.fixture(scope="module")
+def x():
+    return np.random.default_rng(0).random(900).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def indices(x):
+    rmq = RMQ.build(x, c=16, t=4, with_positions=True, backend="jax",
+                    capacity=1200)
+    srm = StreamingRMQ.from_array(x, c=16, t=4, with_positions=True,
+                                  backend="jax", capacity=1200)
+    hyb = HybridRMQ.build(x, c=16, t=64, with_positions=True)
+    return rmq, srm, hyb
+
+
+class TestConformance:
+    def test_read_protocol(self, indices):
+        for idx in indices:
+            assert isinstance(idx, RMQIndex), type(idx)
+
+    def test_mutation_capability(self, indices):
+        rmq, srm, hyb = indices
+        assert supports_mutation(rmq) and isinstance(rmq, MutableRMQIndex)
+        assert supports_mutation(srm)
+        # the hybrid is read-only: a point update can move top-level
+        # minima, which would invalidate sparse-table rows wholesale
+        assert not supports_mutation(hyb)
+
+    def test_distributed_marker(self, indices):
+        from repro.core.distributed import DistributedRMQ
+
+        for idx in indices:
+            assert not is_distributed(idx)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        d = DistributedRMQ.build(
+            np.zeros(200, np.float32), mesh, c=16, t=4
+        )
+        assert is_distributed(d)
+        assert isinstance(d, RMQIndex)
+        assert isinstance(d, MutableRMQIndex)
+
+    def test_live_length_normalization(self, indices, x):
+        rmq, srm, hyb = indices
+        assert rmq.length == len(x)  # build sets the live length
+        for idx in indices:
+            assert live_length(idx) == len(x)
+        # RMQ with length=None means "the build length"
+        import dataclasses
+
+        assert live_length(dataclasses.replace(rmq, length=None)) == len(x)
+        assert live_length(rmq.append(np.float32([1.0]))) == len(x) + 1
+
+    def test_canonical_query_spellings(self, indices, x):
+        ls = np.array([0, 17, 100], np.int32)
+        rs = np.array([5, 600, 899], np.int32)
+        for idx in indices:
+            np.testing.assert_array_equal(
+                np.asarray(idx.query_value_batch(ls, rs)),
+                np.asarray(idx.query(ls, rs)),
+            )
+            np.testing.assert_array_equal(
+                np.asarray(idx.query_index_batch(ls, rs)),
+                np.asarray(idx.query_index(ls, rs)),
+            )
+
+    def test_shared_introspection(self, indices, x):
+        rmq, srm, hyb = indices
+        assert rmq.capacity == srm.capacity == 1200
+        for idx in indices:
+            assert idx.with_positions
+            assert np.dtype(idx.value_dtype) == np.float32
+            assert idx.generation == 0
+
+
+class TestSharedValidation:
+    def test_update_batch_shape_mismatch_everywhere(self, indices):
+        rmq, srm, _ = indices
+        for idx in (rmq, srm):
+            with pytest.raises(ValueError, match="matching 1-D"):
+                idx.update(np.array([1, 2]), np.array([0.5], np.float32))
+
+    def test_update_batch_integer_dtype(self):
+        with pytest.raises(TypeError, match="integers"):
+            px.validate_update_batch(
+                np.array([0.5]), np.array([1.0], np.float32)
+            )
+
+    def test_append_batch_rank(self):
+        with pytest.raises(ValueError, match="1-D"):
+            px.validate_append_batch(
+                np.zeros((2, 2), np.float32), length=0, capacity=100
+            )
+
+    def test_append_batch_overflow(self, indices):
+        rmq, srm, _ = indices
+        for idx in (rmq, srm):
+            with pytest.raises(ValueError, match="overflows capacity"):
+                idx.append(np.zeros(301, np.float32))  # 900 + 301 > 1200
+
+    def test_resolve_backend(self):
+        assert px.resolve_backend("jax") == "jax"
+        assert px.resolve_backend("pallas") == "pallas"
+        assert px.resolve_backend("auto") in ("jax", "pallas")
+        with pytest.raises(ValueError, match="unknown backend"):
+            px.resolve_backend("cuda")
+
+    def test_coerce_values(self):
+        out = px.coerce_values(np.arange(4))
+        assert out.dtype == np.float32
+        with pytest.raises(ValueError, match="rank-1"):
+            px.coerce_values(np.zeros((2, 2)))

@@ -370,6 +370,25 @@ class TestService:
         with pytest.raises(KeyError):
             svc.take(t_b)
 
+    def test_sync_query_survives_unrelated_group_failure(self):
+        """query()'s own stored result must be returned even when an
+        unrelated (index, op) group fails in the same flush."""
+        _, xa, rmq_a = _build(3000, 16, 4, seed=19)
+        _, _, rmq_b = _build(3000, 16, 4, seed=20)
+        x_plain = np.random.default_rng(21).random(3000).astype(np.float32)
+        value_only = RMQ.build(x_plain, c=16, t=4, backend="jax")
+        svc = QueryService()
+        svc.register("a", rmq_a)
+        svc.register("b", rmq_b)
+        # queue a request that will fail at flush time (value-only
+        # successor lands after admission)
+        t_b = svc.submit("b", np.array([1]), np.array([50]), op="index")
+        svc.attach("b", value_only, reset_cache=True)
+        got = float(svc.query("a", np.array([0]), np.array([2999]))[0])
+        assert got == xa.min()
+        with pytest.raises(KeyError):
+            svc.take(t_b)   # the failed group's ticket stays unanswered
+
     def test_unclaimed_results_bounded(self):
         """Unconsumed flush results age out instead of leaking forever."""
         _, _, rmq = _build(1000, 16, 4, seed=14)

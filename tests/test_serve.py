@@ -112,18 +112,20 @@ class TestStreamingEviction:
     def test_engine_eviction_never_rebuilds_per_round(self, monkeypatch):
         """The hard acceptance bar: one index build per generation, zero
         per-round hierarchy rebuilds (the old path rebuilt every round)."""
-        import repro.streaming.structure as streaming_structure
+        # every implementation builds through the protocol module's shared
+        # dispatch, so counting there covers StreamingRMQ.from_array
+        import repro.core.protocol as protocol_mod
         from repro.core.api import RMQ as RMQClass
 
         builds = {"n": 0}
-        orig_build = streaming_structure.build_hierarchy
+        orig_build = protocol_mod.build_hierarchy
 
         def counting_build(*args, **kwargs):
             builds["n"] += 1
             return orig_build(*args, **kwargs)
 
         monkeypatch.setattr(
-            streaming_structure, "build_hierarchy", counting_build
+            protocol_mod, "build_hierarchy", counting_build
         )
 
         def forbid_rebuild(*args, **kwargs):

@@ -196,6 +196,43 @@ class TestCheckpoint:
         assert latest_step(str(tmp_path)) == 7
 
 
+class TestTrainTeardown:
+    def test_ckpt_closed_when_wait_raises_on_normal_exit(
+        self, tmp_path, monkeypatch
+    ):
+        """A writer error surfaced by wait() on a *normal* exit must both
+        propagate AND still shut the async checkpointer down — otherwise
+        its worker thread outlives the (restarted) loop."""
+        import argparse
+
+        import repro.checkpoint as ck
+        from repro.launch.train import train_loop
+
+        calls = {}
+        real_manager = ck.CheckpointManager
+
+        class FailingWaitManager(real_manager):
+            def wait(self):
+                calls["waited"] = True
+                raise RuntimeError("buffered writer error")
+
+            def close(self):
+                calls["closed"] = True
+                super().close()
+
+        monkeypatch.setattr(ck, "CheckpointManager", FailingWaitManager)
+        args = argparse.Namespace(
+            arch="qwen1.5-0.5b", smoke=True, steps=2, seq_len=16,
+            global_batch=2, microbatches=1, remat="minimal",
+            model_parallel=1, checkpoint_every=100,
+            checkpoint_dir=str(tmp_path), log_every=100,
+            inject_failure_at=None,
+        )
+        with pytest.raises(RuntimeError, match="buffered writer error"):
+            train_loop(args)
+        assert calls.get("waited") and calls.get("closed")
+
+
 class TestDataPipeline:
     def test_deterministic_and_restart_safe(self):
         d = SyntheticTokenDataset(vocab_size=100, seq_len=16, global_batch=8)
