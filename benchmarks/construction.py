@@ -1,34 +1,80 @@
 """Paper Fig. 17: data-structure construction time vs array size.
 
-Measures hierarchy build (ours, both backends) against the sparse-table
-build (the LCA-profile baseline).  The paper's claim: GPU-RMQ construction
-is a few parallel chunked reductions — 50–2400× cheaper than competitors
-and nearly flat in n; sparse-table is log2(n) full passes.
+Times the hierarchy build through **all three pipeline backends** —
+``jax`` (pure-JAX fused pass), ``pallas`` (one launch per level) and
+``fused`` (ONE launch total) — against the sparse-table build (the
+LCA-profile baseline).  The paper's claim: GPU-RMQ construction is a few
+parallel chunked reductions — 50–2400× cheaper than competitors and
+nearly flat in n; sparse-table is log2(n) full passes.
+
+Also asserts the fused path's launch contract via the trace-time counter
+(``repro.kernels.profiling``): exactly ONE kernel launch per build, vs
+``num_levels - 1`` for the per-level path — this is what the CI tiny
+smoke run guards against bit-rot.
+
+On non-TPU hosts the Pallas backends run in interpret mode (a
+correctness harness, not a performance path), so their absolute times
+are only meaningful on TPU; the jax-vs-sparse comparison carries the
+paper-shape claim everywhere.
+
+``REPRO_BENCH_TINY=1`` shrinks sizes *and* the (c, t) geometry so plans
+stay multi-level (the launch-count assertion needs upper levels).
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_row, make_input_array, time_fn
+from benchmarks.common import csv_row, make_input_array, time_fn, tiny_mode
 from repro.core.baselines import SparseTable
 from repro.core.hierarchy import build_hierarchy
 from repro.core.plan import make_plan
 from repro.kernels.hierarchy_build.ops import build_hierarchy_pallas
+from repro.kernels.hierarchy_fused.ops import build_hierarchy_fused
+from repro.kernels.profiling import count_launches
 
 
-def run(sizes=(2**18, 2**20, 2**22, 2**24), c=128, t=64):
+def _timed_with_launches(fn):
+    """(median seconds, launches traced on the first call)."""
+    with count_launches() as counts:
+        jax.block_until_ready(fn())
+    return time_fn(fn), sum(counts.values())
+
+
+def run(sizes=None, c=None, t=None):
+    if sizes is None:
+        # tiny geometry keeps plans multi-level at tiny sizes
+        sizes = (2**12, 2**14) if tiny_mode() else (2**18, 2**20, 2**22)
+    if c is None:
+        c = 32 if tiny_mode() else 128
+    if t is None:
+        t = 4 if tiny_mode() else 64
     rows = []
     for n in sizes:
         x = jnp.asarray(make_input_array(n))
         plan = make_plan(n, c=c, t=t)
-        t_build = time_fn(lambda: build_hierarchy(x, plan).upper)
+        t_jax, l_jax = _timed_with_launches(
+            lambda: build_hierarchy(x, plan).upper
+        )
+        t_pal, l_pal = _timed_with_launches(
+            lambda: build_hierarchy_pallas(x, plan).upper
+        )
+        t_fused, l_fused = _timed_with_launches(
+            lambda: build_hierarchy_fused(x, plan).upper
+        )
         t_sparse = time_fn(lambda: SparseTable.build(x).table)
         rows.append({
             "n": n,
-            "gpu_rmq_build_ms": t_build * 1e3,
+            "num_levels": plan.num_levels,
+            "jax_build_ms": t_jax * 1e3,
+            "pallas_build_ms": t_pal * 1e3,
+            "fused_build_ms": t_fused * 1e3,
             "sparse_build_ms": t_sparse * 1e3,
-            "speedup": t_sparse / t_build,
+            "jax_launches": l_jax,
+            "pallas_launches": l_pal,
+            "fused_launches": l_fused,
+            "speedup": t_sparse / t_jax,
         })
     return rows
 
@@ -39,13 +85,23 @@ def main():
     for r in rows:
         print(csv_row(
             f"construction_n{r['n']}",
-            r["gpu_rmq_build_ms"] * 1e3,
-            f"sparse={r['sparse_build_ms']:.1f}ms"
-            f"|speedup={r['speedup']:.1f}x",
+            r["jax_build_ms"] * 1e3,
+            f"pallas={r['pallas_build_ms']:.1f}ms"
+            f"|fused={r['fused_build_ms']:.1f}ms"
+            f"|sparse={r['sparse_build_ms']:.1f}ms"
+            f"|speedup_vs_sparse={r['speedup']:.1f}x"
+            f"|launches_fused={r['fused_launches']}"
+            f"|launches_pallas={r['pallas_launches']}",
         ))
-    # paper-shape claim: our build must beat the memory-heavy baseline,
-    # increasingly so at scale
-    assert rows[-1]["speedup"] > 2.0, rows[-1]
+    for r in rows:
+        # the pipeline's launch contract (guards fused-path bit-rot):
+        # one launch total, vs one per upper level
+        assert r["fused_launches"] == 1, r
+        assert r["pallas_launches"] == r["num_levels"] - 1, r
+    if not tiny_mode():
+        # paper-shape claim: our build must beat the memory-heavy
+        # baseline, increasingly so at scale
+        assert rows[-1]["speedup"] > 2.0, rows[-1]
 
 
 if __name__ == "__main__":

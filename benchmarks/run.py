@@ -18,7 +18,7 @@ import traceback
 
 MODULES = [
     ("memory_footprint", "Fig. 15 memory footprint"),
-    ("construction", "Fig. 17 construction time"),
+    ("construction", "Fig. 17 construction time (jax/pallas/fused)"),
     ("update_throughput", "streaming updates vs full rebuild"),
     ("throughput", "Fig. 16 RMQ throughput by range class"),
     ("engine_throughput", "routed query engine vs monolithic walk"),

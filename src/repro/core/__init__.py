@@ -11,7 +11,13 @@ Public API:
 """
 
 from repro.core.api import RMQ
-from repro.core.hierarchy import Hierarchy, build_hierarchy, pos_dtype_for
+from repro.core.constants import PAD_POS, POS_INF_I32
+from repro.core.hierarchy import (
+    Hierarchy,
+    build_hierarchy,
+    build_many,
+    pos_dtype_for,
+)
 from repro.core.plan import HierarchyPlan, make_plan
 from repro.core.protocol import (
     MutableRMQIndex,
@@ -37,7 +43,10 @@ __all__ = [
     "supports_mutation",
     "Hierarchy",
     "HierarchyPlan",
+    "PAD_POS",
+    "POS_INF_I32",
     "build_hierarchy",
+    "build_many",
     "make_plan",
     "pos_dtype_for",
     "check_query_args",

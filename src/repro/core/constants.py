@@ -1,0 +1,31 @@
+"""Shared numeric sentinels of the minima hierarchy and its kernels.
+
+Every build/update/query path agrees on one position sentinel so that
+hierarchies produced by any backend are bit-identical (the test suites
+assert exact equality of padding entries too).  Historically each module
+redefined the value privately; this is the single home.
+
+``PAD_POS``
+    Position stored for padding entries (the +inf-padded tail of a level,
+    chunks past ``capacity``).  Padding can never win a query because its
+    value is ``+inf`` while real values are finite, so the concrete value
+    only has to be *larger than every real position* — ``INT32_MAX``,
+    since the whole query stack does int32 index math (capacity is
+    enforced ``< 2**31`` wherever positions flow through kernels).
+
+``POS_INF_I32``
+    Identity element of the lexicographic ``(value, position)`` merge used
+    by every query path to keep ties leftmost.  Numerically the same
+    ``INT32_MAX`` as ``PAD_POS`` — kept as a distinct name because the two
+    roles are distinct (a *stored* sentinel vs. a *merge* identity) and
+    only coincide because both must dominate all real positions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["PAD_POS", "POS_INF_I32"]
+
+PAD_POS = jnp.iinfo(jnp.int32).max
+POS_INF_I32 = PAD_POS

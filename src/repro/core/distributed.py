@@ -57,13 +57,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import protocol as px
-from repro.core.hierarchy import build_hierarchy
+from repro.core.constants import POS_INF_I32 as _POS_INF_I32
 from repro.core.plan import HierarchyPlan, make_plan
 from repro.core.query import _rmq_batch, check_query_args
 
 __all__ = ["DistributedRMQ"]
-
-_POS_INF_I32 = jnp.iinfo(jnp.int32).max
 
 
 def _num_segments(mesh: Mesh, axis: str) -> int:
@@ -77,7 +75,7 @@ def _num_segments(mesh: Mesh, axis: str) -> int:
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=64)
 def _build_fn(mesh: Mesh, seg: str, plan: HierarchyPlan,
-              with_positions: bool):
+              with_positions: bool, backend: str):
     @functools.partial(
         shard_map,
         mesh=mesh,
@@ -90,7 +88,12 @@ def _build_fn(mesh: Mesh, seg: str, plan: HierarchyPlan,
         check_vma=False,
     )
     def build_local(x_local):
-        h = build_hierarchy(x_local, plan, with_positions=with_positions)
+        # Shard-local construction through the shared pipeline: with
+        # backend='fused' every device builds its whole segment hierarchy
+        # in ONE kernel launch under the same shard_map.
+        h = px.build_hierarchy_with_backend(
+            x_local, plan, with_positions=with_positions, backend=backend
+        )
         pos = (
             h.upper_pos
             if with_positions
@@ -269,6 +272,7 @@ class DistributedRMQ:
         t: int = 64,
         with_positions: bool = False,
         capacity: Optional[int] = None,
+        backend: str = "auto",
     ) -> "DistributedRMQ":
         """Build over ``x``; pass ``capacity > len(x)`` to allow appends.
 
@@ -276,6 +280,11 @@ class DistributedRMQ:
         ``ceil(capacity / S)`` +inf-padded slots and the level geometry is
         derived from that, so appends up to ``capacity`` reuse every jit
         specialization (same contract as ``RMQ``/``StreamingRMQ``).
+
+        ``backend`` selects the *construction* path only (shard-local
+        builds through the shared ``'fused'``/``'pallas'``/``'jax'``
+        pipeline); the sharded query/update walks are pure JAX
+        (``shard_map``) on every backend.
         """
         x = px.coerce_values(x)
         n = int(x.shape[0])
@@ -301,7 +310,8 @@ class DistributedRMQ:
 
         x = jax.device_put(x, NamedSharding(mesh, P(segment_axis)))
         base, upper, pos = _build_fn(
-            mesh, segment_axis, local_plan, with_positions
+            mesh, segment_axis, local_plan, with_positions,
+            px.resolve_backend(backend),
         )(x)
         return DistributedRMQ(
             base=base,

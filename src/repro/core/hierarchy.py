@@ -1,10 +1,16 @@
 """Construction of the GPU-RMQ minima hierarchy (paper §4.1, §4.4).
 
-Construction is a sequence of chunked min-reductions, one per level, built
-bottom-up.  On the GPU the paper assigns a warp group to each chunk and
-reduces with warp shuffles; on TPU each level build is a single dense
-``(m, c) -> (m,)`` reduction that XLA maps onto the VPU (and which the
-``kernels/hierarchy_build`` Pallas kernel tiles explicitly through VMEM).
+Construction is a bottom-up sequence of chunked min-reductions.  On the
+GPU the paper assigns a warp group to each chunk and reduces with warp
+shuffles; on TPU each level build is a dense ``(m, c) -> (m,)`` reduction
+that XLA maps onto the VPU.  :func:`build_hierarchy` below is the pure-JAX
+oracle: one end-to-end-jitted pass that reduces each level directly into
+its ``plan.offsets`` slot of a *preallocated* contiguous ``upper`` buffer
+— no per-level intermediate arrays, no concatenate.  The Pallas
+realizations are validated bit-identical against it:
+``kernels/hierarchy_fused`` (all levels in ONE launch, the default
+construction kernel) and ``kernels/hierarchy_build`` (the historical
+one-launch-per-level tiling).
 
 All upper levels live in one contiguous buffer (paper: "To further reduce
 allocation complexity, we store all precomputed layers in a single,
@@ -26,13 +32,19 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.constants import PAD_POS
 from repro.core.plan import HierarchyPlan, make_plan
 
-__all__ = ["Hierarchy", "build_hierarchy", "make_plan", "pos_dtype_for"]
+__all__ = [
+    "Hierarchy",
+    "build_hierarchy",
+    "build_many",
+    "make_plan",
+    "pos_dtype_for",
+]
 
-# Sentinel position for padding entries (never selected because the padded
-# value is +inf and real values are finite).
-_PAD_POS = jnp.iinfo(jnp.int32).max
+# Back-compat alias; the shared home is repro.core.constants.
+_PAD_POS = PAD_POS
 
 
 def pos_dtype_for(n: int) -> jnp.dtype:
@@ -107,9 +119,17 @@ def build_hierarchy(
 ) -> Hierarchy:
     """Build the hierarchy for input ``x`` according to ``plan``.
 
-    Pure-JAX reference construction; the Pallas build kernel in
-    ``repro.kernels.hierarchy_build`` computes the same levels tile-by-tile
-    through VMEM and is validated against this function.
+    Pure-JAX reference construction, single fused pass: the ``upper``
+    buffer is preallocated at ``plan.upper_size`` (+inf / ``PAD_POS``
+    filled, which *is* each level's padding) and every level's chunk
+    minima are reduced straight into its ``plan.offsets`` slot.  Peak
+    auxiliary memory is the output buffer itself — the historical
+    per-level path kept every level alive twice (once standalone, once in
+    the final concatenate).
+
+    The Pallas builds in ``repro.kernels.hierarchy_fused`` (one launch)
+    and ``repro.kernels.hierarchy_build`` (one launch per level) are
+    validated bit-identical against this function.
     """
     if x.ndim != 1:
         raise ValueError(f"input must be rank-1, got shape {x.shape}")
@@ -118,48 +138,69 @@ def build_hierarchy(
 
     c = plan.c
     cap = plan.capacity
+    inf = jnp.array(jnp.inf, dtype=x.dtype)
     # Only position-tracking builds materialize indices, so only they
     # need the int64/x64 guard.
     pos_dtype = pos_dtype_for(cap) if with_positions else None
 
     # Level 0 is stored at full capacity; the reserved tail is +inf so it
     # can never win a query and appends just overwrite it.
-    x = _pad_to(x, cap, jnp.array(jnp.inf, dtype=x.dtype))
+    x = _pad_to(x, cap, inf)
 
-    levels_v = []
-    levels_p = []
+    # The whole contiguous upper buffer, preallocated: the fill values
+    # double as every level's padding (entries past a level's live length
+    # are never written below).
+    upper = jnp.full((plan.upper_size,), jnp.inf, dtype=x.dtype)
+    upper_pos = (
+        jnp.full((plan.upper_size,), PAD_POS, dtype=pos_dtype)
+        if with_positions
+        else None
+    )
+
     cur_v = x
     cur_p = (
         jnp.arange(cap, dtype=pos_dtype) if with_positions else None
     )
     for k in range(1, plan.num_levels):
-        padded_len = plan.padded_lens[k - 1]
         # The reduction consumes ceil(len/c)*c entries; pad the current
-        # level out to exactly c * padded-next-len before reshaping.
+        # level out to exactly c * next-level-len before reshaping.
         want = plan.level_lens[k] * c
-        inf = jnp.array(jnp.inf, dtype=cur_v.dtype)
         v = _pad_to(cur_v, want, inf).reshape(-1, c)
         idx = jnp.argmin(v, axis=1)
         nxt_v = jnp.take_along_axis(v, idx[:, None], axis=1)[:, 0]
-        nxt_p = None
+        off = plan.offsets[k - 1]
+        upper = jax.lax.dynamic_update_slice(upper, nxt_v, (off,))
         if with_positions:
-            p = _pad_to(cur_p, want, jnp.array(_PAD_POS, pos_dtype))
+            p = _pad_to(cur_p, want, jnp.array(PAD_POS, pos_dtype))
             p = p.reshape(-1, c)
             nxt_p = jnp.take_along_axis(p, idx[:, None], axis=1)[:, 0]
-        # Store padded to a multiple of c.
-        nxt_v = _pad_to(nxt_v, padded_len, inf)
-        levels_v.append(nxt_v)
-        if with_positions:
-            nxt_p = _pad_to(nxt_p, padded_len, jnp.array(_PAD_POS, pos_dtype))
-            levels_p.append(nxt_p)
-        cur_v = nxt_v[: plan.level_lens[k]]
-        cur_p = nxt_p[: plan.level_lens[k]] if with_positions else None
-
-    if levels_v:
-        upper = jnp.concatenate(levels_v)
-        upper_pos = jnp.concatenate(levels_p) if with_positions else None
-    else:
-        upper = jnp.zeros((0,), dtype=x.dtype)
-        upper_pos = jnp.zeros((0,), dtype=pos_dtype) if with_positions else None
+            upper_pos = jax.lax.dynamic_update_slice(
+                upper_pos, nxt_p, (off,)
+            )
+            cur_p = nxt_p
+        cur_v = nxt_v
 
     return Hierarchy(base=x, upper=upper, upper_pos=upper_pos, plan=plan)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "with_positions"))
+def build_many(
+    xs: jax.Array,
+    plan: HierarchyPlan,
+    with_positions: bool = False,
+) -> Hierarchy:
+    """Batched construction: ``(B, n)`` inputs -> one batched Hierarchy.
+
+    One vmapped, end-to-end-jitted build indexes all ``B`` arrays in a
+    single launch — every plane of the returned :class:`Hierarchy`
+    carries a leading batch axis (``base`` is ``(B, capacity)``,
+    ``upper`` is ``(B, upper_size)``); row ``i`` is bit-identical to
+    ``build_hierarchy(xs[i], plan, with_positions)``.  This is what
+    ``QueryService.register_many`` uses to index many equal-length
+    arrays without paying per-array dispatch.
+    """
+    if xs.ndim != 2:
+        raise ValueError(f"inputs must be rank-2 (B, n), got {xs.shape}")
+    return jax.vmap(
+        lambda row: build_hierarchy(row, plan, with_positions=with_positions)
+    )(xs)

@@ -41,12 +41,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.baselines import SparseTable
-from repro.core.hierarchy import Hierarchy, build_hierarchy
+from repro.core.constants import POS_INF_I32 as _POS_INF_I32
+from repro.core.hierarchy import Hierarchy
 from repro.core.plan import HierarchyPlan, make_plan
 
 __all__ = ["HybridRMQ"]
-
-_POS_INF_I32 = jnp.iinfo(jnp.int32).max
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,16 +57,28 @@ class HybridRMQ:
 
     @staticmethod
     def build(
-        x, c: int = 128, t: int = 1024, with_positions: bool = False
+        x,
+        c: int = 128,
+        t: int = 1024,
+        with_positions: bool = False,
+        backend: str = "auto",
     ) -> "HybridRMQ":
         """Note the default t is 16x the scan version's: the O(1) top
         makes large tops free at query time (paper §4.5 implication (1)),
-        which in turn removes one hierarchy level."""
-        from repro.core.protocol import coerce_values
+        which in turn removes one hierarchy level.
 
-        x = coerce_values(x)
+        ``backend`` selects the hierarchy construction path (the shared
+        ``'fused'``/``'pallas'``/``'jax'`` pipeline); the hybrid walk
+        itself is pure JAX regardless.
+        """
+        from repro.core import protocol as px
+
+        x = px.coerce_values(x)
         plan = make_plan(int(x.shape[0]), c=c, t=t)
-        h = build_hierarchy(x, plan, with_positions=with_positions)
+        h = px.build_hierarchy_with_backend(
+            x, plan, with_positions=with_positions,
+            backend=px.resolve_backend(backend),
+        )
         return HybridRMQ.from_hierarchy(h)
 
     @staticmethod

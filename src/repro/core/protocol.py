@@ -19,9 +19,12 @@ over *capabilities*, not concrete types:
   *successor* index with ``generation + 1`` (every implementation is
   pure-functional).  Probe with :func:`supports_mutation`.
 * shared helpers — the previously-duplicated plumbing, now in one place:
-  backend resolution (:func:`resolve_backend`), input dtype coercion
-  (:func:`coerce_values`), build/query/update backend dispatch
-  (:func:`build_hierarchy_with_backend`, :func:`dispatch_query_value`,
+  backend resolution (:func:`resolve_backend` /
+  :func:`runtime_backend`), input dtype coercion (:func:`coerce_values`),
+  the single construction entry point every implementation builds through
+  (:func:`build_hierarchy_with_backend`, backends ``'fused'`` /
+  ``'pallas'`` / ``'jax'``, plus the vmapped :func:`build_many`),
+  query/update backend dispatch (:func:`dispatch_query_value`,
   :func:`dispatch_query_index`, :func:`dispatch_update`,
   :func:`dispatch_append`) and batch validation
   (:func:`validate_update_batch`, :func:`validate_append_batch`).
@@ -45,7 +48,7 @@ from typing import Optional, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
-from repro.core.hierarchy import Hierarchy, build_hierarchy
+from repro.core.hierarchy import Hierarchy, build_hierarchy, build_many
 from repro.core.plan import HierarchyPlan
 from repro.core.query import _debug_checks_enabled
 
@@ -54,8 +57,10 @@ __all__ = [
     "MutableRMQIndex",
     "default_backend",
     "resolve_backend",
+    "runtime_backend",
     "coerce_values",
     "build_hierarchy_with_backend",
+    "build_many",
     "dispatch_query_value",
     "dispatch_query_index",
     "dispatch_update",
@@ -166,11 +171,31 @@ def default_backend() -> str:
 
 
 def resolve_backend(backend: str) -> str:
-    """Normalize a user-facing backend name (``"auto"`` included)."""
+    """Normalize a user-facing backend name (``"auto"`` included).
+
+    ``"fused"`` selects the single-launch construction kernel
+    (``kernels/hierarchy_fused``); queries and incremental updates on a
+    fused-built index run through the platform default lowering (see
+    :func:`runtime_backend`) — construction is the only phase the fused
+    kernel covers.
+    """
     if backend == "auto":
         return default_backend()
-    if backend not in ("jax", "pallas"):
+    if backend not in ("jax", "pallas", "fused"):
         raise ValueError(f"unknown backend {backend!r}")
+    return backend
+
+
+def runtime_backend(backend: str) -> str:
+    """The query/update lowering behind a (possibly build-only) backend.
+
+    ``"fused"`` is a construction backend: the resulting hierarchy is
+    bit-identical to every other build path, so post-build dispatch
+    (queries, updates, appends, engine executors) falls through to the
+    platform default.  ``"jax"``/``"pallas"`` pass through unchanged.
+    """
+    if backend == "fused":
+        return default_backend()
     return backend
 
 
@@ -190,7 +215,23 @@ def build_hierarchy_with_backend(
     with_positions: bool,
     backend: str,
 ) -> Hierarchy:
-    """Backend dispatch for hierarchy construction."""
+    """The one construction entry point every index implementation uses.
+
+    All three backends produce bit-identical hierarchies (values,
+    leftmost-tie positions, and padding):
+
+    * ``"fused"`` — ``kernels/hierarchy_fused``: every upper level in ONE
+      Pallas launch, the ``upper`` buffer VMEM-resident throughout;
+    * ``"pallas"`` — ``kernels/hierarchy_build``: one launch per level;
+    * ``"jax"`` — the pure-JAX oracle (single fused pass into a
+      preallocated buffer since the pipeline refactor).
+    """
+    if backend == "fused":
+        from repro.kernels.hierarchy_fused import ops as fused_ops
+
+        return fused_ops.build_hierarchy_fused(
+            x, plan, with_positions=with_positions
+        )
     if backend == "pallas":
         from repro.kernels.hierarchy_build import ops as build_ops
 
@@ -202,11 +243,14 @@ def build_hierarchy_with_backend(
     raise ValueError(f"unknown backend {backend!r}")
 
 
+
+
 # ---------------------------------------------------------------------------
 # query dispatch (previously duplicated in api.py / structure.py)
 # ---------------------------------------------------------------------------
 def dispatch_query_value(h: Hierarchy, ls, rs, backend: str) -> jax.Array:
     """Batched ``RMQ_value`` through the chosen backend."""
+    backend = runtime_backend(backend)
     if backend == "pallas":
         from repro.kernels.rmq_scan import ops as scan_ops
 
@@ -218,6 +262,7 @@ def dispatch_query_value(h: Hierarchy, ls, rs, backend: str) -> jax.Array:
 
 def dispatch_query_index(h: Hierarchy, ls, rs, backend: str) -> jax.Array:
     """Batched ``RMQ_index`` (leftmost minimum) through the chosen backend."""
+    backend = runtime_backend(backend)
     if backend == "pallas":
         from repro.kernels.rmq_scan import ops as scan_ops
 
@@ -232,6 +277,7 @@ def dispatch_query_index(h: Hierarchy, ls, rs, backend: str) -> jax.Array:
 # ---------------------------------------------------------------------------
 def dispatch_update(h: Hierarchy, idxs, vals, backend: str) -> Hierarchy:
     """Backend dispatch for batched point updates."""
+    backend = runtime_backend(backend)
     if backend == "pallas":
         from repro.kernels.hierarchy_update import ops as upd_ops
 
@@ -243,6 +289,7 @@ def dispatch_update(h: Hierarchy, idxs, vals, backend: str) -> Hierarchy:
 
 def dispatch_append(h: Hierarchy, vals, start, backend: str) -> Hierarchy:
     """Backend dispatch for appends at live offset ``start``."""
+    backend = runtime_backend(backend)
     if backend == "pallas":
         from repro.kernels.hierarchy_update import ops as upd_ops
 

@@ -43,7 +43,7 @@ __all__ = [
     "check_query_args",
 ]
 
-_POS_INF_I32 = jnp.iinfo(jnp.int32).max
+from repro.core.constants import POS_INF_I32 as _POS_INF_I32  # noqa: E402
 
 
 def _debug_checks_enabled() -> bool:

@@ -1,20 +1,29 @@
-"""Jitted wrapper: build a full Hierarchy with the Pallas level kernel.
+"""Jitted wrapper: build a full Hierarchy with the per-level Pallas kernel.
 
 Produces a ``Hierarchy`` pytree bit-identical to
 ``repro.core.hierarchy.build_hierarchy`` (the oracle); tests assert this
 across shape/dtype sweeps.
+
+This is the historical one-launch-per-level path (L-1 launches; the glue
+between levels — tile padding, slicing, the final assembly into the
+contiguous ``upper`` buffer — is compiled into one XLA program around the
+launches, so nothing bounces through the host).  The fused single-launch
+pipeline lives in ``repro.kernels.hierarchy_fused``; keep this one for
+geometries whose upper buffer exceeds the fused kernel's VMEM budget.
 """
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
+from repro.core.constants import PAD_POS as _PAD_POS
 from repro.core.hierarchy import Hierarchy, _pad_to, pos_dtype_for
 from repro.core.plan import HierarchyPlan
+from repro.kernels import profiling
 from repro.kernels.hierarchy_build import kernel as K
-
-_PAD_POS = jnp.iinfo(jnp.int32).max
 
 
 def _on_tpu() -> bool:
@@ -30,15 +39,10 @@ def _pick_tile_out(padded_len: int, c: int) -> int:
     return tile
 
 
-def build_hierarchy_pallas(
-    x: jax.Array,
-    plan: HierarchyPlan,
-    with_positions: bool = False,
-    interpret: bool | None = None,
-) -> Hierarchy:
-    """Level-by-level Pallas build (paper §4.1, bottom-up)."""
-    if interpret is None:
-        interpret = not _on_tpu()
+@functools.partial(
+    jax.jit, static_argnames=("plan", "with_positions", "interpret")
+)
+def _build_jit(x, plan, with_positions, interpret):
     c = plan.c
     cap = plan.capacity
     pos_dtype = pos_dtype_for(cap) if with_positions else None
@@ -55,6 +59,7 @@ def build_hierarchy_pallas(
         tile = _pick_tile_out(want, c)
         want_aligned = -(-want // (tile * c)) * (tile * c)
         v_in = _pad_to(cur_v, want_aligned, inf)
+        profiling.record_launch("hierarchy_build")
         if with_positions:
             p_in = _pad_to(cur_p, want_aligned, jnp.array(_PAD_POS, pos_dtype))
             nxt_v, nxt_p = K.build_level_with_positions(
@@ -86,3 +91,15 @@ def build_hierarchy_pallas(
             jnp.zeros((0,), dtype=pos_dtype) if with_positions else None
         )
     return Hierarchy(base=base, upper=upper, upper_pos=upper_pos, plan=plan)
+
+
+def build_hierarchy_pallas(
+    x: jax.Array,
+    plan: HierarchyPlan,
+    with_positions: bool = False,
+    interpret: bool | None = None,
+) -> Hierarchy:
+    """Level-by-level Pallas build (paper §4.1, bottom-up)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _build_jit(jnp.asarray(x), plan, with_positions, interpret)

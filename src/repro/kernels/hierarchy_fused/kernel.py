@@ -1,0 +1,194 @@
+"""Pallas TPU kernel: the whole upper hierarchy in ONE launch.
+
+The per-level build kernel (``kernels/hierarchy_build``) issues one
+``pallas_call`` per level with host-side pad/slice glue between launches;
+the paper's construction story ("a handful of fused parallel reductions")
+is a single pass.  This kernel realizes that on TPU:
+
+* the grid streams **level 0** through VMEM tile by tile — each step DMAs
+  a ``(tile_out * c,)`` contiguous slice HBM→VMEM, reshapes to
+  ``(tile_out, c)`` and VPU-reduces it to ``tile_out`` level-1 summaries,
+  exactly the per-level kernel's inner step;
+* the contiguous ``upper`` buffer is the kernel's only output and stays
+  **VMEM-resident for the entire launch** (whole-array BlockSpec), so
+  every level's summaries are written directly at its ``plan.offsets``
+  slot — no intermediate per-level arrays, no concatenate;
+* the **final grid step** folds the remaining levels bottom-up entirely
+  in VMEM, each fold reading the level just written from the output
+  buffer itself — no HBM round-trip exists between levels;
+* the level-offset table arrives via **scalar prefetch**
+  (``pltpu.PrefetchScalarGridSpec``): offsets index the contiguous buffer
+  dynamically while every slice *size* stays static from the plan;
+* level-0 **positions are synthesized in-kernel** (a masked iota from the
+  grid step id) — the per-level path materializes a ``(capacity,)`` iota
+  in HBM first, roughly doubling its build-time input traffic for
+  position-tracking builds.
+
+Tie-breaking note: position outputs use the ``min(pos where value ==
+min)`` form rather than ``pos[argmin]``.  Carried positions increase
+strictly across a chunk's non-padding entries (each summarizes an earlier
+subtree than its right neighbour; padding holds ``PAD_POS = INT32_MAX``),
+so the two forms agree bit-exactly with the leftmost-argmin oracle while
+avoiding a dynamic gather — same argument as ``kernels/hierarchy_update``.
+
+Padding contract: the buffer is +inf / ``PAD_POS``-filled on the first
+grid step, and only live entries are overwritten — so each level's stored
+padding (out to a multiple of ``c``) matches the oracle's by construction.
+
+VMEM budget: the whole ``upper`` buffer (≈ capacity/(c-1) entries per
+plane) plus one double-buffered input tile must fit; ops.py enforces this
+before launching and points callers past it at the per-level backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.constants import PAD_POS
+from repro.core.plan import HierarchyPlan
+
+DEFAULT_TILE_OUT = 512
+
+
+def _fold_upper_levels(offs_ref, o_ref, po_ref, *, c: int,
+                       plan: HierarchyPlan, pos_dtype):
+    """Bottom-up folds for levels >= 2, entirely on the VMEM-resident
+    output buffer.  Reducing a level's whole *padded* extent yields
+    exactly the next level's live length (``padded_lens[k-2] / c ==
+    level_lens[k]``), so each fold writes only live entries and the
+    initialization padding survives untouched."""
+    for k in range(2, plan.num_levels):
+        src_len = plan.padded_lens[k - 2]
+        out_len = src_len // c  # == plan.level_lens[k]
+        sv = o_ref[pl.ds(offs_ref[k - 2], src_len)].reshape(out_len, c)
+        mv = jnp.min(sv, axis=1)
+        o_ref[pl.ds(offs_ref[k - 1], out_len)] = mv
+        if po_ref is not None:
+            sp = po_ref[pl.ds(offs_ref[k - 2], src_len)].reshape(out_len, c)
+            mp = jnp.min(
+                jnp.where(sv == mv[:, None], sp, jnp.array(PAD_POS, pos_dtype)),
+                axis=1,
+            )
+            po_ref[pl.ds(offs_ref[k - 1], out_len)] = mp
+
+
+def _fused_kernel(offs_ref, x_ref, o_ref, *, c: int, tile_out: int,
+                  plan: HierarchyPlan):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.full(o_ref.shape, jnp.inf, o_ref.dtype)
+
+    v = x_ref[...].reshape(tile_out, c)
+    o_ref[pl.ds(offs_ref[0] + i * tile_out, tile_out)] = jnp.min(v, axis=1)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _fold():
+        _fold_upper_levels(offs_ref, o_ref, None, c=c, plan=plan,
+                           pos_dtype=None)
+
+
+def _fused_kernel_with_positions(offs_ref, x_ref, o_ref, po_ref, *, c: int,
+                                 tile_out: int, cap: int,
+                                 plan: HierarchyPlan, pos_dtype):
+    i = pl.program_id(0)
+    pad_pos = jnp.array(PAD_POS, pos_dtype)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.full(o_ref.shape, jnp.inf, o_ref.dtype)
+        po_ref[...] = jnp.full(po_ref.shape, PAD_POS, pos_dtype)
+
+    v = x_ref[...].reshape(tile_out, c)
+    m = jnp.min(v, axis=1)
+    # Level-0 positions are the absolute indices, synthesized from the
+    # grid step (+inf padding past capacity gets the PAD_POS sentinel,
+    # matching the oracle's padded iota).
+    row = jax.lax.broadcasted_iota(jnp.int32, (tile_out, c), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (tile_out, c), 1)
+    gidx = i * (tile_out * c) + row * c + col
+    p = jnp.where(gidx < cap, gidx, PAD_POS).astype(pos_dtype)
+    pm = jnp.min(jnp.where(v == m[:, None], p, pad_pos), axis=1)
+    start = offs_ref[0] + i * tile_out
+    o_ref[pl.ds(start, tile_out)] = m
+    po_ref[pl.ds(start, tile_out)] = pm
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _fold():
+        _fold_upper_levels(offs_ref, o_ref, po_ref, c=c, plan=plan,
+                           pos_dtype=pos_dtype)
+
+
+def fused_build(
+    values: jax.Array,
+    offsets: jax.Array,
+    plan: HierarchyPlan,
+    tile_out: int = DEFAULT_TILE_OUT,
+    interpret: bool = False,
+) -> jax.Array:
+    """ALL upper levels from padded level 0, one launch: ``-> (upper_size,)``.
+
+    ``values`` must be padded to ``plan.padded_lens[0] * plan.c`` with
+    +inf and ``tile_out`` must divide ``plan.padded_lens[0]`` (ops.py
+    arranges both).  ``offsets`` is the int32 ``plan.offsets`` table,
+    consumed via scalar prefetch.
+    """
+    c = plan.c
+    total = values.shape[0]
+    assert total == plan.padded_lens[0] * c, (total, plan)
+    assert plan.padded_lens[0] % tile_out == 0, (plan.padded_lens[0], tile_out)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(plan.padded_lens[0] // tile_out,),
+        in_specs=[pl.BlockSpec((tile_out * c,), lambda i, offs: (i,))],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, c=c, tile_out=tile_out, plan=plan),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((plan.upper_size,), values.dtype),
+        interpret=interpret,
+    )(offsets.astype(jnp.int32), values)
+
+
+def fused_build_with_positions(
+    values: jax.Array,
+    offsets: jax.Array,
+    plan: HierarchyPlan,
+    pos_dtype,
+    tile_out: int = DEFAULT_TILE_OUT,
+    interpret: bool = False,
+):
+    """Fused build carrying leftmost-minimum original-array positions."""
+    c = plan.c
+    total = values.shape[0]
+    assert total == plan.padded_lens[0] * c, (total, plan)
+    assert plan.padded_lens[0] % tile_out == 0, (plan.padded_lens[0], tile_out)
+    pos_dtype = jnp.dtype(pos_dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(plan.padded_lens[0] // tile_out,),
+        in_specs=[pl.BlockSpec((tile_out * c,), lambda i, offs: (i,))],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _fused_kernel_with_positions, c=c, tile_out=tile_out,
+            cap=plan.capacity, plan=plan, pos_dtype=pos_dtype,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((plan.upper_size,), values.dtype),
+            jax.ShapeDtypeStruct((plan.upper_size,), pos_dtype),
+        ],
+        interpret=interpret,
+    )(offsets.astype(jnp.int32), values)

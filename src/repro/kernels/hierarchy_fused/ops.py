@@ -1,0 +1,119 @@
+"""Jitted wrapper: build a full Hierarchy in ONE fused Pallas launch.
+
+Produces a ``Hierarchy`` pytree bit-identical to
+``repro.core.hierarchy.build_hierarchy`` (the oracle) — values *and*
+leftmost-tie positions, padding included — with exactly one kernel launch
+per build (``repro.kernels.profiling`` makes that assertable).  The whole
+entry point is end-to-end jitted: padding, the launch, and the pytree
+assembly compile into one XLA program, so nothing bounces through the
+host between levels.
+
+Falls back to interpret mode off-TPU, like every kernel package here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hierarchy import Hierarchy, _pad_to, pos_dtype_for
+from repro.core.plan import HierarchyPlan
+from repro.kernels import profiling
+from repro.kernels.hierarchy_fused import kernel as K
+
+__all__ = ["build_hierarchy_fused", "FUSED_VMEM_BUDGET_BYTES"]
+
+# The upper buffer lives wholly in VMEM for the launch (~16 MiB/core on
+# current TPUs); leave headroom for the double-buffered input tile.  With
+# c=128 this admits capacities up to ~250M elements (half that with
+# positions) — past it, use the per-level 'pallas' backend.
+FUSED_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pick_tile_out(padded_level1: int) -> int:
+    """Largest power-of-two tile (<= default) dividing level 1's extent."""
+    tile = K.DEFAULT_TILE_OUT
+    while tile > 1 and padded_level1 % tile != 0:
+        tile //= 2
+    return tile
+
+
+@functools.partial(
+    jax.jit, static_argnames=("plan", "with_positions", "tile_out",
+                              "interpret")
+)
+def _fused_jit(x, plan, with_positions, tile_out, interpret):
+    c = plan.c
+    inf = jnp.array(jnp.inf, x.dtype)
+    base = _pad_to(x, plan.capacity, inf)
+    # Tile-align level 0 for the kernel's block DMA; the over-pad is
+    # < c * tile_out entries and the all-inf chunks it adds reduce to the
+    # same +inf / PAD_POS padding the oracle stores.
+    xin = _pad_to(base, plan.padded_lens[0] * c, inf)
+    offs = jnp.asarray(plan.offsets, jnp.int32)
+    profiling.record_launch("hierarchy_fused")
+    if with_positions:
+        upper, upper_pos = K.fused_build_with_positions(
+            xin, offs, plan, pos_dtype_for(plan.capacity),
+            tile_out=tile_out, interpret=interpret,
+        )
+    else:
+        upper = K.fused_build(
+            xin, offs, plan, tile_out=tile_out, interpret=interpret
+        )
+        upper_pos = None
+    return Hierarchy(base=base, upper=upper, upper_pos=upper_pos, plan=plan)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "with_positions"))
+def _single_level_jit(x, plan, with_positions):
+    # n <= c*t: the plan is a pure scan, no upper levels and no launch.
+    base = _pad_to(x, plan.capacity, jnp.array(jnp.inf, x.dtype))
+    pos_dtype = pos_dtype_for(plan.capacity) if with_positions else None
+    upper = jnp.full((0,), jnp.inf, x.dtype)
+    upper_pos = (
+        jnp.full((0,), 0, pos_dtype) if with_positions else None
+    )
+    return Hierarchy(base=base, upper=upper, upper_pos=upper_pos, plan=plan)
+
+
+def build_hierarchy_fused(
+    x: jax.Array,
+    plan: HierarchyPlan,
+    with_positions: bool = False,
+    interpret: bool | None = None,
+) -> Hierarchy:
+    """Single-launch fused build (paper §4.1, all levels in one pass)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    if plan.num_levels == 1:
+        return _single_level_jit(x, plan, with_positions)
+    if with_positions and plan.padded_lens[0] * plan.c >= 2**31:
+        # The kernel synthesizes absolute level-0 positions in int32.
+        raise NotImplementedError(
+            "the fused build supports position-tracking capacities < 2**31;"
+            " use backend='jax' for larger arrays"
+        )
+    x = jnp.asarray(x)
+    tile_out = _pick_tile_out(plan.padded_lens[0])
+    if not interpret:
+        itemsize = jnp.dtype(x.dtype).itemsize
+        vmem = plan.upper_size * itemsize
+        if with_positions:
+            vmem += plan.upper_size * jnp.dtype(
+                pos_dtype_for(plan.capacity)
+            ).itemsize
+        vmem += 2 * tile_out * plan.c * itemsize  # double-buffered input
+        if vmem > FUSED_VMEM_BUDGET_BYTES:
+            raise ValueError(
+                f"fused build needs ~{vmem} bytes of VMEM for this plan "
+                f"(budget {FUSED_VMEM_BUDGET_BYTES}); use the per-level "
+                "backend='pallas' for this geometry"
+            )
+    return _fused_jit(x, plan, with_positions, tile_out, interpret)

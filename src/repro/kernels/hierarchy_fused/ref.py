@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the fused single-launch build.
+
+The fused kernel's contract is bit-identity with
+``repro.core.hierarchy.build_hierarchy`` — which, since the pipeline
+refactor, *is* the single-pass preallocated-buffer build (each level
+reduced straight into its ``plan.offsets`` slot, fill values doubling as
+padding, no concatenate).  Rather than keep a line-for-line copy of that
+loop here that could drift, the oracle delegates to it; this module only
+adapts the kernel-facing calling convention (a capacity-padded level 0
+in, bare upper planes out).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.core.hierarchy import build_hierarchy
+from repro.core.plan import HierarchyPlan
+
+
+def fused_build_ref(
+    base: jax.Array,
+    plan: HierarchyPlan,
+    with_positions: bool = False,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Upper planes from a capacity-padded level 0: ``-> (upper[, pos])``.
+
+    ``base`` is the stored level 0 (``capacity`` long, +inf past the
+    live region — re-padding its first ``plan.n`` entries reproduces it
+    exactly, so the oracle build sees identical input).
+    """
+    assert base.shape[0] == plan.capacity, (base.shape, plan)
+    h = build_hierarchy(base[: plan.n], plan, with_positions=with_positions)
+    return h.upper, h.upper_pos

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-_PAD_POS = jnp.iinfo(jnp.int32).max
+from repro.core.constants import PAD_POS as _PAD_POS
 
 
 def _min_kernel(ids_ref, x_ref, o_ref):

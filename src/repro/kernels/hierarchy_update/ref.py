@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-_PAD_POS = jnp.iinfo(jnp.int32).max
+from repro.core.constants import PAD_POS as _PAD_POS
 
 
 def update_level_ref(values: jax.Array, ids: jax.Array, c: int) -> jax.Array:

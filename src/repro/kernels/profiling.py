@@ -1,0 +1,49 @@
+"""Trace-time kernel-launch accounting.
+
+The fused construction pipeline's contract is *one* Pallas launch per
+build (vs. one per level on the historical path).  That claim is easy to
+bit-rot silently — a refactor that quietly adds a second ``pallas_call``
+still produces correct values.  This module makes it assertable: each
+kernel wrapper calls :func:`record_launch` from *inside its traced body*,
+so tracing a build records exactly as many launches as the compiled
+program will issue per call.
+
+Because jitted functions trace once per (shape, static-args)
+specialization, launches are only recorded the first time a given
+geometry is traced — wrap the *first* build of a fresh geometry in
+:func:`count_launches`:
+
+    with count_launches() as counts:
+        build_hierarchy_fused(x, plan)          # first call for this plan
+    assert counts == {"hierarchy_fused": 1}
+
+Outside a :func:`count_launches` scope, :func:`record_launch` is a no-op,
+so production builds pay nothing.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Iterator, Optional
+
+__all__ = ["count_launches", "record_launch"]
+
+_counts: Optional[Dict[str, int]] = None
+
+
+def record_launch(name: str) -> None:
+    """Record one kernel launch under ``name`` (no-op when not counting)."""
+    if _counts is not None:
+        _counts[name] = _counts.get(name, 0) + 1
+
+
+@contextlib.contextmanager
+def count_launches() -> Iterator[Dict[str, int]]:
+    """Collect ``{kernel name: launches}`` recorded while tracing inside."""
+    global _counts
+    prev = _counts
+    _counts = {}
+    try:
+        yield _counts
+    finally:
+        _counts = prev

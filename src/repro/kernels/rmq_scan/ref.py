@@ -15,9 +15,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.constants import POS_INF_I32 as _POS_INF_I32
 from repro.core.plan import HierarchyPlan
-
-_POS_INF_I32 = jnp.iinfo(jnp.int32).max
 
 
 def _merge(m, p, m2, p2):

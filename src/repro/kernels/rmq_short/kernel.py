@@ -35,9 +35,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.plan import HierarchyPlan
 
-DEFAULT_QUERY_BLOCK = 256
+from repro.core.constants import POS_INF_I32 as _POS_INF_I32
 
-_POS_INF_I32 = jnp.iinfo(jnp.int32).max
+DEFAULT_QUERY_BLOCK = 256
 
 
 def _rmq_short_kernel(

@@ -21,7 +21,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-_POS_INF_I32 = jnp.iinfo(jnp.int32).max
+from repro.core.constants import POS_INF_I32 as _POS_INF_I32
 
 
 @functools.partial(jax.jit, static_argnames=("c", "capacity", "track_pos"))

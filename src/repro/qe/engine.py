@@ -40,7 +40,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.protocol import is_distributed, live_length
+from repro.core.protocol import is_distributed, live_length, runtime_backend
 from repro.core.query import check_query_args
 from repro.qe.cache import ResultCache
 from repro.qe.distributed import DistributedExecutor
@@ -70,7 +70,9 @@ class QueryEngine:
         backend: Optional[str] = None,
         interpret: Optional[bool] = None,
     ):
-        backend = backend or index.backend
+        # Indexes built with the construction-only 'fused' backend query
+        # through the platform default lowering.
+        backend = runtime_backend(backend or index.backend)
         self.backend = backend
         self.cache = ResultCache(cache_size)
         self._long_enabled = long_enabled

@@ -12,6 +12,9 @@ bounds queue memory and gives an admission-control backstop.
 
 The registry is generation-aware: ``attach(name, successor)`` follows a
 mutation (the engine's result cache invalidates by generation key).
+``register_many`` admits a whole batch of equal-length arrays through one
+vmapped construction launch (``repro.core.build_many``) instead of
+per-array builds.
 """
 
 from __future__ import annotations
@@ -81,6 +84,80 @@ class QueryService:
         engine = QueryEngine.for_index(index, **kwargs)
         self._engines[name] = engine
         return engine
+
+    def register_many(
+        self,
+        arrays: Dict[str, object],
+        c: int = 128,
+        t: int = 64,
+        with_positions: bool = False,
+        backend: str = "auto",
+        capacity: int = None,
+        **engine_kwargs,
+    ) -> Dict[str, QueryEngine]:
+        """Index many equal-length arrays in ONE batched build launch.
+
+        All arrays share one plan (same ``n``/``c``/``t``/``capacity``)
+        and are stacked into a ``(B, n)`` batch for the vmapped
+        :func:`repro.core.build_many` — a single end-to-end-jitted build
+        instead of ``B`` dispatches.  Each row is then registered under
+        its dict key as a normal :class:`repro.core.RMQ` (bit-identical
+        to a solo ``RMQ.build`` of that array).
+
+        The batched *construction* always runs the vmapped pure-JAX
+        fused pass (every build backend is bit-identical, so there is
+        nothing to choose); ``backend`` selects only the query/update
+        lowering of the resulting indexes.  Stacking promotes mixed
+        input dtypes to a common one; pass same-dtype arrays for exact
+        per-array dtype control.
+        """
+        from repro.core import protocol as px
+        from repro.core.api import RMQ
+        from repro.core.hierarchy import Hierarchy, build_many
+        from repro.core.plan import make_plan
+
+        names = list(arrays)
+        if not names:
+            return {}
+        # All-or-nothing: fail before any engine is replaced, not midway
+        # through the loop (same pending-tickets contract as register).
+        blocked = sorted(
+            {r.name for r in self._pending} & set(names)
+        )
+        if blocked:
+            raise ValueError(
+                f"index(es) {blocked} have pending requests; flush first"
+            )
+        vals = [px.coerce_values(arrays[name]) for name in names]
+        n = int(vals[0].shape[0])
+        for name, v in zip(names, vals):
+            if int(v.shape[0]) != n:
+                raise ValueError(
+                    f"register_many requires equal lengths; {names[0]!r} "
+                    f"has {n}, {name!r} has {int(v.shape[0])} — register "
+                    "differing geometries individually"
+                )
+        plan = make_plan(n, c=c, t=t, capacity=capacity)
+        backend = px.resolve_backend(backend)
+        batched = build_many(
+            jnp.stack(vals), plan, with_positions=with_positions
+        )
+        engines: Dict[str, QueryEngine] = {}
+        for i, name in enumerate(names):
+            h = Hierarchy(
+                base=batched.base[i],
+                upper=batched.upper[i],
+                upper_pos=(
+                    batched.upper_pos[i] if with_positions else None
+                ),
+                plan=plan,
+            )
+            engines[name] = self.register(
+                name,
+                RMQ(hierarchy=h, backend=backend, length=n),
+                **engine_kwargs,
+            )
+        return engines
 
     def attach(self, name: str, index, **kwargs) -> None:
         """Re-bind ``name`` to a successor index after a mutation."""

@@ -14,8 +14,11 @@ re-reductions instead of a rebuild:
 
 The structure is pure-functional: every mutator returns a new
 ``StreamingRMQ`` sharing unmodified buffers.  ``backend="pallas"`` routes
-chunk re-reductions through ``repro.kernels.hierarchy_update``; both
-backends are bit-identical to a fresh build of the mutated array.
+chunk re-reductions through ``repro.kernels.hierarchy_update``;
+``backend="fused"`` builds the initial hierarchy in one kernel launch
+(``repro.kernels.hierarchy_fused``) and mutates through the platform
+default.  Every backend is bit-identical to a fresh build of the mutated
+array.
 
 Implements :class:`repro.core.protocol.MutableRMQIndex`; the shared
 validation/dispatch plumbing lives in :mod:`repro.core.protocol` (the
@@ -77,7 +80,12 @@ class StreamingRMQ:
         backend: str = "auto",
         plan: Optional[HierarchyPlan] = None,
     ) -> "StreamingRMQ":
-        """Build over ``x``, reserving ``capacity`` slots for appends."""
+        """Build over ``x``, reserving ``capacity`` slots for appends.
+
+        Construction goes through the shared pipeline
+        (``protocol.build_hierarchy_with_backend``): ``backend='fused'``
+        builds the whole hierarchy in one kernel launch.
+        """
         x = px.coerce_values(x)
         n = int(x.shape[0])
         if plan is not None and capacity is not None:

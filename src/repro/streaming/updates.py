@@ -33,7 +33,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.hierarchy import _PAD_POS, Hierarchy, pos_dtype_for
+from repro.core.constants import PAD_POS as _PAD_POS
+from repro.core.hierarchy import Hierarchy, pos_dtype_for
 from repro.core.plan import HierarchyPlan
 
 __all__ = ["update_hierarchy", "append_hierarchy", "index_dtype_for"]
