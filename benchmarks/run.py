@@ -21,7 +21,8 @@ MODULES = [
     ("construction", "Fig. 17 construction time (jax/pallas/fused)"),
     ("update_throughput", "streaming updates vs full rebuild"),
     ("throughput", "Fig. 16 RMQ throughput by range class"),
-    ("engine_throughput", "routed query engine vs monolithic walk"),
+    ("engine_throughput",
+     "routed vs fused vs monolithic query paths (+ BENCH_query.json)"),
     ("distributed_engine", "distributed routing + sharded update cost"),
     ("tuning", "Fig. 12 (c, t) tuning"),
     ("query_assignment", "Fig. 14 multi-load vs WLQ"),

@@ -4,10 +4,12 @@
 and the pure-JAX reference elsewhere (the kernels also run under
 ``interpret=True`` on CPU, which the test suite exercises; interpret mode is
 a correctness tool, not a performance path, so "auto" avoids it at runtime).
-``backend="fused"`` builds the hierarchy in ONE kernel launch
-(``repro.kernels.hierarchy_fused``); it is a construction-only selection —
-queries and updates on a fused-built index run through the platform
-default lowering, and the resulting index is bit-identical either way.
+``backend="fused"`` selects the single-launch pipelines end to end:
+construction in ONE kernel launch (``repro.kernels.hierarchy_fused``) and
+batched queries in ONE launch per batch (``repro.kernels.rmq_fused`` —
+every span class, value and index ops alike, no host-side class split).
+Updates/appends have no fused lowering and run through the platform
+default; results are bit-identical on every backend.
 
 The index is not frozen at build time: ``update`` applies batched point
 mutations and ``append`` grows the array into reserved capacity, both in

@@ -104,9 +104,39 @@ def _build_fn(mesh: Mesh, seg: str, plan: HierarchyPlan,
     return jax.jit(build_local)
 
 
+def _local_rmq(plan: HierarchyPlan, base_l, upper_l, pos_l, ls, rs,
+               track: bool, backend: str):
+    """Shard-local batched RMQ behind the sharded walks.
+
+    ``backend='fused'`` routes through ``kernels/rmq_fused`` — each
+    device answers its whole (sub)batch in ONE fused dispatch (the
+    engine's segment-contained fast path then costs one launch per
+    device and still no collective); every other backend takes the
+    pure-JAX walk.  Results are bit-identical either way.
+    """
+    if backend == "fused":
+        from repro.core.hierarchy import Hierarchy
+        from repro.kernels.rmq_fused import ops as fused_ops
+
+        h = Hierarchy(
+            base=base_l,
+            upper=upper_l,
+            upper_pos=pos_l if track else None,
+            plan=plan,
+        )
+        m, p = fused_ops.rmq_fused_batch(h, ls, rs, track_pos=track)
+        if not track:
+            p = jnp.zeros_like(ls)
+        return m, p
+    return _rmq_batch(
+        plan, base_l, upper_l, pos_l if track else None, ls, rs,
+        track_pos=track,
+    )
+
+
 @functools.lru_cache(maxsize=64)
 def _allreduce_query_fn(mesh: Mesh, seg: str, qaxes: Tuple[str, ...],
-                        plan: HierarchyPlan, track: bool):
+                        plan: HierarchyPlan, track: bool, backend: str):
     """The monolithic query path: every segment answers its intersection,
     one ``pmin`` over the segment axis combines."""
     n_local = plan.capacity
@@ -132,10 +162,8 @@ def _allreduce_query_fn(mesh: Mesh, seg: str, qaxes: Tuple[str, ...],
         ll = jnp.clip(ls_l - seg_start, 0, n_local - 1)
         rr = jnp.clip(rs_l - seg_start, 0, n_local - 1)
         nonempty = (rs_l >= seg_start) & (ls_l < seg_start + n_local)
-        m, p = _rmq_batch(
-            plan, base_l, upper_l,
-            pos_l if track else None,
-            ll, rr, track_pos=track,
+        m, p = _local_rmq(
+            plan, base_l, upper_l, pos_l, ll, rr, track, backend
         )
         inf = jnp.array(jnp.inf, dtype=m.dtype)
         m = jnp.where(nonempty, m, inf)
@@ -154,7 +182,7 @@ def _allreduce_query_fn(mesh: Mesh, seg: str, qaxes: Tuple[str, ...],
 
 @functools.lru_cache(maxsize=64)
 def _grouped_query_fn(mesh: Mesh, seg: str, plan: HierarchyPlan,
-                      track: bool):
+                      track: bool, backend: str):
     """Segment-local answering: the query batch arrives pre-grouped by
     owning segment as ``(S, k)`` *local* bounds sharded over the segment
     axis, each device answers only its own row, and no collective runs at
@@ -178,10 +206,8 @@ def _grouped_query_fn(mesh: Mesh, seg: str, plan: HierarchyPlan,
     def go(base_l, upper_l, pos_l, ls_l, rs_l):
         seg_idx = jax.lax.axis_index(seg)
         seg_start = (seg_idx * n_local).astype(jnp.int32)
-        m, p = _rmq_batch(
-            plan, base_l, upper_l,
-            pos_l if track else None,
-            ls_l[0], rs_l[0], track_pos=track,
+        m, p = _local_rmq(
+            plan, base_l, upper_l, pos_l, ls_l[0], rs_l[0], track, backend
         )
         if track:
             p = p + seg_start  # globalize leftmost positions
@@ -254,12 +280,15 @@ class DistributedRMQ:
     # Monotonic mutation counter (host-side, never traced): bumped by
     # update/append so engine result caches invalidate correctly.
     generation: int = 0
+    # Runtime backend of the shard-local query walks: 'fused' answers
+    # each device's (sub)batch in one rmq_fused dispatch, everything
+    # else takes the pure-JAX walk under the same shard_map.  Mutations
+    # are pure JAX on every backend.
+    backend: str = "jax"
 
-    # protocol markers: the engine routes distributed indices through the
-    # segment-local/crossing executor instead of the span executors, and
-    # the sharded walk is pure JAX (shard_map) on every backend.
+    # protocol marker: the engine routes distributed indices through the
+    # segment-local/crossing executor instead of the span executors.
     distributed = True
-    backend = "jax"
 
     # -- construction -----------------------------------------------------
     @staticmethod
@@ -281,10 +310,12 @@ class DistributedRMQ:
         derived from that, so appends up to ``capacity`` reuse every jit
         specialization (same contract as ``RMQ``/``StreamingRMQ``).
 
-        ``backend`` selects the *construction* path only (shard-local
-        builds through the shared ``'fused'``/``'pallas'``/``'jax'``
-        pipeline); the sharded query/update walks are pure JAX
-        (``shard_map``) on every backend.
+        ``backend`` selects the shard-local *construction* path (the
+        shared ``'fused'``/``'pallas'``/``'jax'`` pipeline) and, for
+        ``'fused'``, the shard-local *query* lowering too: each device
+        answers its (sub)batch in one ``kernels/rmq_fused`` dispatch
+        under the same ``shard_map``.  Updates/appends are pure JAX on
+        every backend.
         """
         x = px.coerce_values(x)
         n = int(x.shape[0])
@@ -308,10 +339,10 @@ class DistributedRMQ:
             x = jnp.pad(x, (0, cap_padded - n), constant_values=jnp.inf)
         local_plan = make_plan(cap_local, c=c, t=t)
 
+        backend = px.resolve_backend(backend)
         x = jax.device_put(x, NamedSharding(mesh, P(segment_axis)))
         base, upper, pos = _build_fn(
-            mesh, segment_axis, local_plan, with_positions,
-            px.resolve_backend(backend),
+            mesh, segment_axis, local_plan, with_positions, backend
         )(x)
         return DistributedRMQ(
             base=base,
@@ -322,6 +353,7 @@ class DistributedRMQ:
             segment_axis=segment_axis,
             query_axes=tuple(query_axes),
             n=n,
+            backend=backend,
         )
 
     # -- incremental maintenance ------------------------------------------
@@ -420,7 +452,7 @@ class DistributedRMQ:
         )
         fn = _allreduce_query_fn(
             mesh, self.segment_axis, self.query_axes, self.local_plan,
-            track_pos,
+            track_pos, self.backend,
         )
         vals, poss = fn(self.base, self.upper, pos_in, ls, rs)
         if pad:
@@ -458,7 +490,9 @@ class DistributedRMQ:
             if track_pos
             else jnp.zeros((0,), dtype=jnp.int32)
         )
-        fn = _grouped_query_fn(mesh, seg, self.local_plan, track_pos)
+        fn = _grouped_query_fn(
+            mesh, seg, self.local_plan, track_pos, self.backend
+        )
         return fn(self.base, self.upper, pos_in, ls_local, rs_local)
 
     # -- adaptive batched engine -------------------------------------------

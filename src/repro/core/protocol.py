@@ -58,6 +58,7 @@ __all__ = [
     "default_backend",
     "resolve_backend",
     "runtime_backend",
+    "mutation_backend",
     "coerce_values",
     "build_hierarchy_with_backend",
     "build_many",
@@ -173,11 +174,12 @@ def default_backend() -> str:
 def resolve_backend(backend: str) -> str:
     """Normalize a user-facing backend name (``"auto"`` included).
 
-    ``"fused"`` selects the single-launch construction kernel
-    (``kernels/hierarchy_fused``); queries and incremental updates on a
-    fused-built index run through the platform default lowering (see
-    :func:`runtime_backend`) — construction is the only phase the fused
-    kernel covers.
+    ``"fused"`` selects the single-launch pipelines on both phases:
+    construction through ``kernels/hierarchy_fused`` (one launch per
+    build) and queries through ``kernels/rmq_fused`` (one launch per
+    batch, every span class, value and index ops alike).  Incremental
+    updates/appends have no fused lowering and fall through to the
+    platform default (:func:`mutation_backend`).
     """
     if backend == "auto":
         return default_backend()
@@ -187,12 +189,27 @@ def resolve_backend(backend: str) -> str:
 
 
 def runtime_backend(backend: str) -> str:
-    """The query/update lowering behind a (possibly build-only) backend.
+    """The query lowering behind a resolved backend name.
 
-    ``"fused"`` is a construction backend: the resulting hierarchy is
-    bit-identical to every other build path, so post-build dispatch
-    (queries, updates, appends, engine executors) falls through to the
-    platform default.  ``"jax"``/``"pallas"`` pass through unchanged.
+    ``"fused"`` is a *runtime* backend since the fused query kernel
+    landed: batched queries on a fused index run through
+    ``kernels/rmq_fused`` (the whole batch in one launch), so it passes
+    through unchanged — as do ``"jax"``/``"pallas"``.  (Historically
+    ``"fused"`` was construction-only and degraded to the platform
+    default here.)  Mutations still degrade: see
+    :func:`mutation_backend`.
+    """
+    return backend
+
+
+def mutation_backend(backend: str) -> str:
+    """The update/append lowering behind a resolved backend name.
+
+    The fused pipelines cover construction and queries; incremental
+    chunk re-reductions are per-touched-chunk work with no single-launch
+    shape to exploit, so ``"fused"`` indexes mutate through the platform
+    default (``hierarchy_update`` on TPU, pure JAX elsewhere) — the
+    successor hierarchy is bit-identical either way.
     """
     if backend == "fused":
         return default_backend()
@@ -251,6 +268,10 @@ def build_hierarchy_with_backend(
 def dispatch_query_value(h: Hierarchy, ls, rs, backend: str) -> jax.Array:
     """Batched ``RMQ_value`` through the chosen backend."""
     backend = runtime_backend(backend)
+    if backend == "fused":
+        from repro.kernels.rmq_fused import ops as fused_ops
+
+        return fused_ops.rmq_fused_value_batch(h, ls, rs)
     if backend == "pallas":
         from repro.kernels.rmq_scan import ops as scan_ops
 
@@ -263,6 +284,10 @@ def dispatch_query_value(h: Hierarchy, ls, rs, backend: str) -> jax.Array:
 def dispatch_query_index(h: Hierarchy, ls, rs, backend: str) -> jax.Array:
     """Batched ``RMQ_index`` (leftmost minimum) through the chosen backend."""
     backend = runtime_backend(backend)
+    if backend == "fused":
+        from repro.kernels.rmq_fused import ops as fused_ops
+
+        return fused_ops.rmq_fused_index_batch(h, ls, rs)
     if backend == "pallas":
         from repro.kernels.rmq_scan import ops as scan_ops
 
@@ -277,7 +302,7 @@ def dispatch_query_index(h: Hierarchy, ls, rs, backend: str) -> jax.Array:
 # ---------------------------------------------------------------------------
 def dispatch_update(h: Hierarchy, idxs, vals, backend: str) -> Hierarchy:
     """Backend dispatch for batched point updates."""
-    backend = runtime_backend(backend)
+    backend = mutation_backend(backend)
     if backend == "pallas":
         from repro.kernels.hierarchy_update import ops as upd_ops
 
@@ -289,7 +314,7 @@ def dispatch_update(h: Hierarchy, idxs, vals, backend: str) -> Hierarchy:
 
 def dispatch_append(h: Hierarchy, vals, start, backend: str) -> Hierarchy:
     """Backend dispatch for appends at live offset ``start``."""
-    backend = runtime_backend(backend)
+    backend = mutation_backend(backend)
     if backend == "pallas":
         from repro.kernels.hierarchy_update import ops as upd_ops
 

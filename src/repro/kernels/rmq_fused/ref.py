@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the fused query kernel.
+
+The fused kernel's algorithm *is* the branch-free walk of
+``kernels/rmq_scan`` — the fusion is in the execution shape (the whole
+mixed batch, both output planes, one launch), not the algebra — so the
+oracle delegates to the shared branch-free reference instead of keeping
+a drifting copy (same policy as ``hierarchy_fused/ref.py``).  The one
+addition is the dual-plane contract: a single call returns values AND
+leftmost-tie positions, which is what lets a batch mixing ``RMQ_value``
+and ``RMQ_index`` ops be answered by one dispatch.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan import HierarchyPlan
+from repro.kernels.rmq_scan.ref import rmq_branchfree_batch
+
+
+def rmq_fused_batch_ref(
+    plan: HierarchyPlan,
+    base: jax.Array,
+    upper: jax.Array,
+    upper_pos: Optional[jax.Array],
+    ls: jax.Array,
+    rs: jax.Array,
+    track_pos: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """(values, leftmost-tie positions) for the whole batch, one pass."""
+    ls = jnp.asarray(ls, jnp.int32)
+    rs = jnp.asarray(rs, jnp.int32)
+    return rmq_branchfree_batch(
+        plan, base, upper, upper_pos, ls, rs, track_pos=track_pos
+    )

@@ -13,7 +13,11 @@ that observation into an execution layer:
   persistent jitted callables: short spans skip the hierarchy via the
   ``rmq_short`` two-chunk kernel, mid spans take the standard walk,
   long spans use the :class:`~repro.core.hybrid.HybridRMQ` O(1)
-  sparse-table top;
+  sparse-table top; with the fused runtime backend the per-class trio
+  is replaced by the :class:`~repro.qe.executors.FusedExecutor` — the
+  whole span mix (and both value/index output planes) in ONE
+  ``kernels/rmq_fused`` launch per bucket, the planner degrading to a
+  single ``FUSED`` class;
 * :class:`ResultCache` — within-batch duplicate dedup plus an LRU keyed
   by ``(op, index generation, l, r)``; ``RMQ.update``/``append`` bump
   the generation so streaming mutations invalidate correctly;
@@ -31,13 +35,16 @@ that observation into an execution layer:
 from repro.qe.cache import ResultCache
 from repro.qe.distributed import CROSSING, SEG_LOCAL, DistributedExecutor
 from repro.qe.engine import QueryEngine
-from repro.qe.planner import LONG, MID, SHORT, Bucket, QueryPlanner
+from repro.qe.executors import FusedExecutor
+from repro.qe.planner import FUSED, LONG, MID, SHORT, Bucket, QueryPlanner
 from repro.qe.service import QueryService
 
 __all__ = [
     "Bucket",
     "CROSSING",
     "DistributedExecutor",
+    "FUSED",
+    "FusedExecutor",
     "LONG",
     "MID",
     "SEG_LOCAL",

@@ -18,6 +18,15 @@ segment-aware :class:`repro.qe.distributed.DistributedExecutor`
 (segment-contained spans answered shard-locally with no all-reduce,
 crossing spans through the ``pmin`` path).
 
+With the **fused** runtime backend the engine prefers the
+:class:`repro.qe.executors.FusedExecutor`: the planner degrades to a
+single bucket class (``kernels/rmq_fused`` decomposes spans in-kernel,
+so the short/mid/long split buys nothing) and each bucket is one
+launch; :meth:`QueryEngine.query_mixed` additionally serves a batch
+mixing value and index ops from that same single launch (both output
+planes come out of one kernel call).  Dedup, the LRU result cache, and
+the service's coalescing all operate unchanged on top.
+
 Results are bit-identical — values *and* leftmost-tie positions — to
 the index's monolithic oracles (``rmq_value_batch``/``rmq_index_batch``,
 or ``DistributedRMQ.query``/``query_index``): every routed path computes
@@ -47,11 +56,12 @@ from repro.qe.distributed import DistributedExecutor
 from repro.qe.executors import (
     INDEX,
     VALUE,
+    FusedExecutor,
     LongSpanExecutor,
     MidSpanExecutor,
     ShortSpanExecutor,
 )
-from repro.qe.planner import LONG, MID, SHORT, QueryPlanner
+from repro.qe.planner import FUSED, LONG, MID, SHORT, QueryPlanner
 
 __all__ = ["QueryEngine"]
 
@@ -70,8 +80,6 @@ class QueryEngine:
         backend: Optional[str] = None,
         interpret: Optional[bool] = None,
     ):
-        # Indexes built with the construction-only 'fused' backend query
-        # through the platform default lowering.
         backend = runtime_backend(backend or index.backend)
         self.backend = backend
         self.cache = ResultCache(cache_size)
@@ -84,10 +92,14 @@ class QueryEngine:
             MID: MidSpanExecutor(backend, interpret=interpret),
             LONG: LongSpanExecutor(),
         }
+        if backend == "fused":
+            # the whole span mix in one launch per bucket — the per-class
+            # executors above never run (the planner emits FUSED only)
+            self.executors[FUSED] = FusedExecutor(interpret=interpret)
         self.batches = 0
         self.queries_in = 0
         self.dedup_saved = 0
-        self.class_counts = {SHORT: 0, MID: 0, LONG: 0}
+        self.class_counts = {SHORT: 0, MID: 0, LONG: 0, FUSED: 0}
         self._index = None
         self.planner: Optional[QueryPlanner] = None
         self.distributed: Optional[DistributedExecutor] = None
@@ -159,6 +171,7 @@ class QueryEngine:
                     long_enabled=self._long_enabled,
                     min_bucket=self._min_bucket,
                     max_bucket=self._max_bucket,
+                    fused=self.backend == "fused",
                 )
         self._index = index
         self.executors[LONG].invalidate()
@@ -177,7 +190,141 @@ class QueryEngine:
             )
         return self._execute(ls, rs, INDEX)
 
+    @property
+    def supports_mixed(self) -> bool:
+        """Can a value+index mix execute as ONE launch per bucket?
+
+        True on fused-backend engines over a single hierarchy (the
+        kernel emits both output planes); the service uses this to
+        coalesce a registered index's value and index groups into one
+        execution instead of two.
+        """
+        return FUSED in self.executors and self.distributed is None
+
+    def query_mixed(self, ls, rs, is_index) -> tuple:
+        """Answer a batch mixing ``RMQ_value`` and ``RMQ_index`` ops.
+
+        ``is_index[i]`` selects row ``i``'s op.  Returns ``(values,
+        positions)`` numpy arrays of the batch length; only the plane
+        selected by ``is_index`` is meaningful per row (the other
+        plane's entry is unspecified).  On a fused engine the whole
+        deduped miss batch executes through :class:`FusedExecutor` with
+        both planes from the same launch; elsewhere it falls back to one
+        standard execution per op.  Results are bit-identical to
+        :meth:`query` / :meth:`query_index` row-wise.
+        """
+        index = self._index
+        is_index = np.asarray(is_index, bool).ravel()
+        if is_index.any() and not index.with_positions:
+            raise ValueError(
+                "index was built without positions; rebuild it with "
+                "with_positions=True to serve RMQ_index queries"
+            )
+        n = live_length(index)
+        ls, rs = check_query_args(ls, rs, n)
+        ls = np.asarray(ls, np.int32).ravel()
+        rs = np.asarray(rs, np.int32).ravel()
+        if ls.shape != is_index.shape:
+            raise ValueError(
+                f"is_index must match the batch, got {is_index.shape} "
+                f"vs {ls.shape}"
+            )
+        m = ls.shape[0]
+        val_dtype = np.dtype(index.value_dtype)
+        vals_out = np.zeros((m,), val_dtype)
+        pos_out = np.zeros((m,), np.int32)
+        if m == 0:
+            return vals_out, pos_out
+
+        single_op = is_index.all() or not is_index.any()
+        if not self.supports_mixed or single_op:
+            # per-op path: also taken by genuinely single-op batches on
+            # fused engines — the dual-plane launch would waste the
+            # unused plane (and track positions value-only builds lack)
+            vi = np.nonzero(~is_index)[0]
+            ii = np.nonzero(is_index)[0]
+            if vi.shape[0]:
+                vals_out[vi] = np.asarray(
+                    self._execute(ls[vi], rs[vi], VALUE)
+                )
+            if ii.shape[0]:
+                pos_out[ii] = np.asarray(
+                    self._execute(ls[ii], rs[ii], INDEX)
+                )
+            return vals_out, pos_out
+
+        self.batches += 1
+        self.queries_in += m
+
+        # Dedup on (l, r) pairs — the fused launch computes both planes
+        # for every query anyway, so value and index requests for the
+        # same range share one execution.
+        uniq, inverse = np.unique(
+            np.stack([ls, rs]), axis=1, return_inverse=True
+        )
+        uls, urs = uniq[0], uniq[1]
+        k = uls.shape[0]
+        self.dedup_saved += m - k
+        inverse = inverse.ravel()
+        uv = np.zeros((k,), val_dtype)
+        up = np.zeros((k,), np.int32)
+        need_val = np.zeros((k,), bool)
+        need_pos = np.zeros((k,), bool)
+        need_val[inverse[~is_index]] = True
+        need_pos[inverse[is_index]] = True
+
+        gen = self.generation
+        if self.cache.capacity > 0:
+            missing = np.zeros((k,), bool)
+            for i in range(k):
+                l, r = int(uls[i]), int(urs[i])
+                if need_val[i]:
+                    hit = self.cache.get(VALUE, gen, l, r)
+                    if hit is None:
+                        missing[i] = True
+                    else:
+                        uv[i] = hit
+                if need_pos[i]:
+                    hit = self.cache.get(INDEX, gen, l, r)
+                    if hit is None:
+                        missing[i] = True
+                    else:
+                        up[i] = hit
+            miss_idx = np.nonzero(missing)[0]
+        else:
+            miss_idx = np.arange(k)
+
+        if miss_idx.shape[0]:
+            h = index.hierarchy
+            fused = self.executors[FUSED]
+            mls, mrs = uls[miss_idx], urs[miss_idx]
+            for bucket in self.planner.plan(mls, mrs):
+                if bucket.count == 0:
+                    continue
+                self.class_counts[bucket.cls] += bucket.count
+                bv, bp = fused.run_mixed(
+                    h, jnp.asarray(bucket.ls), jnp.asarray(bucket.rs)
+                )
+                rows = miss_idx[bucket.idxs]
+                uv[rows] = np.asarray(bv)[: bucket.count].astype(
+                    val_dtype, copy=False
+                )
+                up[rows] = np.asarray(bp)[: bucket.count]
+            if self.cache.capacity > 0:
+                for i in miss_idx:
+                    l, r = int(uls[i]), int(urs[i])
+                    if need_val[i]:
+                        self.cache.put(VALUE, gen, l, r, uv[i].item())
+                    if need_pos[i]:
+                        self.cache.put(INDEX, gen, l, r, int(up[i]))
+
+        return uv[inverse], up[inverse]
+
     # -- execution --------------------------------------------------------
+    # NOTE: query_mixed above carries a dual-plane variant of this
+    # dedup -> LRU -> bucket-execute -> cache-writeback pipeline (its
+    # cache entries are per-op, its execution per-(l,r) pair); cache or
+    # dedup semantics changed here must change there too.
     def _execute(self, ls, rs, op: str) -> jnp.ndarray:
         index = self._index
         n = live_length(index)

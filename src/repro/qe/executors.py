@@ -12,6 +12,11 @@ spans to the ``rmq_short`` kernel and mid spans to the ``rmq_scan``
 kernel; ``backend="jax"`` uses the pure-JAX paths.  The long executor's
 hybrid walk is pure JAX on either backend (its win is algorithmic — an
 O(1) top — not a lowering).
+
+``backend="fused"`` replaces the whole per-class trio with
+:class:`FusedExecutor`: one ``kernels/rmq_fused`` dispatch answers the
+entire bucket — every span class, and (via :meth:`FusedExecutor.run_mixed`)
+value and index ops in the same launch.
 """
 
 from __future__ import annotations
@@ -22,10 +27,16 @@ import jax
 
 from repro.core.hierarchy import Hierarchy
 
-__all__ = ["ShortSpanExecutor", "MidSpanExecutor", "LongSpanExecutor"]
+__all__ = [
+    "ShortSpanExecutor",
+    "MidSpanExecutor",
+    "LongSpanExecutor",
+    "FusedExecutor",
+]
 
 VALUE = "value"
 INDEX = "index"
+MIXED = "mixed"
 
 
 class _ExecutorBase:
@@ -136,3 +147,43 @@ class LongSpanExecutor(_ExecutorBase):
         if op == VALUE:
             return lambda h, ls, rs: self._hybrid_for(h).query(ls, rs)
         return lambda h, ls, rs: self._hybrid_for(h).query_index(ls, rs)
+
+
+class FusedExecutor(_ExecutorBase):
+    """The whole span mix in one ``rmq_fused`` dispatch per bucket.
+
+    No class routing: the kernel decomposes each span internally
+    (prefix-chunk scan + offset-table level lookups + suffix-chunk scan;
+    short spans resolve entirely on its level-0 path).  ``run`` serves
+    the engine's per-op path; :meth:`run_mixed` returns *both* output
+    planes from one launch, which is how a batch mixing value and index
+    ops avoids a second dispatch.
+    """
+
+    def __init__(self, interpret: Optional[bool] = None):
+        super().__init__()
+        self.interpret = interpret
+
+    def _make(self, h: Hierarchy, op: str) -> Callable:
+        from repro.kernels.rmq_fused import ops as fused_ops
+
+        if op == MIXED:
+            # one launch, both planes (positions imply track_pos)
+            return lambda h, ls, rs: fused_ops.rmq_fused_batch(
+                h, ls, rs, track_pos=True, interpret=self.interpret
+            )
+        if op == VALUE:
+            return lambda h, ls, rs: fused_ops.rmq_fused_value_batch(
+                h, ls, rs, interpret=self.interpret
+            )
+        return lambda h, ls, rs: fused_ops.rmq_fused_index_batch(
+            h, ls, rs, interpret=self.interpret
+        )
+
+    def run_mixed(self, h: Hierarchy, ls, rs):
+        """``(values, positions)`` for the whole bucket, one launch."""
+        self.calls += 1
+        self.queries += int(ls.shape[0])
+        fn = self._bind(MIXED, int(ls.shape[0]),
+                        lambda: self._make(h, MIXED))
+        return fn(h, ls, rs)

@@ -14,6 +14,12 @@ dispatch):
   ``c·t``-entry top scan with two loads.
 * **mid** — everything else: the standard hierarchy walk.
 
+With the **fused** runtime backend (``kernels/rmq_fused``) the class
+split is unnecessary — the kernel decomposes spans internally, so the
+planner *degrades to a single bucket class* (``fused=True``): every
+query lands in ``FUSED`` buckets and the engine executes the whole mix
+through one executor, one launch per bucket.
+
 Each class is packed into *fixed padded bucket shapes*: full buckets of
 ``max_bucket`` queries plus one tail padded up to a power of two (at
 least ``min_bucket``).  The set of distinct shapes the executors ever
@@ -30,11 +36,12 @@ from typing import List, Optional
 
 import numpy as np
 
-__all__ = ["SHORT", "MID", "LONG", "Bucket", "QueryPlanner"]
+__all__ = ["SHORT", "MID", "LONG", "FUSED", "Bucket", "QueryPlanner"]
 
 SHORT = "short"
 MID = "mid"
 LONG = "long"
+FUSED = "fused"
 
 
 def _next_pow2(x: int) -> int:
@@ -69,6 +76,9 @@ class QueryPlanner:
     long_enabled: bool = True
     min_bucket: int = 16
     max_bucket: int = 4096
+    # fused runtime backend: no class split — the kernel decomposes
+    # spans internally, so everything packs into FUSED buckets.
+    fused: bool = False
 
     def effective_long_cutoff(self) -> int:
         if self.long_cutoff is not None:
@@ -77,6 +87,8 @@ class QueryPlanner:
 
     def classify(self, ls: np.ndarray, rs: np.ndarray) -> np.ndarray:
         """Class label per query (vectorized; '<U5' array)."""
+        if self.fused:
+            return np.full(ls.shape, FUSED, dtype="<U5")
         c = self.c
         out = np.full(ls.shape, MID, dtype="<U5")
         short = (rs // c) - (ls // c) <= 1
@@ -92,7 +104,8 @@ class QueryPlanner:
         rs = np.asarray(rs, np.int32)
         labels = self.classify(ls, rs)
         buckets: List[Bucket] = []
-        for cls in (SHORT, MID, LONG):
+        classes = (FUSED,) if self.fused else (SHORT, MID, LONG)
+        for cls in classes:
             idxs = np.nonzero(labels == cls)[0]
             for lo in range(0, idxs.shape[0], self.max_bucket):
                 part = idxs[lo : lo + self.max_bucket]

@@ -6,7 +6,10 @@ small callers.  Small requests are the enemy of batched RMQ throughput
 admission queue: ``submit`` enqueues a request and returns a ticket;
 ``flush`` coalesces everything pending for the same (index, op) pair
 into one engine execution — one dedup pass, one set of padded buckets —
-then scatters each request's slice back to its ticket.  ``submit``
+then scatters each request's slice back to its ticket.  On fused-backend
+engines the two op groups of an index merge further into one *mixed*
+execution (``QueryEngine.query_mixed``: value and index results from
+the same single-launch buckets).  ``submit``
 auto-flushes once the pending query count crosses ``max_pending``, which
 bounds queue memory and gives an admission-control backstop.
 
@@ -217,11 +220,19 @@ class QueryService:
         :meth:`take` until collected or until ``max_unclaimed`` newer
         results push them out (oldest-first).
 
-        Failures are isolated per (index, op) group: a group that raises
-        (e.g. out-of-range bounds for one index) does not lose other
-        groups' results — those are stored and claimable as usual, and
-        the first error re-raises after the loop with the failed
-        groups' tickets in the message.
+        On an engine whose backend supports mixed execution (the fused
+        runtime backend), an index's value AND index groups merge into
+        one :meth:`QueryEngine.query_mixed` call — one dedup pass, one
+        fused launch per bucket for the whole op mix — instead of one
+        execution per op.
+
+        Failures stay isolated per (index, op) group: a group that
+        raises (e.g. out-of-range bounds for one index) does not lose
+        other groups' results — when a *merged* mixed execution fails,
+        the two op groups are retried separately so a bad index request
+        can never take down the index's healthy value requests.  Stored
+        results stay claimable as usual, and the first error re-raises
+        after the loop with the failed groups' tickets in the message.
         """
         pending, self._pending = self._pending, []
         self._pending_queries = 0
@@ -232,7 +243,9 @@ class QueryService:
             groups.setdefault((req.name, req.op), []).append(req)
         out: Dict[int, jnp.ndarray] = {}
         failures: List[Tuple[str, str, List[int], Exception]] = []
-        for (name, op), reqs in groups.items():
+
+        def run_group(name, op, reqs):
+            """One per-op engine execution with its own failure unit."""
             engine = self._engines[name]
             ls = np.concatenate([r.ls for r in reqs])
             rs = np.concatenate([r.rs for r in reqs])
@@ -243,13 +256,54 @@ class QueryService:
                 )
             except Exception as e:
                 failures.append((name, op, [r.ticket for r in reqs], e))
-                continue
+                return
             if len(reqs) > 1:
                 self.coalesced_batches += 1
             off = 0
             for r in reqs:
                 out[r.ticket] = res[off : off + r.ls.shape[0]]
                 off += r.ls.shape[0]
+
+        handled = set()
+        for (name, op), reqs in groups.items():
+            if (name, op) in handled:
+                continue
+            engine = self._engines[name]
+            other = (name, INDEX if op == VALUE else VALUE)
+            if other in groups and engine.supports_mixed:
+                # merge both ops into one mixed execution (one launch
+                # per bucket on the fused backend)
+                reqs = groups[(name, VALUE)] + groups[(name, INDEX)]
+                handled.add((name, VALUE))
+                handled.add((name, INDEX))
+                ls = np.concatenate([r.ls for r in reqs])
+                rs = np.concatenate([r.rs for r in reqs])
+                flags = np.concatenate([
+                    np.full((r.ls.shape[0],), r.op == INDEX, bool)
+                    for r in reqs
+                ])
+                try:
+                    vals, poss = engine.query_mixed(ls, rs, flags)
+                except Exception:
+                    # keep the per-(index, op) failure-isolation
+                    # contract: retry each op group separately so one
+                    # bad op group cannot take the other down with it
+                    run_group(name, VALUE, groups[(name, VALUE)])
+                    run_group(name, INDEX, groups[(name, INDEX)])
+                    continue
+                if len(reqs) > 1:
+                    self.coalesced_batches += 1
+                # per-ticket scatter, picking each request's plane —
+                # mirrors run_group's offset bookkeeping; changes to
+                # either scatter must land in both
+                off = 0
+                for r in reqs:
+                    cnt = r.ls.shape[0]
+                    plane = poss if r.op == INDEX else vals
+                    out[r.ticket] = jnp.asarray(plane[off : off + cnt])
+                    off += cnt
+                continue
+            run_group(name, op, reqs)
         self._results.update(out)
         while len(self._results) > self.max_unclaimed:
             self._results.popitem(last=False)

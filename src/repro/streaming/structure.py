@@ -16,7 +16,8 @@ The structure is pure-functional: every mutator returns a new
 ``StreamingRMQ`` sharing unmodified buffers.  ``backend="pallas"`` routes
 chunk re-reductions through ``repro.kernels.hierarchy_update``;
 ``backend="fused"`` builds the initial hierarchy in one kernel launch
-(``repro.kernels.hierarchy_fused``) and mutates through the platform
+(``repro.kernels.hierarchy_fused``), answers query batches in one launch
+(``repro.kernels.rmq_fused``), and mutates through the platform
 default.  Every backend is bit-identical to a fresh build of the mutated
 array.
 

@@ -1,0 +1,553 @@
+"""Cross-backend differential harness (ISSUE 5's test centerpiece).
+
+Random op sequences — build → update/append → query_value/query_index
+over random spans — run against a plain **numpy oracle**, sweeping every
+index implementation (``RMQ``, ``StreamingRMQ``, ``HybridRMQ``,
+1×1-mesh ``DistributedRMQ``) × every backend (``jax``, ``pallas``,
+``fused``), asserting bit-identical values AND leftmost-tie positions at
+every step.  The oracle is deliberately dumb (``min`` / ``argmin`` over
+the live slice): any divergence in window math, padding, tie-breaking,
+mutation propagation, or backend lowering fails here.
+
+Also in this module (the fused-query PR's acceptance contract):
+
+* single-launch accounting — a mixed short/mid/long batch through a
+  fused-backend engine records exactly ONE ``rmq_fused`` launch, for
+  each of the four index implementations;
+* targeted edge-case seams the fused path must preserve (``l == r``,
+  the exact two-aligned-chunk short/mid boundary, full-array spans, the
+  ``capacity > n`` +inf tail, stale-cache regressions after
+  update/append through the fused executor).
+
+Must-run coverage is numpy-RNG parametrized sweeps; hypothesis (when
+installed) adds randomized geometry/op-sequence depth on the cheap
+backends.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core.api import RMQ
+from repro.core.distributed import DistributedRMQ
+from repro.core.hybrid import HybridRMQ
+from repro.core.query import rmq_index_batch, rmq_value_batch
+from repro.kernels.profiling import count_launches
+from repro.qe import FUSED, QueryEngine
+from repro.streaming import StreamingRMQ
+
+INDEX_KINDS = ("rmq", "streaming", "hybrid", "distributed")
+BACKENDS = ("jax", "pallas", "fused")
+
+
+# ---------------------------------------------------------------------------
+# the numpy oracle: the dumbest possible correct RMQ
+# ---------------------------------------------------------------------------
+class NumpyOracle:
+    """Live array + O(span) min/argmin answers; last-wins updates."""
+
+    def __init__(self, x):
+        self.x = np.asarray(x, np.float32).copy()
+
+    @property
+    def n(self):
+        return self.x.shape[0]
+
+    def update(self, idxs, vals):
+        # apply sequentially so duplicate indices are last-wins by
+        # construction (the indexes' documented contract)
+        for i, v in zip(idxs, vals):
+            self.x[int(i)] = v
+
+    def append(self, vals):
+        self.x = np.concatenate([self.x, np.asarray(vals, np.float32)])
+
+    def query_value(self, ls, rs):
+        return np.array(
+            [self.x[l : r + 1].min() for l, r in zip(ls, rs)], np.float32
+        )
+
+    def query_index(self, ls, rs):
+        return np.array(
+            [l + int(np.argmin(self.x[l : r + 1]))
+             for l, r in zip(ls, rs)],
+            np.int32,
+        )
+
+
+def _tied_values(rng, n):
+    """Integer-valued floats: heavy ties make leftmost breaks decisive."""
+    return rng.integers(-4, 4, n).astype(np.float32)
+
+
+def _random_spans(rng, n, m):
+    ls = rng.integers(0, n, m)
+    rs = np.minimum(ls + rng.integers(0, n, m), n - 1)
+    return (np.minimum(ls, rs).astype(np.int32),
+            np.maximum(ls, rs).astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# index adapters (build / mutate / query through one surface)
+# ---------------------------------------------------------------------------
+def _build_index(kind, backend, x, c, t, cap):
+    if kind == "rmq":
+        return RMQ.build(x, c=c, t=t, with_positions=True,
+                         backend=backend, capacity=cap)
+    if kind == "streaming":
+        return StreamingRMQ.from_array(x, c=c, t=t, with_positions=True,
+                                       backend=backend, capacity=cap)
+    if kind == "hybrid":
+        # read-only: no capacity reservation; mutations rebuild (below)
+        return HybridRMQ.build(x, c=c, t=t, with_positions=True,
+                               backend=backend)
+    if kind == "distributed":
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        return DistributedRMQ.build(np.asarray(x), mesh, c=c, t=t,
+                                    with_positions=True, capacity=cap,
+                                    backend=backend)
+    raise ValueError(kind)
+
+
+def _mutate_index(kind, backend, idx, oracle, c, t, idxs, vals, tail):
+    """Apply (update, append) to the index; hybrid rebuilds instead."""
+    if kind == "hybrid":
+        # the hybrid is read-only by design (a point update can move
+        # top-level minima); its differential story is rebuild-per-step
+        return HybridRMQ.build(oracle.x, c=c, t=t, with_positions=True,
+                               backend=backend)
+    if idxs.shape[0]:
+        idx = idx.update(idxs, vals)
+    if tail.shape[0]:
+        idx = idx.append(tail)
+    return idx
+
+
+def _check_parity(idx, oracle, ls, rs):
+    np.testing.assert_array_equal(
+        np.asarray(idx.query_value_batch(ls, rs)),
+        oracle.query_value(ls, rs),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(idx.query_index_batch(ls, rs)),
+        oracle.query_index(ls, rs),
+    )
+
+
+def _run_sequence(kind, backend, *, n, c, t, cap, seed, steps, m=48):
+    """build → (update/append → queries)* against the numpy oracle."""
+    rng = np.random.default_rng(seed)
+    oracle = NumpyOracle(_tied_values(rng, n))
+    idx = _build_index(kind, backend, oracle.x, c, t, cap)
+
+    ls, rs = _random_spans(rng, oracle.n, m)
+    _check_parity(idx, oracle, ls, rs)
+
+    headroom = cap - n
+    for step in range(steps):
+        nn = oracle.n
+        idxs = rng.integers(0, nn, 12)
+        # duplicate index with two values: last must win everywhere
+        if idxs.shape[0] >= 2:
+            idxs[1] = idxs[0]
+        vals = _tied_values(rng, 12)
+        take = min(headroom // max(steps, 1), 20)
+        tail = _tied_values(rng, take)
+        if kind == "hybrid":
+            oracle.update(idxs, vals)
+            oracle.append(tail)
+            idx = _mutate_index(kind, backend, idx, oracle, c, t,
+                                idxs, vals, tail)
+        else:
+            idx = _mutate_index(kind, backend, idx, oracle, c, t,
+                                idxs, vals, tail)
+            oracle.update(idxs, vals)
+            oracle.append(tail)
+        assert oracle.n == (idx.plan.n if kind == "hybrid"
+                            else int(idx.length))
+        ls, rs = _random_spans(rng, oracle.n, m)
+        _check_parity(idx, oracle, ls, rs)
+
+
+# ---------------------------------------------------------------------------
+# the sweep: 4 implementations x 3 backends, mutations included
+# ---------------------------------------------------------------------------
+class TestDifferentialSweep:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("kind", INDEX_KINDS)
+    def test_random_op_sequence(self, kind, backend):
+        # distributed: 2-level local plan (the first compile of a
+        # 3-level distributed walk is minutes on CPU XLA — see
+        # test_distributed_rmq.py); everything else gets 3 levels.
+        if kind == "distributed":
+            geo = dict(n=257, c=8, t=8, cap=400)
+        else:
+            geo = dict(n=257, c=8, t=2, cap=400)
+        seed = INDEX_KINDS.index(kind) * 11 + BACKENDS.index(backend)
+        _run_sequence(kind, backend, seed=seed, steps=3, **geo)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_engine_routed_sequence(self, backend):
+        """The same differential, but queried through the span-routed /
+        fused engine with attach-after-mutation (cache invalidation is
+        part of the contract under test)."""
+        rng = np.random.default_rng(99)
+        n, c, t, cap = 300, 8, 2, 450
+        oracle = NumpyOracle(_tied_values(rng, n))
+        idx = _build_index("rmq", backend, oracle.x, c, t, cap)
+        engine = idx.engine(cache_size=256)
+        for step in range(3):
+            ls, rs = _random_spans(rng, oracle.n, 40)
+            np.testing.assert_array_equal(
+                np.asarray(engine.query(ls, rs)),
+                oracle.query_value(ls, rs),
+            )
+            np.testing.assert_array_equal(
+                np.asarray(engine.query_index(ls, rs)),
+                oracle.query_index(ls, rs),
+            )
+            idxs = rng.integers(0, oracle.n, 8)
+            vals = _tied_values(rng, 8)
+            tail = _tied_values(rng, 10)
+            idx = idx.update(idxs, vals).append(tail)
+            oracle.update(idxs, vals)
+            oracle.append(tail)
+            engine.attach(idx)
+
+    @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis")
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(min_value=2, max_value=600),
+        log_c=st.integers(min_value=1, max_value=4),
+        t=st.integers(min_value=1, max_value=4),
+        headroom=st.integers(min_value=0, max_value=120),
+        kind=st.sampled_from(("rmq", "streaming")),
+        backend=st.sampled_from(("jax", "fused")),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_property_random_geometry(self, n, log_c, t, headroom, kind,
+                                      backend, seed):
+        """Randomized geometry depth on the cheap backends (pallas
+        interpret-mode retraces per geometry would dominate runtime;
+        its coverage is the fixed-geometry sweep above)."""
+        _run_sequence(kind, backend, n=n, c=2 ** log_c, t=t,
+                      cap=n + headroom, seed=seed, steps=2, m=24)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: ONE recorded launch for a mixed span batch, all 4 indexes
+# ---------------------------------------------------------------------------
+def _mixed_span_batch(rng, n, c, m=90):
+    """Spans pinned across short / mid / long classes, shuffled."""
+    third = m // 3
+    spans = np.concatenate([
+        rng.integers(1, c + 1, third),                  # short
+        rng.integers(2 * c + 2, max(n // 3, 2 * c + 3), third),  # mid
+        rng.integers(max(2 * n // 3, 2), n + 1, m - 2 * third),  # long
+    ])
+    rng.shuffle(spans)
+    ls = (rng.random(m) * np.maximum(n - spans + 1, 1)).astype(np.int64)
+    rs = np.minimum(ls + spans - 1, n - 1)
+    return ls.astype(np.int32), rs.astype(np.int32)
+
+
+class TestFusedSingleLaunch:
+    """A mixed short/mid/long batch through a fused-backend engine is
+    bit-identical to the engine oracle (values + leftmost-tie indices)
+    and costs exactly ONE recorded ``rmq_fused`` launch — for every
+    index implementation.  Geometries are unique to this class so the
+    first-trace launch accounting is fresh (see kernels/profiling).
+    """
+
+    def _assert_one_launch(self, engine, oracle_x, n, rng):
+        c = engine.index.plan.c
+        ls, rs = _mixed_span_batch(rng, n, c)
+        oracle = NumpyOracle(oracle_x)
+        with count_launches() as counts:
+            got_v = np.asarray(engine.query(ls, rs))
+        assert counts == {"rmq_fused": 1}, counts
+        with count_launches() as counts:
+            got_p = np.asarray(engine.query_index(ls, rs))
+        # index queries are a separate (track_pos) specialization:
+        # still one launch, never more
+        assert counts == {"rmq_fused": 1}, counts
+        np.testing.assert_array_equal(got_v, oracle.query_value(ls, rs))
+        np.testing.assert_array_equal(got_p, oracle.query_index(ls, rs))
+
+    def test_rmq(self):
+        rng = np.random.default_rng(0)
+        n = 2113
+        x = _tied_values(rng, n)
+        r = RMQ.build(x, c=8, t=8, with_positions=True, backend="fused",
+                      capacity=2400)
+        self._assert_one_launch(r.engine(cache_size=0), x, n, rng)
+
+    def test_streaming(self):
+        rng = np.random.default_rng(1)
+        n = 2129
+        x = _tied_values(rng, n)
+        s = StreamingRMQ.from_array(x, c=8, t=8, with_positions=True,
+                                    backend="fused", capacity=2500)
+        self._assert_one_launch(s.engine(cache_size=0), x, n, rng)
+
+    def test_hybrid(self):
+        # the hybrid's own backend is always 'jax' (its walk is pure
+        # JAX); the engine still prefers the fused executor when asked
+        rng = np.random.default_rng(2)
+        n = 2141
+        x = _tied_values(rng, n)
+        h = HybridRMQ.build(x, c=8, t=8, with_positions=True,
+                            backend="fused")
+        engine = QueryEngine(h, backend="fused", cache_size=0)
+        self._assert_one_launch(engine, x, n, rng)
+
+    def test_distributed(self):
+        # 1x1 mesh: every span is segment-contained, so the engine's
+        # no-collective fast path answers the whole batch — through the
+        # fused lowering, in one launch per (track) specialization
+        rng = np.random.default_rng(3)
+        n = 2153
+        x = _tied_values(rng, n)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        d = DistributedRMQ.build(x, mesh, c=8, t=64, with_positions=True,
+                                 backend="fused")
+        self._assert_one_launch(d.engine(cache_size=0), x, n, rng)
+
+    def test_mixed_ops_one_launch(self):
+        """Value AND index ops in one batch: one launch total (both
+        output planes come out of the same kernel call)."""
+        rng = np.random.default_rng(4)
+        n = 2161
+        x = _tied_values(rng, n)
+        r = RMQ.build(x, c=8, t=8, with_positions=True, backend="fused")
+        engine = r.engine(cache_size=64)
+        ls, rs = _mixed_span_batch(rng, n, 8)
+        is_index = rng.random(ls.shape[0]) < 0.5
+        oracle = NumpyOracle(x)
+        with count_launches() as counts:
+            vals, poss = engine.query_mixed(ls, rs, is_index)
+        assert counts == {"rmq_fused": 1}, counts
+        np.testing.assert_array_equal(
+            vals[~is_index], oracle.query_value(ls, rs)[~is_index]
+        )
+        np.testing.assert_array_equal(
+            poss[is_index], oracle.query_index(ls, rs)[is_index]
+        )
+        # mixed results land in the per-op cache: repeats are pure hits
+        h0 = engine.cache.hits
+        engine.query_mixed(ls, rs, is_index)
+        assert engine.cache.hits > h0
+
+    def test_query_mixed_fallback_parity(self):
+        """query_mixed on a NON-fused engine (no single-launch claim)
+        still answers both planes bit-identically."""
+        rng = np.random.default_rng(5)
+        n = 997
+        x = _tied_values(rng, n)
+        r = RMQ.build(x, c=8, t=2, with_positions=True, backend="jax")
+        engine = r.engine()
+        assert not engine.supports_mixed
+        ls, rs = _random_spans(rng, n, 64)
+        is_index = rng.random(64) < 0.5
+        vals, poss = engine.query_mixed(ls, rs, is_index)
+        oracle = NumpyOracle(x)
+        np.testing.assert_array_equal(
+            vals[~is_index], oracle.query_value(ls, rs)[~is_index]
+        )
+        np.testing.assert_array_equal(
+            poss[is_index], oracle.query_index(ls, rs)[is_index]
+        )
+
+
+# ---------------------------------------------------------------------------
+# service-level fused coalescing
+# ---------------------------------------------------------------------------
+class TestFusedService:
+    def test_mixed_merge_scatters_per_ticket(self):
+        from repro.qe import QueryService
+
+        rng = np.random.default_rng(20)
+        n = 1500
+        x = _tied_values(rng, n)
+        r = RMQ.build(x, c=8, t=2, with_positions=True, backend="fused")
+        svc = QueryService()
+        svc.register("a", r)
+        ls, rs = _random_spans(rng, n, 40)
+        t_v = svc.submit("a", ls[:20], rs[:20])
+        t_i = svc.submit("a", ls[20:], rs[20:], op="index")
+        res = svc.flush()
+        oracle = NumpyOracle(x)
+        np.testing.assert_array_equal(
+            np.asarray(res[t_v]), oracle.query_value(ls[:20], rs[:20])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res[t_i]), oracle.query_index(ls[20:], rs[20:])
+        )
+
+    def test_merged_flush_keeps_per_op_failure_isolation(self):
+        """A failing op group in a MERGED mixed flush must not take the
+        index's healthy other-op group down with it (the PR 3
+        failure-isolation contract, preserved across merging)."""
+        from repro.qe import QueryService
+
+        rng = np.random.default_rng(21)
+        n = 1500
+        x = _tied_values(rng, n)
+        r = RMQ.build(x, c=8, t=2, with_positions=True, backend="fused")
+        value_only = RMQ.build(x, c=8, t=2, backend="fused")
+        svc = QueryService()
+        svc.register("a", r)
+        t_v = svc.submit("a", np.array([0]), np.array([n - 1]))
+        t_i = svc.submit("a", np.array([1]), np.array([50]), op="index")
+        # admission checked positions against the old binding; the
+        # value-only successor lands before the flush
+        svc.attach("a", value_only, reset_cache=True)
+        with pytest.raises(RuntimeError, match="claimable"):
+            svc.flush()
+        # the VALUE group executed on the per-op retry and survived
+        assert float(svc.take(t_v)[0]) == x.min()
+        with pytest.raises(KeyError):
+            svc.take(t_i)
+
+
+# ---------------------------------------------------------------------------
+# targeted seams the fused path must preserve
+# ---------------------------------------------------------------------------
+class TestFusedSeams:
+    """Planner/cache seam cases routed through the fused executor."""
+
+    def _engine(self, rng, n=520, c=8, t=2, cap=760):
+        x = _tied_values(rng, n)
+        r = RMQ.build(x, c=c, t=t, with_positions=True, backend="fused",
+                      capacity=cap)
+        return x, r, r.engine(cache_size=128)
+
+    def test_point_and_boundary_spans(self):
+        rng = np.random.default_rng(10)
+        x, r, engine = self._engine(rng)
+        n, c = 520, 8
+        ls = np.array([
+            0,            # l == r at the left edge
+            n - 1,        # l == r at the right edge (capacity tail abuts)
+            2 * c,        # exactly 2 aligned chunks: [2c, 4c)
+            2 * c,        # one past: 2 chunks + 1 entry -> mid class
+            0,            # full-array span
+            3 * c - 1,    # crosses one chunk boundary (short)
+        ], np.int32)
+        rs = np.array([
+            0,
+            n - 1,
+            4 * c - 1,
+            4 * c,
+            n - 1,
+            3 * c,
+        ], np.int32)
+        oracle = NumpyOracle(x)
+        np.testing.assert_array_equal(
+            np.asarray(engine.query(ls, rs)), oracle.query_value(ls, rs)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(engine.query_index(ls, rs)),
+            oracle.query_index(ls, rs),
+        )
+
+    def test_capacity_tail_never_wins(self):
+        """capacity > n: the +inf-reserved tail must not leak into
+        results for spans touching the live right edge — before OR
+        after appends move that edge."""
+        rng = np.random.default_rng(11)
+        n, c, cap = 130, 8, 200
+        x = _tied_values(rng, n)
+        r = RMQ.build(x, c=c, t=2, with_positions=True, backend="fused",
+                      capacity=cap)
+        engine = r.engine()
+        oracle = NumpyOracle(x)
+        ls = np.array([n - 1, n - 2, 0, n - c], np.int32)
+        rs = np.array([n - 1, n - 1, n - 1, n - 1], np.int32)
+        np.testing.assert_array_equal(
+            np.asarray(engine.query(ls, rs)), oracle.query_value(ls, rs)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(engine.query_index(ls, rs)),
+            oracle.query_index(ls, rs),
+        )
+        # grow into the tail; the new edge behaves identically
+        tail = np.full((30,), 9.0, np.float32)  # larger than any live min
+        r2 = r.append(tail)
+        oracle.append(tail)
+        engine.attach(r2)
+        n2 = oracle.n
+        ls2 = np.array([n2 - 1, n2 - 30, 0], np.int32)
+        rs2 = np.array([n2 - 1, n2 - 1, n2 - 1], np.int32)
+        np.testing.assert_array_equal(
+            np.asarray(engine.query(ls2, rs2)),
+            oracle.query_value(ls2, rs2),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(engine.query_index(ls2, rs2)),
+            oracle.query_index(ls2, rs2),
+        )
+
+    def test_stale_cache_after_update_through_fused(self):
+        rng = np.random.default_rng(12)
+        x, r, engine = self._engine(rng)
+        l, r_ = 40, 480
+        before = float(engine.query(np.array([l]), np.array([r_]))[0])
+        assert before == x[l : r_ + 1].min()
+        h0 = engine.cache.hits
+        engine.query(np.array([l]), np.array([r_]))
+        assert engine.cache.hits == h0 + 1          # served from cache
+        pos = 222
+        r2 = r.update(np.array([pos]), np.array([-9.0], np.float32))
+        engine.attach(r2)
+        assert float(engine.query(np.array([l]), np.array([r_]))[0]) \
+            == -9.0
+        assert int(
+            engine.query_index(np.array([l]), np.array([r_]))[0]
+        ) == pos
+
+    def test_stale_cache_after_append_through_fused(self):
+        rng = np.random.default_rng(13)
+        x, r, engine = self._engine(rng)
+        n = 520
+        v0 = float(engine.query(np.array([0]), np.array([n - 1]))[0])
+        r2 = r.append(np.array([-11.0], np.float32))
+        engine.attach(r2)
+        # old range unchanged; extended range sees the appended minimum
+        assert float(engine.query(np.array([0]), np.array([n - 1]))[0]) \
+            == v0
+        assert float(engine.query(np.array([0]), np.array([n]))[0]) \
+            == -11.0
+
+    def test_value_only_fused_index_raises(self):
+        x = np.random.default_rng(14).random(600).astype(np.float32)
+        r = RMQ.build(x, c=8, t=2, backend="fused")  # value-only
+        engine = r.engine()
+        np.testing.assert_array_equal(
+            np.asarray(engine.query(np.array([3]), np.array([580]))),
+            np.array([x[3:581].min()], np.float32),
+        )
+        with pytest.raises(ValueError, match="without positions"):
+            engine.query_index(np.array([0]), np.array([10]))
+        with pytest.raises(ValueError, match="without positions"):
+            r.query_index(np.array([0]), np.array([10]))
+
+    def test_fused_engine_matches_core_oracle_exactly(self):
+        """Belt-and-braces: fused engine vs the core jnp walk (not just
+        the numpy oracle) — same values, same tie positions."""
+        rng = np.random.default_rng(15)
+        x, r, engine = self._engine(rng)
+        ls, rs = _random_spans(rng, 520, 200)
+        lsj, rsj = jnp.asarray(ls), jnp.asarray(rs)
+        np.testing.assert_array_equal(
+            np.asarray(engine.query(ls, rs)),
+            np.asarray(rmq_value_batch(r.hierarchy, lsj, rsj)),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(engine.query_index(ls, rs)),
+            np.asarray(rmq_index_batch(r.hierarchy, lsj, rsj)),
+        )
+        assert engine.stats()["class_counts"][FUSED] > 0

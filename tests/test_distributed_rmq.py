@@ -147,6 +147,60 @@ def test_distributed_mutation_and_engine_on_2x4_fake_mesh():
     _run_fake_mesh_subprocess(_MUTATION_PROG)
 
 
+_FUSED_PROG = r"""
+import numpy as np, jax
+from repro.core.distributed import DistributedRMQ
+
+# backend='fused' on a REAL multi-segment mesh: shard-local construction
+# AND shard-local queries run the fused single-launch lowering under
+# shard_map — the 1x1 coverage in test_differential.py can't catch a
+# wrong seg_start globalization or a crossing/contained split bug.
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(11)
+n = 2901
+x = rng.integers(-3, 3, n).astype(np.float32)  # heavy cross-segment ties
+d = DistributedRMQ.build(x, mesh, c=8, t=16, with_positions=True,
+                         capacity=3200, backend="fused")
+assert d.backend == "fused" and d.num_segments == 4
+m = 96
+ls = rng.integers(0, n, m)
+rs = np.minimum(ls + rng.integers(0, n, m), n - 1)
+ls, rs = np.minimum(ls, rs).astype(np.int32), np.maximum(ls, rs).astype(np.int32)
+want_v = np.array([x[l:r+1].min() for l, r in zip(ls, rs)], np.float32)
+want_p = np.array([l + np.argmin(x[l:r+1]) for l, r in zip(ls, rs)], np.int32)
+np.testing.assert_array_equal(np.asarray(d.query(ls, rs)), want_v)
+np.testing.assert_array_equal(np.asarray(d.query_index(ls, rs)), want_p)
+eng = d.engine(cache_size=0)
+np.testing.assert_array_equal(np.asarray(eng.query(ls, rs)), want_v)
+np.testing.assert_array_equal(np.asarray(eng.query_index(ls, rs)), want_p)
+cc = eng.stats()["class_counts"]
+assert cc["seg_local"] > 0 and cc["crossing"] > 0, cc
+# mutation on the fused sharded index stays bit-exact vs numpy
+idxs = rng.integers(0, n, 24); vals = rng.integers(-5, 5, 24).astype(np.float32)
+tail = rng.integers(-2, 2, 150).astype(np.float32)  # straddles 3000
+d2 = d.update(idxs, vals).append(tail)
+x2 = x.copy()
+for i, v in zip(idxs, vals):
+    x2[i] = v
+x2 = np.concatenate([x2, tail])
+n2 = x2.shape[0]
+ls2 = rng.integers(0, n2, m)
+rs2 = np.minimum(ls2 + rng.integers(0, n2, m), n2 - 1)
+ls2, rs2 = np.minimum(ls2, rs2).astype(np.int32), np.maximum(ls2, rs2).astype(np.int32)
+np.testing.assert_array_equal(
+    np.asarray(d2.query(ls2, rs2)),
+    np.array([x2[l:r+1].min() for l, r in zip(ls2, rs2)], np.float32))
+np.testing.assert_array_equal(
+    np.asarray(d2.query_index(ls2, rs2)),
+    np.array([l + np.argmin(x2[l:r+1]) for l, r in zip(ls2, rs2)], np.int32))
+print("SUBPROCESS_OK")
+"""
+
+
+def test_distributed_fused_backend_on_2x4_fake_mesh():
+    _run_fake_mesh_subprocess(_FUSED_PROG)
+
+
 def test_process_sees_one_device():
     """Guard: the fake-device flag must never leak into the test process."""
     assert jax.device_count() == 1

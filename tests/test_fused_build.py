@@ -160,10 +160,17 @@ class TestLaunchAccounting:
 
 class TestBackendRouting:
     def test_resolve_and_runtime(self):
+        from repro.core.protocol import mutation_backend
+
         assert resolve_backend("fused") == "fused"
-        assert runtime_backend("fused") in ("jax", "pallas")
+        # since the fused QUERY kernel landed, 'fused' is a runtime
+        # backend (one launch per batch); only mutations degrade
+        assert runtime_backend("fused") == "fused"
         assert runtime_backend("jax") == "jax"
         assert runtime_backend("pallas") == "pallas"
+        assert mutation_backend("fused") in ("jax", "pallas")
+        assert mutation_backend("jax") == "jax"
+        assert mutation_backend("pallas") == "pallas"
         with pytest.raises(ValueError):
             resolve_backend("cuda")
 

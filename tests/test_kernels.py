@@ -137,6 +137,84 @@ class TestRmqScanKernel:
 
 
 # ---------------------------------------------------------------------------
+# rmq_fused (whole mixed batch, one launch, both output planes)
+# ---------------------------------------------------------------------------
+class TestRmqFusedKernel:
+    @pytest.mark.parametrize("n,c,t,qb", [
+        (100_000, 128, 4, 64),
+        (65_536, 256, 2, 32),
+        (300_000, 128, 2, 64),   # 4 levels
+        (5_000, 16, 4, 16),      # 3 levels, small chunks
+    ])
+    def test_both_planes_match_naive(self, n, c, t, qb):
+        """One interpret-mode launch returns values AND leftmost-tie
+        positions matching the naive oracle (the production off-TPU
+        lowering is the jnp program — covered by test_differential;
+        this pins the pallas kernel itself)."""
+        from repro.kernels.rmq_fused.ops import rmq_fused_batch
+
+        rng = np.random.default_rng(n)
+        x = rng.random(n).astype(np.float32)
+        x[rng.integers(0, n, n // 8)] = 0.5  # ties
+        plan = make_plan(n, c=c, t=t)
+        h = build_hierarchy(jnp.asarray(x), plan, with_positions=True)
+        ls, rs = _queries(rng, n, 128)
+        want = np.array([x[l : r + 1].min() for l, r in zip(ls, rs)])
+        wantp = np.array(
+            [l + np.argmin(x[l : r + 1]) for l, r in zip(ls, rs)]
+        )
+        vals, pos = rmq_fused_batch(
+            h, jnp.asarray(ls), jnp.asarray(rs), track_pos=True, qb=qb,
+            interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(vals), want)
+        np.testing.assert_array_equal(np.asarray(pos), wantp)
+
+    def test_kernel_equals_package_ref_and_jnp_lowering(self):
+        """Kernel vs the package's pure-jnp oracle vs the one-dispatch
+        jnp production lowering: all three bit-identical."""
+        from repro.kernels.rmq_fused.ops import _fused_jnp, rmq_fused_batch
+        from repro.kernels.rmq_fused.ref import rmq_fused_batch_ref
+
+        rng = np.random.default_rng(77)
+        n, cap = 20_000, 26_000   # reserved +inf tail in play
+        x = rng.integers(-4, 4, n).astype(np.float32)
+        plan = make_plan(n, c=64, t=2, capacity=cap)
+        h = build_hierarchy(jnp.asarray(x), plan, with_positions=True)
+        ls, rs = _queries(rng, n, 96)
+        lsj, rsj = jnp.asarray(ls), jnp.asarray(rs)
+        kv, kp = rmq_fused_batch(h, lsj, rsj, track_pos=True, qb=32,
+                                 interpret=True)
+        rv, rp = rmq_fused_batch_ref(plan, h.base, h.upper, h.upper_pos,
+                                     lsj, rsj, track_pos=True)
+        jv, jp = _fused_jnp(h.base, h.upper, h.upper_pos,
+                            lsj.astype(jnp.int32), rsj.astype(jnp.int32),
+                            plan, True)
+        for got in ((kv, kp), (jv, jp)):
+            np.testing.assert_array_equal(np.asarray(got[0]),
+                                          np.asarray(rv))
+            np.testing.assert_array_equal(np.asarray(got[1]),
+                                          np.asarray(rp))
+
+    def test_value_only_and_padding(self):
+        """Value-only launches and batch sizes not divisible by qb."""
+        from repro.kernels.rmq_fused.ops import rmq_fused_value_batch
+
+        rng = np.random.default_rng(6)
+        n = 10_000
+        x = rng.random(n).astype(np.float32)
+        h = build_hierarchy(jnp.asarray(x), make_plan(n, c=128, t=1))
+        ls, rs = _queries(rng, n, 37)  # prime batch size
+        got = np.asarray(
+            rmq_fused_value_batch(
+                h, jnp.asarray(ls), jnp.asarray(rs), qb=16, interpret=True
+            )
+        )
+        want = np.array([x[l : r + 1].min() for l, r in zip(ls, rs)])
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
 # rmq_short (two-chunk short-span scan)
 # ---------------------------------------------------------------------------
 class TestRmqShortKernel:

@@ -135,3 +135,70 @@ class TestSharedValidation:
         assert out.dtype == np.float32
         with pytest.raises(ValueError, match="rank-1"):
             px.coerce_values(np.zeros((2, 2)))
+
+
+class TestValidationMessageParity:
+    """Regression for the PR 2 follow-up: every mutable implementation
+    rejects malformed update/append batches through the SHARED
+    ``validate_update_batch``/``validate_append_batch`` — so the error
+    text must be *identical* across indexes, including the sharded one.
+    A reintroduced private copy (with drifting wording) fails here.
+    """
+
+    @pytest.fixture(scope="class")
+    def mutables(self):
+        from repro.core.distributed import DistributedRMQ
+
+        x = np.random.default_rng(2).random(900).astype(np.float32)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        return (
+            RMQ.build(x, c=16, t=4, backend="jax", capacity=1200),
+            StreamingRMQ.from_array(
+                x, c=16, t=4, backend="jax", capacity=1200
+            ),
+            DistributedRMQ.build(x, mesh, c=16, t=4, capacity=1200),
+        )
+
+    def _messages(self, mutables, exc, fn):
+        msgs = []
+        for idx in mutables:
+            with pytest.raises(exc) as ei:
+                fn(idx)
+            msgs.append(str(ei.value))
+        return msgs
+
+    def test_update_shape_mismatch_identical(self, mutables):
+        msgs = self._messages(
+            mutables, ValueError,
+            lambda i: i.update(np.array([1, 2]),
+                               np.array([0.5], np.float32)),
+        )
+        assert len(set(msgs)) == 1, msgs
+        assert "matching 1-D batches" in msgs[0]
+
+    def test_update_dtype_identical(self, mutables):
+        msgs = self._messages(
+            mutables, TypeError,
+            lambda i: i.update(np.array([0.5]),
+                               np.array([1.0], np.float32)),
+        )
+        assert len(set(msgs)) == 1, msgs
+        assert "idxs must be integers" in msgs[0]
+
+    def test_append_overflow_identical(self, mutables):
+        # all three share length 900 / capacity 1200, so the shared
+        # validator renders byte-identical text for each
+        msgs = self._messages(
+            mutables, ValueError,
+            lambda i: i.append(np.zeros(301, np.float32)),
+        )
+        assert len(set(msgs)) == 1, msgs
+        assert "overflows capacity 1200 (live length 900)" in msgs[0]
+
+    def test_append_rank_identical(self, mutables):
+        msgs = self._messages(
+            mutables, ValueError,
+            lambda i: i.append(np.zeros((2, 2), np.float32)),
+        )
+        assert len(set(msgs)) == 1, msgs
+        assert "vals must be 1-D" in msgs[0]
