@@ -24,6 +24,8 @@ MODULES = [
     ("engine_throughput",
      "routed vs fused vs monolithic query paths (+ BENCH_query.json)"),
     ("distributed_engine", "distributed routing + sharded update cost"),
+    ("serving_qps",
+     "deadline-batched serving tier vs flush-per-request QPS/p99"),
     ("tuning", "Fig. 12 (c, t) tuning"),
     ("query_assignment", "Fig. 14 multi-load vs WLQ"),
     ("coalesced_access", "Fig. 4 access coalescing microbench"),

@@ -1,0 +1,366 @@
+"""Serving-tier QPS: deadline micro-batching vs flush-per-request.
+
+The serving tier's throughput claim, measured: ``W`` closed-loop client
+threads fire small mixed value/index batches at one fused-backend index
+while a mutator thread streams point updates the whole time.  Two ways
+to serve the same workload:
+
+* ``flush_per_request`` — the pre-tier shape: clients share one
+  ``QueryService`` behind a lock and pay one fused launch per request
+  (submit → flush → take, serialized);
+* ``deadline_tier``     — clients submit to the ``ServingTier`` and
+  block on their tickets; the deadline scheduler coalesces every
+  client's requests (and the mutator's staged updates) into one fused
+  launch per flush cycle.
+
+Outside ``REPRO_BENCH_TINY`` the run *asserts* the acceptance bar:
+deadline batching sustains >= 3x the QPS of flush-per-request at equal
+or better p99 (the tier's p99 is one SLO window + one launch; the
+baseline's is the whole lock convoy).  Both modes additionally assert:
+
+* snapshot parity — every tier answer is bit-identical to a numpy
+  replay of the mutation log at the ticket's recorded generation
+  (snapshot isolation under concurrent mutation, end to end);
+* the launch contract — one ``ServingTier.drain`` flush of a mixed
+  read+mutation backlog records exactly ONE ``rmq_fused`` launch
+  (fresh geometry so the trace-time counter fires; see
+  ``repro.kernels.profiling``).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, tiny_mode
+from repro.core.api import RMQ
+from repro.kernels.profiling import count_launches
+from repro.qe import QueryService
+from repro.qe.executors import INDEX, VALUE
+from repro.serving import ServingTier
+
+
+def _workload(rng, n: int, workers: int, requests: int, q: int):
+    """Per-worker request list: (ls, rs, op) of ``q`` random spans."""
+    plans = []
+    for _ in range(workers):
+        reqs = []
+        for j in range(requests):
+            s = rng.integers(1, max(2, n // 4), q)
+            ls = (rng.random(q) * (n - s)).astype(np.int32)
+            rs = (ls + s - 1).astype(np.int32)
+            reqs.append((ls, rs, INDEX if j % 3 == 2 else VALUE))
+        plans.append(reqs)
+    return plans
+
+
+class _Mutator:
+    """Background point-update stream with an ordered log for replay."""
+
+    def __init__(self, rng, n: int, batch: int = 32,
+                 interval_s: float = 0.002):
+        self.rng, self.n, self.batch = rng, n, batch
+        self.interval_s = interval_s
+        self.log = []            # [(idxs, vals)] in staging order
+        self._stop = threading.Event()
+        self._thread = None
+
+    def next_batch(self):
+        idxs = self.rng.integers(0, self.n, self.batch).astype(np.int32)
+        vals = self.rng.random(self.batch).astype(np.float32)
+        self.log.append((idxs, vals))
+        return idxs, vals
+
+    def run(self, stage) -> None:
+        self._thread = threading.Thread(
+            target=self._loop, args=(stage,), daemon=True
+        )
+        self._thread.start()
+
+    def _loop(self, stage) -> None:
+        while not self._stop.is_set():
+            stage(*self.next_batch())
+            time.sleep(self.interval_s)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+
+
+def _percentile(lat, p):
+    return float(np.percentile(np.asarray(lat), p))
+
+
+def _warmup_spans(rng, n: int, q: int):
+    s = rng.integers(1, max(2, n // 4), q)
+    ls = (rng.random(q) * (n - s)).astype(np.int32)
+    return ls, (ls + s - 1).astype(np.int32)
+
+
+# Bucket geometries the measured phase can hit (executors pad to pow2
+# buckets).  Warmed untimed in both strategies so the comparison is
+# steady-state serving, not who paid which jit compile when — the same
+# warmup discipline as ``common.time_fn``.
+def _warmup_sizes(tiny: bool):
+    return (4, 8, 16) if tiny else (4, 16, 32, 64)
+
+
+def run_flush_per_request(x, plans, mut_interval: float, seed: int,
+                          warm_sizes=(4,)):
+    """Baseline: shared service + lock, one flush (= one launch) per
+    request; the mutator attaches successors under the same lock."""
+    n = x.shape[0]
+    svc = QueryService(auto_flush=False)
+    svc.register("bench", RMQ.build(x, c=128, t=64, with_positions=True,
+                                    backend="fused"), cache_size=0)
+    lock = threading.Lock()
+    lat = []
+    lat_lock = threading.Lock()
+
+    def stage(idxs, vals):
+        with lock:
+            svc.attach("bench", svc.snapshot("bench").update(idxs, vals))
+
+    # untimed warmup: compile the request geometry + the update path
+    wrng = np.random.default_rng(17)
+    for q_w in warm_sizes:
+        for op in (VALUE, INDEX):
+            ls, rs = _warmup_spans(wrng, n, q_w)
+            tk = svc.submit("bench", ls, rs, op)
+            svc.flush(names=("bench",))
+            np.asarray(svc.take(tk))
+    stage(np.arange(8, dtype=np.int32),
+          wrng.random(8).astype(np.float32))
+
+    def worker(reqs):
+        mine = []
+        for ls, rs, op in reqs:
+            t0 = time.perf_counter()
+            with lock:
+                tk = svc.submit("bench", ls, rs, op)
+                svc.flush(names=("bench",))
+                np.asarray(svc.take(tk))
+            mine.append(time.perf_counter() - t0)
+        with lat_lock:
+            lat.extend(mine)
+
+    mut = _Mutator(np.random.default_rng(seed), n,
+                   interval_s=mut_interval)
+    threads = [threading.Thread(target=worker, args=(reqs,))
+               for reqs in plans]
+    t0 = time.perf_counter()
+    mut.run(stage)
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    elapsed = time.perf_counter() - t0
+    mut.stop()
+    nq = sum(len(r[0]) for reqs in plans for r in reqs)
+    return {"qps": nq / elapsed, "p99_ms": _percentile(lat, 99) * 1e3,
+            "p50_ms": _percentile(lat, 50) * 1e3, "launches": len(lat)}
+
+
+def run_deadline_tier(x, plans, mut_interval: float, seed: int,
+                      slo_ms: float = 2.0, warm_sizes=(4,),
+                      backend: str = "fused"):
+    """Tier: closed-loop clients block on tickets; the deadline
+    scheduler coalesces all of them (plus mutations) per flush.
+
+    ``backend`` contrasts the tier on the fused single-launch engine
+    (one ``rmq_fused`` launch per flush) against the routed class-split
+    engine (one launch per span class per op group).
+    """
+    n = x.shape[0]
+    tier = ServingTier()
+    tier.register_tenant(
+        "bench",
+        RMQ.build(x, c=128, t=64, with_positions=True, backend=backend),
+        slo_ms=slo_ms, max_queue=1 << 16, max_batch=1 << 14,
+        cache_size=0,
+    )
+    lat, answered = [], []
+    lat_lock = threading.Lock()
+
+    mut = _Mutator(np.random.default_rng(seed), n,
+                   interval_s=mut_interval)
+
+    def warmup(wrng):
+        """Compile every bucket geometry a coalesced flush can hit
+        (pure-value, pure-index, and merged mixed buckets) plus the
+        staged-update fold.  Warmup mutations go through the mutator's
+        logged ``next_batch`` so generation replay stays exact."""
+        for q_w in warm_sizes:
+            for ops in ((VALUE,), (INDEX,), (VALUE, INDEX)):
+                tks = []
+                for op in ops:
+                    ls, rs = _warmup_spans(wrng, n, q_w)
+                    tks.append(tier.submit("bench", ls, rs, op))
+                tier.drain("bench")
+                for tk in tks:
+                    np.asarray(tk.result(timeout=60.0))
+        tier.update("bench", *mut.next_batch())
+        tier.drain("bench")
+
+    def worker(reqs):
+        mine, got = [], []
+        for ls, rs, op in reqs:
+            t0 = time.perf_counter()
+            tk = tier.submit("bench", ls, rs, op)
+            res = np.asarray(tk.result(timeout=60.0))
+            mine.append(time.perf_counter() - t0)
+            got.append((tk.generation, ls, rs, op, res))
+        with lat_lock:
+            lat.extend(mine)
+            answered.extend(got)
+
+    warmup(np.random.default_rng(17))
+    threads = [threading.Thread(target=worker, args=(reqs,))
+               for reqs in plans]
+    with tier:
+        t0 = time.perf_counter()
+        mut.run(lambda i, v: tier.update("bench", i, v))
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        elapsed = time.perf_counter() - t0
+        mut.stop()
+    nq = len(answered) and sum(len(a[1]) for a in answered)
+    stats = tier.stats()["tenants"]["bench"]
+    return {
+        "qps": nq / elapsed, "p99_ms": _percentile(lat, 99) * 1e3,
+        "p50_ms": _percentile(lat, 50) * 1e3,
+        "launches": stats["flushes"], "swaps": stats["snapshot_swaps"],
+        "answered": answered, "mutation_log": mut.log, "base": x,
+    }
+
+
+def check_snapshot_parity(tier_out) -> int:
+    """Every tier answer == numpy oracle at the ticket's generation."""
+    snaps = {0: tier_out["base"].copy()}
+    arr = tier_out["base"].copy()
+    for gen, (idxs, vals) in enumerate(tier_out["mutation_log"], 1):
+        arr = arr.copy()
+        arr[idxs] = vals
+        snaps[gen] = arr
+    checked = 0
+    for gen, ls, rs, op, res in tier_out["answered"]:
+        arr = snaps[gen]
+        for l, r, v in zip(ls, rs, res):
+            want = (arr[l:r + 1].min() if op == VALUE
+                    else l + int(np.argmin(arr[l:r + 1])))
+            assert v == want, (
+                f"snapshot violation: gen={gen} op={op} span=({l},{r}) "
+                f"got {v} want {want}"
+            )
+            checked += 1
+    return checked
+
+
+def check_single_launch_per_flush() -> dict:
+    """One drained flush of a mixed read+mutation backlog = ONE
+    ``rmq_fused`` launch.  Unique geometry keeps the trace-time counter
+    fresh (it records on first trace only)."""
+    rng = np.random.default_rng(11)
+    n, c, t = 4799, 8, 8
+    x = rng.random(n).astype(np.float32)
+    tier = ServingTier()   # never started: drained manually below
+    tier.register_tenant(
+        "contract",
+        RMQ.build(x, c=c, t=t, with_positions=True, backend="fused"),
+        slo_ms=1e6, cache_size=0,
+    )
+    q = 37                                   # batch size unique to this check
+    s = rng.integers(1, n // 2, q)
+    ls = (rng.random(q) * (n - s)).astype(np.int32)
+    rs = (ls + s - 1).astype(np.int32)
+    tickets = [tier.submit("contract", ls, rs, VALUE),
+               tier.submit("contract", ls, rs, INDEX)]
+    tier.update("contract", np.arange(16, dtype=np.int32),
+                rng.random(16).astype(np.float32))
+    with count_launches() as counts:
+        tier.drain("contract")
+    for tk in tickets:
+        np.asarray(tk.result(timeout=30.0))
+    if counts.get("rmq_fused") != 1:
+        raise AssertionError(
+            f"one flush of a mixed backlog must record exactly ONE "
+            f"rmq_fused launch, recorded {counts}"
+        )
+    return dict(counts)
+
+
+def main() -> None:
+    tiny = tiny_mode()
+    if tiny:
+        n, workers, requests, q = 1 << 12, 4, 6, 4
+        mut_interval = 0.005
+    else:
+        n, workers, requests, q = 1 << 16, 16, 30, 4
+        mut_interval = 0.002
+    rng = np.random.default_rng(3)
+    x = rng.random(n).astype(np.float32)
+    plans = _workload(rng, n, workers, requests, q)
+    warm = _warmup_sizes(tiny)
+
+    base = run_flush_per_request(x, plans, mut_interval, seed=5,
+                                 warm_sizes=warm)
+    tier = run_deadline_tier(x, plans, mut_interval, seed=5,
+                             warm_sizes=warm)
+    checked = check_snapshot_parity(tier)
+    launches = check_single_launch_per_flush()
+
+    nq = workers * requests * q
+    print(csv_row(
+        "serving_flush_per_request", 1e6 / base["qps"],
+        f"qps={base['qps']:.0f}|p50_ms={base['p50_ms']:.2f}"
+        f"|p99_ms={base['p99_ms']:.2f}|launches={base['launches']}",
+    ))
+    print(csv_row(
+        "serving_deadline_tier", 1e6 / tier["qps"],
+        f"qps={tier['qps']:.0f}|p50_ms={tier['p50_ms']:.2f}"
+        f"|p99_ms={tier['p99_ms']:.2f}|launches={tier['launches']}"
+        f"|swaps={tier['swaps']}",
+    ))
+    print(csv_row(
+        "serving_snapshot_parity", 0,
+        f"queries_checked={checked}|generations="
+        f"{len({g for g, *_ in tier['answered']})}",
+    ))
+    print(csv_row("serving_fused_launches_per_flush", 0,
+                  f"rmq_fused={launches['rmq_fused']}"))
+
+    if not tiny:
+        # the routed class-split engine through the same tier — shows
+        # how much of the serving win the fused single-launch path
+        # contributes on top of deadline batching itself
+        routed = run_deadline_tier(x, plans, mut_interval, seed=5,
+                                   warm_sizes=warm, backend="jax")
+        print(csv_row(
+            "serving_deadline_tier_routed", 1e6 / routed["qps"],
+            f"qps={routed['qps']:.0f}|p50_ms={routed['p50_ms']:.2f}"
+            f"|p99_ms={routed['p99_ms']:.2f}"
+            f"|launches={routed['launches']}",
+        ))
+        # acceptance bar: >=3x sustained QPS at equal-or-better p99.
+        # tiny-mode runs are too small for stable percentiles, so the
+        # perf gate (like every other module's) is full-mode only.
+        speedup = tier["qps"] / base["qps"]
+        assert speedup >= 3.0, (
+            f"deadline batching must sustain >=3x flush-per-request QPS "
+            f"({tier['qps']:.0f} vs {base['qps']:.0f}, {speedup:.2f}x)"
+        )
+        assert tier["p99_ms"] <= base["p99_ms"] * 1.05, (
+            f"tier p99 {tier['p99_ms']:.2f}ms must not exceed "
+            f"flush-per-request p99 {base['p99_ms']:.2f}ms"
+        )
+        print(csv_row("serving_qps_speedup", 0,
+                      f"speedup={speedup:.2f}x|checked={nq}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,11 @@ Demonstrates the paper's data structure as a first-class serving feature
 importance scores; when the live context exceeds the budget the engine
 answers a batch of RMQ_index queries over the score array to find
 minimum-importance tokens, evicts them, and keeps decoding.
+
+Three modes: eviction off, eviction through a private query engine, and
+eviction as a *tenant* of the async serving tier (``repro.serving``) —
+the production shape, where each round's windowed-argmin batch rides the
+tier's deadline batcher and snapshot swap alongside any other tenants.
 """
 
 import time
@@ -17,6 +22,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.models.lm import init_params
 from repro.serve.engine import ServeEngine
+from repro.serving import ServingTier
 
 
 def small_lm() -> ModelConfig:
@@ -40,7 +46,8 @@ def main():
     batch, prompt_len, max_new = 8, 64, 160
     budget = 160
 
-    for evict in (False, True):
+    for mode in ("off", "engine", "serving-tier"):
+        evict = mode != "off"
         sc = ServeConfig(
             seq_len=prompt_len + max_new + 8,
             batch=batch,
@@ -51,23 +58,35 @@ def main():
             rmq_chunk=16,
             rmq_threshold=4,
         )
-        engine = ServeEngine(cfg, params, sc)
+        tier = ServingTier() if mode == "serving-tier" else None
+        engine = ServeEngine(cfg, params, sc, serving_tier=tier)
         prompts = jax.random.randint(
             jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab_size
         )
         t0 = time.time()
-        out = engine.generate(prompts, max_new)
+        if tier is not None:
+            with tier:                  # deadline flusher thread
+                out = engine.generate(prompts, max_new)
+        else:
+            out = engine.generate(prompts, max_new)
         dt = time.time() - t0
         total = batch * max_new
-        mode = "RMQ eviction ON " if evict else "eviction OFF    "
         print(
-            f"[{mode}] {total} tokens in {dt:5.1f}s "
+            f"[eviction {mode:12s}] {total} tokens in {dt:5.1f}s "
             f"({total/dt:6.1f} tok/s)  live_ctx={out['final_pos']:4d}  "
             f"evicted={out['evicted']}"
         )
         if evict:
             assert out["final_pos"] <= budget + 1
             assert out["evicted"] > 0
+        if tier is not None:
+            t = tier.stats()["tenants"]["kv-eviction"]
+            print(
+                f"  tenant kv-eviction: flushes={t['flushes']} "
+                f"snapshot_swaps={t['snapshot_swaps']} "
+                f"p99={t['latency_s']['p99'] * 1e3:.2f}ms "
+                f"rejected={t['rejected_queue_full']}"
+            )
 
 
 if __name__ == "__main__":

@@ -13,6 +13,15 @@ the same single-launch buckets).  ``submit``
 auto-flushes once the pending query count crosses ``max_pending``, which
 bounds queue memory and gives an admission-control backstop.
 
+The serving tier (``repro.serving``) drives flushes *externally* on
+deadline/size triggers; the hooks it uses are public surface: pass
+``auto_flush=False`` so ``submit`` never flushes behind the scheduler's
+back, call ``flush(names=...)`` to flush one tenant's requests without
+coupling other tenants' latency to it, ``validate_request`` for
+admission-time checks without enqueueing, ``snapshot(name)`` for the
+immutable index handle currently serving a name, and
+``on_dropped_result`` to observe unclaimed-result evictions.
+
 The registry is generation-aware: ``attach(name, successor)`` follows a
 mutation (the engine's result cache invalidates by generation key).
 ``register_many`` admits a whole batch of equal-length arrays through one
@@ -24,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -51,6 +60,8 @@ class QueryService:
         self,
         max_pending: int = 4096,
         max_unclaimed: int = 4096,
+        auto_flush: bool = True,
+        on_dropped_result: Optional[Callable[[str, int], None]] = None,
         **engine_defaults,
     ):
         self.max_pending = max_pending
@@ -58,15 +69,27 @@ class QueryService:
         # that only reads flush()'s return value never claims — so the
         # buffer is bounded (FIFO eviction of the oldest unclaimed),
         # or a long-running service would leak one result per request.
+        # The bound is PER INDEX: one tenant's unclaimed flood must not
+        # evict another tenant's still-claimable results.
         self.max_unclaimed = max_unclaimed
+        # auto_flush=False hands flush timing to an external scheduler
+        # (the serving tier's deadline batcher); the scheduler then owns
+        # bounding the queue — submit never flushes on max_pending.
+        self.auto_flush = auto_flush
+        # called as on_dropped_result(name, ticket) for every unclaimed
+        # result FIFO-evicted past max_unclaimed — a warning hook, not a
+        # veto (the result is gone either way)
+        self.on_dropped_result = on_dropped_result
         self._engine_defaults = engine_defaults
         self._engines: Dict[str, QueryEngine] = {}
         self._pending: List[_Request] = []
         self._pending_queries = 0
-        self._results: "OrderedDict[int, jnp.ndarray]" = OrderedDict()
+        self._results: Dict[str, "OrderedDict[int, jnp.ndarray]"] = {}
+        self._result_name: Dict[int, str] = {}
         self._next_ticket = 0
         self.flushes = 0
         self.coalesced_batches = 0
+        self.mixed_retries = 0
         self.requests = 0
         self.dropped_results = 0
 
@@ -185,14 +208,17 @@ class QueryService:
         return self._engines[name]
 
     # -- admission queue --------------------------------------------------
-    def submit(self, name: str, ls, rs, op: str = VALUE) -> int:
-        """Enqueue a request; returns a ticket for :meth:`flush` results."""
+    def validate_request(
+        self, name: str, ls, rs, op: str = VALUE
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Admission-time checks without enqueueing; returns coerced
+        1-D ``(ls, rs)``.  Shared by :meth:`submit` and the serving
+        tier, so a rejected request fails in the caller's hands, not at
+        flush time where the error would be detached from it."""
         engine = self._engine(name)  # fail fast on unknown names
         if op not in (VALUE, INDEX):
             raise ValueError(f"op must be 'value' or 'index', got {op!r}")
         if op == INDEX and not engine.index.with_positions:
-            # fail at admission, not at flush time where the error would
-            # be detached from the caller that queued the bad request
             raise ValueError(
                 f"index {name!r} was built without positions; "
                 "op='index' needs with_positions=True"
@@ -204,17 +230,38 @@ class QueryService:
                 f"bounds must be matching 1-D batches, got "
                 f"{ls.shape} vs {rs.shape}"
             )
+        return ls, rs
+
+    def submit(self, name: str, ls, rs, op: str = VALUE) -> int:
+        """Enqueue a request; returns a ticket for :meth:`flush` results."""
+        ls, rs = self.validate_request(name, ls, rs, op)
         ticket = self._next_ticket
         self._next_ticket += 1
         self._pending.append(_Request(ticket, name, op, ls, rs))
         self._pending_queries += ls.shape[0]
         self.requests += 1
-        if self._pending_queries >= self.max_pending:
+        if self.auto_flush and self._pending_queries >= self.max_pending:
             self.flush()
         return ticket
 
-    def flush(self) -> Dict[int, jnp.ndarray]:
+    def snapshot(self, name: str):
+        """The immutable index object currently serving ``name``.
+
+        Pure-functional indexes make this a stable read handle: whatever
+        mutations follow, the returned object keeps answering with its
+        own generation's values (the serving tier's snapshot slots are
+        built on exactly this property)."""
+        return self._engine(name).index
+
+    def flush(
+        self, names: Optional[Iterable[str]] = None
+    ) -> Dict[int, jnp.ndarray]:
         """Execute everything pending, coalesced per (index, op).
+
+        ``names`` restricts the flush to those indexes' requests,
+        leaving the rest queued — the serving tier flushes one tenant on
+        *its* deadline without dragging other tenants' batches (and
+        their latency accounting) along.
 
         Returns {ticket: results}; results also stay claimable via
         :meth:`take` until collected or until ``max_unclaimed`` newer
@@ -234,18 +281,36 @@ class QueryService:
         results stay claimable as usual, and the first error re-raises
         after the loop with the failed groups' tickets in the message.
         """
-        pending, self._pending = self._pending, []
-        self._pending_queries = 0
+        if names is None:
+            pending, self._pending = self._pending, []
+            self._pending_queries = 0
+        else:
+            picked = set(names)
+            pending = [r for r in self._pending if r.name in picked]
+            self._pending = [
+                r for r in self._pending if r.name not in picked
+            ]
+            self._pending_queries = sum(
+                r.ls.shape[0] for r in self._pending
+            )
         if pending:
             self.flushes += 1
         groups: Dict[Tuple[str, str], List[_Request]] = {}
         for req in pending:
             groups.setdefault((req.name, req.op), []).append(req)
         out: Dict[int, jnp.ndarray] = {}
+        out_name: Dict[int, str] = {}
         failures: List[Tuple[str, str, List[int], Exception]] = []
 
-        def run_group(name, op, reqs):
-            """One per-op engine execution with its own failure unit."""
+        def run_group(name, op, reqs, count_coalesced=True):
+            """One per-op engine execution with its own failure unit.
+
+            Returns True when results landed in ``out``.  The merged
+            mixed path suppresses ``count_coalesced`` on its per-op
+            retries and counts the admission-coalesced group itself —
+            once — so the same workload reports the same stats whether
+            the merged execution succeeded or fell back.
+            """
             engine = self._engines[name]
             ls = np.concatenate([r.ls for r in reqs])
             rs = np.concatenate([r.rs for r in reqs])
@@ -256,13 +321,15 @@ class QueryService:
                 )
             except Exception as e:
                 failures.append((name, op, [r.ticket for r in reqs], e))
-                return
-            if len(reqs) > 1:
+                return False
+            if count_coalesced and len(reqs) > 1:
                 self.coalesced_batches += 1
             off = 0
             for r in reqs:
                 out[r.ticket] = res[off : off + r.ls.shape[0]]
+                out_name[r.ticket] = r.name
                 off += r.ls.shape[0]
+            return True
 
         handled = set()
         for (name, op), reqs in groups.items():
@@ -287,9 +354,20 @@ class QueryService:
                 except Exception:
                     # keep the per-(index, op) failure-isolation
                     # contract: retry each op group separately so one
-                    # bad op group cannot take the other down with it
-                    run_group(name, VALUE, groups[(name, VALUE)])
-                    run_group(name, INDEX, groups[(name, INDEX)])
+                    # bad op group cannot take the other down with it.
+                    # Coalescing stats are counted HERE, not inside the
+                    # retries: the admission coalesced these requests
+                    # once, and that count must not depend on which
+                    # execution path answered them (the retries used to
+                    # double-increment when both op groups were multi-
+                    # request and report zero when both were singletons).
+                    self.mixed_retries += 1
+                    ok_v = run_group(name, VALUE, groups[(name, VALUE)],
+                                     count_coalesced=False)
+                    ok_i = run_group(name, INDEX, groups[(name, INDEX)],
+                                     count_coalesced=False)
+                    if (ok_v or ok_i) and len(reqs) > 1:
+                        self.coalesced_batches += 1
                     continue
                 if len(reqs) > 1:
                     self.coalesced_batches += 1
@@ -301,13 +379,12 @@ class QueryService:
                     cnt = r.ls.shape[0]
                     plane = poss if r.op == INDEX else vals
                     out[r.ticket] = jnp.asarray(plane[off : off + cnt])
+                    out_name[r.ticket] = r.name
                     off += cnt
                 continue
             run_group(name, op, reqs)
-        self._results.update(out)
-        while len(self._results) > self.max_unclaimed:
-            self._results.popitem(last=False)
-            self.dropped_results += 1
+        for ticket, res in out.items():
+            self._store_result(out_name[ticket], ticket, res)
         if failures:
             name, op, tickets, err = failures[0]
             raise RuntimeError(
@@ -317,18 +394,36 @@ class QueryService:
             ) from err
         return out
 
+    def _store_result(self, name: str, ticket: int, res) -> None:
+        """Stash a flushed result, FIFO-bounding unclaimed per index."""
+        bucket = self._results.setdefault(name, OrderedDict())
+        bucket[ticket] = res
+        self._result_name[ticket] = name
+        while len(bucket) > self.max_unclaimed:
+            old, _ = bucket.popitem(last=False)
+            del self._result_name[old]
+            self.dropped_results += 1
+            if self.on_dropped_result is not None:
+                self.on_dropped_result(name, old)
+
     def take(self, ticket: int) -> jnp.ndarray:
         """Claim (and remove) a flushed result by ticket.
 
         Raises ``KeyError`` for tickets never flushed *and* for results
-        evicted past ``max_unclaimed`` — claim promptly after flushing.
+        evicted past ``max_unclaimed`` (bounded per index) — claim
+        promptly after flushing.
         """
-        if ticket not in self._results:
+        name = self._result_name.pop(ticket, None)
+        if name is None:
             raise KeyError(
                 f"ticket {ticket} has no result; flush() it first "
                 "(or it aged out of the unclaimed-results buffer)"
             )
-        return self._results.pop(ticket)
+        bucket = self._results[name]
+        res = bucket.pop(ticket)
+        if not bucket:
+            del self._results[name]
+        return res
 
     # -- synchronous conveniences -----------------------------------------
     def _query_sync(self, name: str, ls, rs, op: str) -> jnp.ndarray:
@@ -339,7 +434,7 @@ class QueryService:
             # flush failures are per-(index, op) group: if OUR group
             # executed, its result is stored and claimable — an unrelated
             # group's bad request must not lose this caller's answer.
-            if ticket not in self._results:
+            if ticket not in self._result_name:
                 raise
         return self.take(ticket)
 
@@ -356,9 +451,10 @@ class QueryService:
             "requests": self.requests,
             "flushes": self.flushes,
             "coalesced_batches": self.coalesced_batches,
+            "mixed_retries": self.mixed_retries,
             "pending_requests": len(self._pending),
             "pending_queries": self._pending_queries,
-            "unclaimed_results": len(self._results),
+            "unclaimed_results": len(self._result_name),
             "dropped_results": self.dropped_results,
             "engines": {
                 name: eng.stats() for name, eng in self._engines.items()

@@ -23,7 +23,13 @@ from repro.serve.eviction import RMQEvictionManager
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params: Any, sc: ServeConfig):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        sc: ServeConfig,
+        serving_tier: Optional[Any] = None,
+    ):
         self.cfg = cfg
         self.params = params
         self.sc = sc
@@ -37,6 +43,11 @@ class ServeEngine:
             if sc.eviction_enabled
             else None
         )
+        # eviction scans become a tenant of the async serving tier:
+        # window batches coalesce under the tenant's SLO with whatever
+        # else the tier serves, instead of a private per-engine flush
+        if self.eviction is not None and serving_tier is not None:
+            self.eviction.attach_serving(serving_tier)
         cache_dtype = jnp.dtype(sc.kv_cache_dtype)
         self._prefill = jax.jit(
             functools.partial(

@@ -41,6 +41,13 @@ update bumps the index generation, invalidating the engine's result
 cache by key); the result cache itself is disabled — scores change
 every round, so cross-round hits are impossible by construction.
 
+With :meth:`attach_serving` the manager becomes a *tenant* of the async
+serving tier (``repro.serving``) instead of owning a private engine:
+each round stages the synced index as a snapshot replacement and submits
+the window batch under the tenant's latency SLO, so eviction scans from
+many sequences/replicas coalesce with everything else the tier serves —
+the production shape, and the tier's first in-repo tenant.
+
 The manager is pure-functional: planners return indices (plus the updated
 index for the streaming path); ``apply_evictions`` compacts cache +
 scores.  Engine code owns the arrays.
@@ -127,6 +134,51 @@ class RMQEvictionManager:
             c=self.c, t=self.t, with_positions=True, backend=self.backend,
         )
 
+    def attach_serving(
+        self,
+        tier,
+        tenant: str = "kv-eviction",
+        *,
+        slo_ms: float = 2.0,
+    ) -> None:
+        """Route streaming eviction queries through a serving-tier tenant.
+
+        The tenant registers lazily on the first round (the tier needs an
+        index to register); every later round stages the freshly-synced
+        index as a snapshot replacement and submits the window batch
+        with the given SLO.  The manager dataclass is frozen config —
+        like ``_engine``, the tier binding is runtime state parked on
+        the instance dict.
+        """
+        object.__setattr__(self, "_tier", tier)
+        object.__setattr__(self, "_tenant", tenant)
+        object.__setattr__(self, "_tenant_slo_ms", float(slo_ms))
+
+    def _victims_via_tier(self, index: StreamingRMQ, ls, rs):
+        """One serving-tier round: stage the synced index, submit windows.
+
+        The staged replacement swaps in at the flush that answers this
+        round's batch (mutations apply before reads in a flush cycle),
+        so the windows are answered against exactly this round's scores
+        — same snapshot discipline as every other tenant.
+        """
+        from repro.qe.executors import INDEX
+
+        tier = self.__dict__["_tier"]
+        tenant = self.__dict__["_tenant"]
+        try:
+            tier.tenant_config(tenant)
+        except KeyError:
+            # cross-round result caching is impossible by construction
+            # (scores change every round) — same reasoning as _engine_for
+            tier.register_tenant(
+                tenant, index, slo_ms=self.__dict__["_tenant_slo_ms"],
+                cache_size=0,
+            )
+        else:
+            tier.replace_index(tenant, index)
+        return tier.query(tenant, ls, rs, op=INDEX, timeout=60.0)
+
     def _engine_for(self, index: StreamingRMQ):
         """One persistent query engine per manager, re-attached each round.
 
@@ -172,7 +224,10 @@ class RMQEvictionManager:
             jnp.arange(index.capacity, dtype=jnp.int32), slot_scores
         )
         ls, rs = self._windows(evictable, evict_count)
-        victims = self._engine_for(index).query_index(ls, rs)
+        if self.__dict__.get("_tier") is not None:
+            victims = self._victims_via_tier(index, ls, rs)
+        else:
+            victims = self._engine_for(index).query_index(ls, rs)
         return index, jnp.sort(victims).astype(jnp.int32)
 
     def apply_evictions(

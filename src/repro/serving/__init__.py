@@ -1,0 +1,56 @@
+"""Async serving tier: deadline micro-batching, snapshot-isolated reads,
+admission control and telemetry over the fused query path.
+
+The layer cake, bottom-up:
+
+* ``repro.qe.QueryService`` — multi-index registry + coalescing (one
+  fused launch per flushed mixed batch), flush timing caller-driven;
+* :class:`~repro.serving.snapshot.SnapshotSlot` — double-buffered index
+  per tenant: immutable *front* serves reads, mutations stage onto the
+  *back* log and swap in atomically between flushes;
+* :class:`~repro.serving.tier.ServingTier` — the deadline scheduler:
+  per-tenant latency SLOs and size triggers decide when to flush,
+  bounded queues + token-bucket quotas reject with
+  :class:`~repro.serving.tier.Backpressure` instead of growing, and
+  every submit returns a Future-style
+  :class:`~repro.serving.tier.Ticket`;
+* :class:`~repro.serving.aio.AsyncServingTier` — the same tier behind
+  ``await``, with an event-loop pump replacing the flusher thread;
+* :mod:`~repro.serving.metrics` — counters/histograms for submits,
+  flushes, batch sizes, queue depth, rejections and snapshot swaps,
+  exported as one plain dict (:meth:`ServingTier.stats`).
+"""
+
+from repro.serving.metrics import Counter, Histogram, Metrics
+from repro.serving.snapshot import Snapshot, SnapshotSlot
+from repro.serving.tier import (
+    Backpressure,
+    FlushEvent,
+    ServingTier,
+    TenantConfig,
+    Ticket,
+)
+
+__all__ = [
+    "AsyncServingTier",
+    "Backpressure",
+    "Counter",
+    "FlushEvent",
+    "Histogram",
+    "Metrics",
+    "ServingTier",
+    "Snapshot",
+    "SnapshotSlot",
+    "TenantConfig",
+    "Ticket",
+]
+
+
+def __getattr__(name):
+    # asyncio front end imported lazily: the tier itself stays importable
+    # in stripped-down environments without the asyncio machinery loaded
+    if name == "AsyncServingTier":
+        from repro.serving.aio import AsyncServingTier
+
+        return AsyncServingTier
+    raise AttributeError(name)

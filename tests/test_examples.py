@@ -110,3 +110,63 @@ def test_serve_example_objects():
     out = eng.generate(prompts, 24)
     assert out["tokens"].shape == (2, 24)
     assert out["final_pos"] <= 33
+
+
+def test_serve_example_via_serving_tier():
+    """serve_lm's serving-tier mode: eviction scans ride a tier tenant
+    and the generation is bit-identical to the private-engine path."""
+    import jax
+
+    sys.path.insert(0, "examples")
+    try:
+        from serve_lm import small_lm
+    finally:
+        sys.path.pop(0)
+    from repro.configs.base import ServeConfig
+    from repro.models.lm import init_params
+    from repro.serve.engine import ServeEngine
+    from repro.serving import ServingTier
+
+    cfg = small_lm()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    sc = ServeConfig(seq_len=48, batch=2, kv_cache_dtype="float32",
+                     eviction_enabled=True, eviction_budget=32,
+                     eviction_window=8, rmq_chunk=8, rmq_threshold=4)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                 cfg.vocab_size)
+    tier = ServingTier()
+    eng = ServeEngine(cfg, params, sc, serving_tier=tier)
+    with tier:
+        out = eng.generate(prompts, 24)
+    assert out["final_pos"] <= 33
+    assert out["evicted"] > 0
+    t = tier.stats()["tenants"]["kv-eviction"]
+    assert t["flushes"] > 0
+    assert t["snapshot_swaps"] > 0
+    # differential vs the private-engine path: same victims, same tokens
+    ref = ServeEngine(cfg, params, sc).generate(prompts, 24)
+    assert ref["final_pos"] == out["final_pos"]
+    assert ref["evicted"] == out["evicted"]
+    assert (np.asarray(ref["tokens"]) == np.asarray(out["tokens"])).all()
+
+
+def test_serving_async_example():
+    """Reduced-size run of examples/serving_async.py: two tenants with
+    different SLOs, background mutator, snapshot-isolation differential
+    (the assertions live inside ``run``)."""
+    import asyncio
+
+    sys.path.insert(0, "examples")
+    try:
+        from serving_async import run
+    finally:
+        sys.path.pop(0)
+
+    out = asyncio.run(run(n=1 << 10, rounds=8))
+    assert out["trading_checked"] == 32
+    assert out["analytics_requests"] == 8
+    assert len(out["generations_seen"]) >= 2  # mutations landed mid-run
+    tenants = out["stats"]["tenants"]
+    assert tenants["trading"]["flushes"] > 0
+    assert tenants["analytics"]["snapshot_swaps"] > 0
+    assert tenants["analytics"]["mutations_applied"] > 0

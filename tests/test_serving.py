@@ -1,0 +1,614 @@
+"""Serving-tier tests: deadline scheduling, snapshot isolation,
+admission control, telemetry — plus the QueryService regressions the
+tier's arrival pinned down (mixed-retry stats accounting, per-index
+unclaimed-result bounds with the drop hook).
+
+Scheduler semantics are tested deterministically: an injected fake
+clock plus manual ``ServingTier.step(now)`` calls make flush triggers
+(deadline / size / mutation) exact, and the ``on_flush`` hook — which
+fires after the snapshot is pinned and staged mutations swapped, before
+the read batch executes — is the seam where "mutation admitted
+mid-flush must not change this flush's answers" is observable without
+racing threads.  The threaded stress test then does race threads, and
+checks every ticket against a numpy oracle replayed at the ticket's
+recorded snapshot generation.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.api import RMQ
+from repro.qe import QueryService
+from repro.qe.executors import INDEX, VALUE
+from repro.serving import (
+    Backpressure,
+    Metrics,
+    ServingTier,
+    SnapshotSlot,
+    TenantConfig,
+)
+
+
+def _tied_values(rng, n):
+    """Integer-valued floats: ties make leftmost-position breaks decisive."""
+    return rng.integers(-4, 4, n).astype(np.float32)
+
+
+def _random_spans(rng, n, m):
+    ls = rng.integers(0, n, m)
+    rs = np.minimum(ls + rng.integers(0, n, m), n - 1)
+    return (np.minimum(ls, rs).astype(np.int32),
+            np.maximum(ls, rs).astype(np.int32))
+
+
+def _fused(x, with_positions=True):
+    return RMQ.build(x, c=8, t=2, with_positions=with_positions,
+                     backend="fused")
+
+
+class FakeClock:
+    def __init__(self, now=0.0):
+        self.now = float(now)
+
+    def __call__(self):
+        return self.now
+
+    def advance(self, dt):
+        self.now += dt
+        return self.now
+
+
+def _oracle_replay(base, mutation_log):
+    """generation -> quiesced array, applying staged batches in order
+    (sequential writes: duplicate indices are last-wins, the indexes'
+    documented contract)."""
+    snaps = {0: base.copy()}
+    arr = base.copy()
+    for gen, (idxs, vals) in enumerate(mutation_log, start=1):
+        arr = arr.copy()
+        for i, v in zip(idxs, vals):
+            arr[int(i)] = v
+        snaps[gen] = arr
+    return snaps
+
+
+# ---------------------------------------------------------------------------
+# SnapshotSlot: the double buffer on its own
+# ---------------------------------------------------------------------------
+class TestSnapshotSlot:
+    def test_stage_is_invisible_until_swap(self):
+        rng = np.random.default_rng(0)
+        x = _tied_values(rng, 300)
+        slot = SnapshotSlot(_fused(x))
+        old_front = slot.front
+        slot.stage_update(np.array([3], np.int32),
+                          np.array([-99.0], np.float32))
+        slot.stage_update(np.array([7], np.int32),
+                          np.array([-98.0], np.float32))
+        assert slot.front is old_front          # readers unaffected
+        assert slot.staged == 2
+        front, applied = slot.swap()
+        assert applied == 2
+        assert front is slot.front is not old_front
+        assert slot.generation == 2             # one successor per record
+        assert slot.staged == 0
+        assert slot.swap() == (front, 0)        # idempotent when empty
+
+    def test_pinned_reader_keeps_old_front_across_swap(self):
+        rng = np.random.default_rng(1)
+        x = _tied_values(rng, 300)
+        slot = SnapshotSlot(_fused(x))
+        snap = slot.pin()
+        assert slot.pins == 1
+        slot.stage_update(np.array([0], np.int32),
+                          np.array([-99.0], np.float32))
+        slot.swap()
+        assert snap.index is not slot.front     # old generation survives
+        assert snap.generation == 0
+        assert slot.generation == 1
+        snap.release()
+        assert slot.pins == 0
+
+    def test_release_without_pin_raises(self):
+        slot = SnapshotSlot(_fused(np.zeros(64, np.float32)))
+        with pytest.raises(RuntimeError, match="matching pin"):
+            slot._release()
+
+    def test_replace_supersedes_earlier_staged_ops(self):
+        rng = np.random.default_rng(2)
+        x = _tied_values(rng, 300)
+        y = _tied_values(rng, 300)
+        slot = SnapshotSlot(_fused(x))
+        # this update is superseded by the wholesale replacement...
+        slot.stage_update(np.array([0], np.int32),
+                          np.array([-99.0], np.float32))
+        slot.stage_replace(_fused(y))
+        # ...but ops staged AFTER the replacement apply on top of it
+        slot.stage_update(np.array([5], np.int32),
+                          np.array([-77.0], np.float32))
+        front, applied = slot.swap()
+        assert applied == 2                     # replace + trailing update
+        got = np.asarray(front.query(np.array([0, 5], np.int32),
+                                     np.array([0, 5], np.int32)))
+        assert got[0] == y[0]                   # -99 never applied
+        assert got[1] == -77.0
+
+
+# ---------------------------------------------------------------------------
+# deterministic scheduler: fake clock + manual step()
+# ---------------------------------------------------------------------------
+class TestDeadlineScheduler:
+    def _tier(self, x, clock, **tenant_kw):
+        tier = ServingTier(clock=clock)
+        tier.register_tenant("a", _fused(x), **tenant_kw)
+        return tier
+
+    def test_deadline_flush_fires_at_slo_not_before(self):
+        rng = np.random.default_rng(3)
+        x = _tied_values(rng, 500)
+        clock = FakeClock()
+        tier = self._tier(x, clock, slo_ms=5.0)
+        tk = tier.submit("a", np.array([0]), np.array([499]))
+        assert tier.step(clock.advance(0.004)) == pytest.approx(0.005)
+        assert not tk.done()                    # 4ms < 5ms SLO: queued
+        tier.step(clock.advance(0.0015))        # 5.5ms: due
+        assert tk.done()
+        assert float(tk.result(0)[0]) == x.min()
+        t = tier.stats()["tenants"]["a"]
+        assert t["flushes"] == 1
+        assert t["flushes_deadline"] == 1
+        assert t["flushes_size"] == 0
+
+    def test_size_flush_fires_before_deadline(self):
+        rng = np.random.default_rng(4)
+        x = _tied_values(rng, 500)
+        clock = FakeClock()
+        tier = self._tier(x, clock, slo_ms=1000.0, max_queue=64,
+                          max_batch=8)
+        ls, rs = _random_spans(rng, 500, 8)
+        tks = [tier.submit("a", ls[i:i + 4], rs[i:i + 4])
+               for i in (0, 4)]
+        tier.step(clock.now)                    # zero time has passed
+        assert all(tk.done() for tk in tks)
+        t = tier.stats()["tenants"]["a"]
+        assert t["flushes_size"] == 1
+        assert t["flushes_deadline"] == 0
+
+    def test_mutation_only_flush_swaps_on_slo(self):
+        rng = np.random.default_rng(5)
+        x = _tied_values(rng, 500)
+        clock = FakeClock()
+        tier = self._tier(x, clock, slo_ms=5.0)
+        pos = int(np.argmin(x))
+        tier.update("a", np.array([pos], np.int32),
+                    np.array([50.0], np.float32))
+        tier.step(clock.advance(0.003))
+        assert tier.stats()["tenants"]["a"]["snapshot_swaps"] == 0
+        tier.step(clock.advance(0.003))         # past the mutation SLO
+        t = tier.stats()["tenants"]["a"]
+        assert t["snapshot_swaps"] == 1
+        assert t["flushes_mutation"] == 1
+        assert t["mutations_applied"] == 1
+        # the published generation serves subsequent reads
+        tk = tier.submit("a", np.array([0]), np.array([499]))
+        tier.drain("a")
+        want = x.copy()
+        want[pos] = 50.0
+        assert float(tk.result(0)[0]) == want.min()
+        assert tk.generation == 1
+
+    def test_step_reports_earliest_deadline_across_tenants(self):
+        rng = np.random.default_rng(6)
+        clock = FakeClock()
+        tier = ServingTier(clock=clock)
+        assert tier.step(clock.now) is None     # no tenants: idle
+        tier.register_tenant("slow", _fused(_tied_values(rng, 200)),
+                             slo_ms=50.0)
+        tier.register_tenant("fast", _fused(_tied_values(rng, 200)),
+                             slo_ms=2.0)
+        tier.submit("slow", np.array([0]), np.array([10]))
+        tier.submit("fast", np.array([0]), np.array([10]))
+        assert tier.step(clock.now) == pytest.approx(0.002)
+
+    def test_drain_resolves_everything_now(self):
+        rng = np.random.default_rng(7)
+        x = _tied_values(rng, 500)
+        clock = FakeClock()
+        tier = self._tier(x, clock, slo_ms=1000.0)
+        ls, rs = _random_spans(rng, 500, 6)
+        tk_v = tier.submit("a", ls, rs, VALUE)
+        tk_i = tier.submit("a", ls, rs, INDEX)
+        assert tier.drain("a") == 2
+        np.testing.assert_array_equal(
+            np.asarray(tk_v.result(0)),
+            [x[l:r + 1].min() for l, r in zip(ls, rs)],
+        )
+        np.testing.assert_array_equal(
+            np.asarray(tk_i.result(0)),
+            [l + int(np.argmin(x[l:r + 1])) for l, r in zip(ls, rs)],
+        )
+        assert tier.stats()["tenants"]["a"]["flushes_forced"] == 1
+        assert tier.drain("a") == 0             # nothing left: no-op
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+class TestAdmission:
+    def test_tenant_config_validation(self):
+        with pytest.raises(ValueError, match="slo_ms"):
+            TenantConfig(slo_ms=0.0)
+        with pytest.raises(ValueError, match="max_batch"):
+            TenantConfig(max_queue=4, max_batch=8)
+        with pytest.raises(ValueError, match="quota_qps"):
+            TenantConfig(quota_qps=-1.0)
+
+    def test_queue_bound_rejects_with_retry_after(self):
+        rng = np.random.default_rng(8)
+        x = _tied_values(rng, 300)
+        clock = FakeClock()
+        tier = ServingTier(clock=clock)
+        tier.register_tenant("a", _fused(x), slo_ms=5.0, max_queue=8,
+                             max_batch=8)
+        ls, rs = _random_spans(rng, 300, 8)
+        tier.submit("a", ls, rs)
+        with pytest.raises(Backpressure) as ei:
+            tier.submit("a", np.array([0]), np.array([1]))
+        assert ei.value.reason == "queue_full"
+        assert ei.value.tenant == "a"
+        # retry_after points at the head-of-queue deadline (5ms SLO)
+        assert 0 < ei.value.retry_after <= 0.006
+        assert tier.stats()["tenants"]["a"]["rejected_queue_full"] == 1
+        # a flush frees the queue and admission recovers
+        tier.drain("a")
+        tier.submit("a", np.array([0]), np.array([1]))
+
+    def test_quota_token_bucket_refills_with_clock(self):
+        rng = np.random.default_rng(9)
+        x = _tied_values(rng, 300)
+        clock = FakeClock()
+        tier = ServingTier(clock=clock)
+        tier.register_tenant("a", _fused(x), quota_qps=100.0,
+                             quota_burst=4.0)
+        ls, rs = _random_spans(rng, 300, 4)
+        tier.submit("a", ls, rs)                # burst fully spent
+        with pytest.raises(Backpressure) as ei:
+            tier.submit("a", np.array([0]), np.array([1]))
+        assert ei.value.reason == "quota"
+        assert ei.value.retry_after == pytest.approx(1 / 100.0)
+        clock.advance(0.05)                     # 5 tokens accrue, cap 4
+        tier.submit("a", ls, rs)
+        assert tier.stats()["tenants"]["a"]["rejected_quota"] == 1
+
+    def test_registry_errors(self):
+        rng = np.random.default_rng(10)
+        tier = ServingTier()
+        tier.register_tenant("a", _fused(_tied_values(rng, 200)))
+        with pytest.raises(ValueError, match="already registered"):
+            tier.register_tenant("a", _fused(_tied_values(rng, 200)))
+        with pytest.raises(KeyError, match="no tenant"):
+            tier.submit("nope", np.array([0]), np.array([1]))
+        with pytest.raises(KeyError):
+            tier.tenant_config("nope")
+
+    def test_unregister_drains_then_rejects(self):
+        rng = np.random.default_rng(11)
+        x = _tied_values(rng, 300)
+        tier = ServingTier()
+        tier.register_tenant("a", _fused(x), slo_ms=1000.0)
+        tk = tier.submit("a", np.array([0]), np.array([299]))
+        tier.unregister_tenant("a")
+        assert float(tk.result(0)[0]) == x.min()   # drained, not dropped
+        with pytest.raises(KeyError):
+            tier.submit("a", np.array([0]), np.array([1]))
+
+
+# ---------------------------------------------------------------------------
+# snapshot isolation: the tentpole's correctness claim
+# ---------------------------------------------------------------------------
+class TestSnapshotIsolation:
+    def test_mutation_admitted_mid_flush_does_not_change_answers(self):
+        """A mutation staged while a flush is executing (after the
+        snapshot pin — the on_flush hook's exact position) must leave
+        that flush's answers on the pinned generation, and apply to the
+        next one."""
+        rng = np.random.default_rng(12)
+        x = _tied_values(rng, 600)
+        clock = FakeClock()
+        pos = int(np.argmin(x))
+        staged = {"done": False}
+        events = []
+
+        def mid_flush(ev):
+            events.append(ev)
+            if not staged["done"]:
+                staged["done"] = True
+                # admitted MID-FLUSH: reads for this flush already
+                # pinned generation 0
+                tier.update("a", np.array([pos], np.int32),
+                            np.array([99.0], np.float32))
+
+        tier = ServingTier(clock=clock, on_flush=mid_flush)
+        tier.register_tenant("a", _fused(x), slo_ms=5.0)
+        tk1 = tier.submit("a", np.array([0]), np.array([599]))
+        tier.step(clock.advance(0.006))
+        assert float(tk1.result(0)[0]) == x.min()   # pre-mutation answer
+        assert tk1.generation == 0
+        assert events[0].generation == 0
+        assert events[0].applied_mutations == 0
+
+        tk2 = tier.submit("a", np.array([0]), np.array([599]))
+        tier.step(clock.advance(0.006))
+        want = x.copy()
+        want[pos] = 99.0
+        assert float(tk2.result(0)[0]) == want.min()
+        assert tk2.generation == 1
+        assert events[1].applied_mutations == 1
+        assert tier.stats()["tenants"]["a"]["snapshot_swaps"] == 1
+
+    def test_threaded_stress_differential_vs_generation_oracle(self):
+        """Real threads, real clock: concurrent submitters + a mutator
+        against the running tier.  Every ticket's answers must be
+        bit-identical (values AND leftmost-tie positions) to a numpy
+        oracle replayed at the ticket's recorded generation."""
+        rng = np.random.default_rng(13)
+        n = 1500
+        x = _tied_values(rng, n)
+        tier = ServingTier(idle_tick=0.001)
+        tier.register_tenant("a", _fused(x), slo_ms=2.0,
+                             max_queue=1 << 14, cache_size=0)
+        mutation_log = []
+        answered = []
+        ans_lock = threading.Lock()
+        stop = threading.Event()
+
+        def mutator():
+            mrng = np.random.default_rng(14)
+            while not stop.is_set():
+                idxs = mrng.integers(0, n, 4).astype(np.int32)
+                vals = _tied_values(mrng, 4)
+                mutation_log.append((idxs, vals))
+                tier.update("a", idxs, vals)
+                time.sleep(0.002)
+
+        def reader(seed):
+            rrng = np.random.default_rng(seed)
+            got = []
+            for j in range(8):
+                ls, rs = _random_spans(rrng, n, 6)
+                op = INDEX if j % 2 else VALUE
+                tk = tier.submit("a", ls, rs, op)
+                got.append((tk, ls, rs, op,
+                            np.asarray(tk.result(timeout=30.0))))
+            with ans_lock:
+                answered.extend(got)
+
+        readers = [threading.Thread(target=reader, args=(20 + i,))
+                   for i in range(3)]
+        mut = threading.Thread(target=mutator)
+        with tier:
+            mut.start()
+            for r in readers:
+                r.start()
+            for r in readers:
+                r.join()
+            stop.set()
+            mut.join()
+
+        snaps = _oracle_replay(x, mutation_log)
+        gens = set()
+        for tk, ls, rs, op, res in answered:
+            assert tk.generation is not None
+            gens.add(tk.generation)
+            arr = snaps[tk.generation]
+            for l, r, v in zip(ls, rs, res):
+                want = (arr[l:r + 1].min() if op == VALUE
+                        else l + int(np.argmin(arr[l:r + 1])))
+                assert v == want, (tk.generation, op, l, r, v, want)
+        assert len(answered) == 24
+        # the mutator really did move the array under the readers
+        assert tier.stats()["tenants"]["a"]["snapshot_swaps"] > 0
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+class TestTelemetry:
+    def test_metrics_primitives(self):
+        m = Metrics()
+        c = m.counter("hits")
+        c.inc()
+        c.inc(3)
+        h = m.histogram("lat", (0.1, 1.0, 10.0))
+        for v in (0.05, 0.5, 0.5, 20.0):
+            h.record(v)
+        d = m.as_dict()
+        assert d["hits"] == 4
+        assert d["lat"]["count"] == 4
+        assert d["lat"]["max"] == 20.0
+        assert d["lat"]["p50"] <= d["lat"]["p99"]
+        assert m.counter("hits") is c           # lazy registry, stable
+
+    def test_tier_stats_shape(self):
+        rng = np.random.default_rng(15)
+        x = _tied_values(rng, 400)
+        clock = FakeClock()
+        tier = ServingTier(clock=clock)
+        tier.register_tenant("a", _fused(x), slo_ms=5.0)
+        tk = tier.submit("a", np.array([0, 5]), np.array([9, 50]))
+        tier.step(clock.advance(0.01))
+        tk.result(0)
+        s = tier.stats()
+        t = s["tenants"]["a"]
+        assert t["submits"] == 1
+        assert t["submitted_queries"] == 2
+        assert t["flushes"] == 1
+        assert t["latency_s"]["count"] == 1
+        assert t["flush_queries"]["count"] == 1
+        assert t["snapshot"]["generation"] == 0
+        assert t["snapshot"]["pins"] == 0
+        assert t["queued_queries"] == 0
+        assert s["service"]["flushes"] == 1
+        assert s["steps"] == 1
+
+    def test_tier_counts_service_result_drops(self):
+        """The unclaimed-FIFO drop hook reaches tenant telemetry (the
+        serving tier is the warning consumer the service's silent drops
+        needed)."""
+        rng = np.random.default_rng(16)
+        x = _tied_values(rng, 400)
+        svc = QueryService(auto_flush=False, max_unclaimed=1)
+        tier = ServingTier(service=svc)
+        tier.register_tenant("a", _fused(x))
+        # drive the service directly, never claiming: results age out
+        for i in range(3):
+            svc.submit("a", np.array([i]), np.array([i + 5]))
+            svc.flush(names=("a",))
+        assert tier.stats()["tenants"]["a"]["dropped_results"] == 2
+
+
+# ---------------------------------------------------------------------------
+# QueryService regressions pinned by this PR
+# ---------------------------------------------------------------------------
+class TestServiceRegressions:
+    def _submit_pairs(self, svc, rng, x, nv, ni):
+        n = x.shape[0]
+        tickets = []
+        for _ in range(nv):
+            ls, rs = _random_spans(rng, n, 3)
+            tickets.append((svc.submit("a", ls, rs, VALUE), ls, rs, VALUE))
+        for _ in range(ni):
+            ls, rs = _random_spans(rng, n, 3)
+            tickets.append((svc.submit("a", ls, rs, INDEX), ls, rs, INDEX))
+        return tickets
+
+    def _flaky_mixed(self, engine):
+        """Make the first query_mixed call fail, then restore parity."""
+        orig = engine.query_mixed
+        state = {"calls": 0}
+
+        def flaky(ls, rs, flags):
+            state["calls"] += 1
+            if state["calls"] == 1:
+                raise RuntimeError("transient mixed-kernel failure")
+            return orig(ls, rs, flags)
+
+        engine.query_mixed = flaky
+        return state
+
+    def test_mixed_retry_counts_coalescing_once_multirequest(self):
+        """Regression: when a merged mixed flush fails and retries per
+        op, the admission-coalesced group must count as ONE coalesced
+        batch — the old delegation to run_group double-counted it (once
+        per multi-request op group)."""
+        rng = np.random.default_rng(17)
+        x = _tied_values(rng, 900)
+        svc = QueryService()
+        engine = svc.register("a", _fused(x), cache_size=0)
+        state = self._flaky_mixed(engine)
+        tickets = self._submit_pairs(svc, rng, x, nv=2, ni=2)
+        res = svc.flush()           # retries succeed: no error surfaces
+        assert state["calls"] == 1
+        s = svc.stats()
+        assert s["mixed_retries"] == 1
+        assert s["flushes"] == 1
+        assert s["coalesced_batches"] == 1      # was 2 before the fix
+        for tk, ls, rs, op in tickets:
+            want = ([x[l:r + 1].min() for l, r in zip(ls, rs)]
+                    if op == VALUE else
+                    [l + int(np.argmin(x[l:r + 1]))
+                     for l, r in zip(ls, rs)])
+            np.testing.assert_array_equal(np.asarray(res[tk]), want)
+
+    def test_mixed_retry_counts_coalescing_once_singletons(self):
+        """Regression twin: one value + one index request.  The merged
+        admission coalesced two requests, so the count is 1 even though
+        each per-op retry group is a singleton — the old delegation
+        reported 0 on this shape."""
+        rng = np.random.default_rng(18)
+        x = _tied_values(rng, 900)
+        svc = QueryService()
+        engine = svc.register("a", _fused(x), cache_size=0)
+        self._flaky_mixed(engine)
+        tickets = self._submit_pairs(svc, rng, x, nv=1, ni=1)
+        svc.flush()
+        s = svc.stats()
+        assert s["mixed_retries"] == 1
+        assert s["coalesced_batches"] == 1      # was 0 before the fix
+        for tk, *_ in tickets:
+            svc.take(tk)                        # both answered
+
+    def test_mixed_retry_with_real_op_failure_counts_once(self):
+        """The genuinely-failing shape (value-only successor lands after
+        admission): the healthy VALUE group survives the retry, the
+        stats still count the coalesced admission exactly once, and the
+        retry is visible in ``mixed_retries``."""
+        rng = np.random.default_rng(19)
+        x = _tied_values(rng, 900)
+        svc = QueryService()
+        svc.register("a", _fused(x), cache_size=0)
+        t_v = svc.submit("a", np.array([0]), np.array([899]))
+        t_i1 = svc.submit("a", np.array([1]), np.array([50]), op=INDEX)
+        t_i2 = svc.submit("a", np.array([2]), np.array([60]), op=INDEX)
+        svc.attach("a", _fused(x, with_positions=False),
+                   reset_cache=True)
+        with pytest.raises(RuntimeError, match="claimable"):
+            svc.flush()
+        s = svc.stats()
+        assert s["mixed_retries"] == 1
+        assert s["coalesced_batches"] == 1
+        assert float(svc.take(t_v)[0]) == x.min()
+        for tk in (t_i1, t_i2):
+            with pytest.raises(KeyError):
+                svc.take(tk)
+
+    def test_unclaimed_bound_is_per_index_with_drop_hook(self):
+        """Regression: flooding one index's unclaimed results must not
+        evict another index's (the bound was global), and every drop
+        reports through ``on_dropped_result`` instead of vanishing."""
+        rng = np.random.default_rng(20)
+        xa = _tied_values(rng, 400)
+        xb = _tied_values(rng, 400)
+        svc = QueryService(auto_flush=False, max_unclaimed=2)
+        svc.register("a", _fused(xa))
+        svc.register("b", _fused(xb))
+        drops = []
+        svc.on_dropped_result = lambda name, tk: drops.append((name, tk))
+        t_b = svc.submit("b", np.array([0]), np.array([399]))
+        svc.flush()
+        flooded = []
+        for i in range(5):
+            flooded.append(svc.submit("a", np.array([i]),
+                                      np.array([i + 5])))
+            svc.flush()
+        # 'b' survived the flood of 'a' results (per-index FIFO bound)
+        assert float(svc.take(t_b)[0]) == xb.min()
+        assert [name for name, _ in drops] == ["a", "a", "a"]
+        assert [tk for _, tk in drops] == flooded[:3]
+        assert svc.stats()["dropped_results"] == 3
+        assert svc.stats()["unclaimed_results"] == 2
+        for tk in flooded[3:]:
+            svc.take(tk)                        # recent ones claimable
+
+    def test_selective_flush_leaves_other_tenants_queued(self):
+        """flush(names=...) — the serving tier's per-tenant deadline
+        flush must not drag other tenants' batches along."""
+        rng = np.random.default_rng(21)
+        xa = _tied_values(rng, 400)
+        xb = _tied_values(rng, 400)
+        svc = QueryService(auto_flush=False)
+        svc.register("a", _fused(xa))
+        svc.register("b", _fused(xb))
+        t_a = svc.submit("a", np.array([0]), np.array([399]))
+        t_b = svc.submit("b", np.array([0]), np.array([399]))
+        res = svc.flush(names=("a",))
+        assert t_a in res
+        assert t_b not in res
+        assert svc.stats()["pending_requests"] == 1   # b still queued
+        with pytest.raises(KeyError):
+            svc.take(t_b)
+        svc.flush(names=("b",))
+        assert float(svc.take(t_b)[0]) == xb.min()
