@@ -125,7 +125,7 @@ def check_single_launch() -> dict:
     return dict(counts)
 
 
-def main() -> None:
+def main() -> dict:
     tiny = tiny_mode()
     if tiny:
         # small n with a small chunk keeps a big (1024-entry) top level,
@@ -157,23 +157,23 @@ def main() -> None:
     print(csv_row("fused_launches_per_batch", 0,
                   f"rmq_fused={launches['rmq_fused']}"))
 
+    payload = {
+        "benchmark": "engine_throughput",
+        "tiny": tiny,
+        "platform": jax.default_backend(),
+        "fused_lowering": (
+            "pallas_kernel" if jax.default_backend() == "tpu"
+            else "jnp_one_dispatch"
+        ),
+        "geometry": {"n": n, "m": m, "c": c, "t": t},
+        "unit": "ns_per_query",
+        "rows": rows,
+        "routed_class_counts": {k: int(v) for k, v in cc.items()},
+        "fused_launches_per_batch": launches,
+    }
     if not tiny:
         # tiny-mode numbers are meaningless for the trajectory; only
         # full-mode runs refresh the committed artifact
-        payload = {
-            "benchmark": "engine_throughput",
-            "tiny": tiny,
-            "platform": jax.default_backend(),
-            "fused_lowering": (
-                "pallas_kernel" if jax.default_backend() == "tpu"
-                else "jnp_one_dispatch"
-            ),
-            "geometry": {"n": n, "m": m, "c": c, "t": t},
-            "unit": "ns_per_query",
-            "rows": rows,
-            "routed_class_counts": {k: int(v) for k, v in cc.items()},
-            "fused_launches_per_batch": launches,
-        }
         with open(BENCH_JSON, "w") as f:
             json.dump(payload, f, indent=2)
             f.write("\n")
@@ -198,6 +198,7 @@ def main() -> None:
         # dispatch per span class, fused exactly one per bucket
         mixed = next(r for r in rows if r["kind"] == "mixed")
         assert mixed["fused_ns"] <= mixed["routed_ns"] * 1.25, mixed
+    return payload
 
 
 if __name__ == "__main__":

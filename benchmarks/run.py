@@ -8,12 +8,22 @@ Usage::
 
     python benchmarks/run.py                 # run everything
     python benchmarks/run.py throughput tuning   # run a subset by name
+    python benchmarks/run.py --json out.json     # machine-readable report
+
+``--json <path>`` writes a structured report next to the CSV output:
+per-module wall time and status, whatever dict payload each module's
+``main()`` returns, and the kernel-launch registry captured around the
+module (``repro.kernels.profiling.launch_registry`` — trace-time records,
+so a module only shows the launches whose geometry it traced first).
 
 Set ``REPRO_BENCH_TINY=1`` to shrink problem sizes in the modules that
 support it (CI smoke: exercises the harness without paper-scale runs).
 """
 
+import json
+import os
 import sys
+import time
 import traceback
 
 MODULES = [
@@ -49,19 +59,61 @@ def select(argv):
     return [(n, d) for n, d in MODULES if n in set(argv)]
 
 
+def _jsonable(o):
+    """json.dump fallback for numpy scalars/arrays in module payloads."""
+    if hasattr(o, "item") and getattr(o, "shape", None) in ((), None):
+        return o.item()
+    if hasattr(o, "tolist"):
+        return o.tolist()
+    return str(o)
+
+
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            raise SystemExit("--json requires an output path")
+        json_path = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+
+    report = {
+        "tiny": os.environ.get("REPRO_BENCH_TINY") == "1",
+        "modules": [],
+    }
     failures = []
     for mod_name, desc in select(argv):
         print(f"# === {mod_name}: {desc} ===", flush=True)
+        entry = {"name": mod_name, "desc": desc}
+        t0 = time.perf_counter()
         try:
             mod = __import__(f"benchmarks.{mod_name}",
                              fromlist=["main"])
-            mod.main()
+            if json_path is not None:
+                from repro.kernels.profiling import launch_registry
+                with launch_registry() as reg:
+                    payload = mod.main()
+                entry["launches"] = reg.as_dict()
+            else:
+                payload = mod.main()
+            entry["status"] = "ok"
+            if isinstance(payload, dict):
+                entry["payload"] = payload
         except Exception as e:
             failures.append((mod_name, e))
+            entry["status"] = "failed"
+            entry["error"] = f"{type(e).__name__}: {e}"
             print(f"# FAILED {mod_name}: {e}")
             traceback.print_exc()
+        entry["seconds"] = round(time.perf_counter() - t0, 6)
+        report["modules"].append(entry)
+
+    if json_path is not None:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2, default=_jsonable)
+            f.write("\n")
+        print(f"# wrote {json_path}")
     if failures:
         sys.exit(1)
 

@@ -25,10 +25,19 @@ baseline's is the whole lock convoy).  Both modes additionally assert:
   read+mutation backlog records exactly ONE ``rmq_fused`` launch
   (fresh geometry so the trace-time counter fires; see
   ``repro.kernels.profiling``).
+
+The deadline-tier run doubles as the observability smoke: a
+``repro.obs.trace.Tracer`` is installed around it and the run exports
+``results/serving_trace.json`` (Chrome trace of every flush's span tree:
+submit → admission → queue → flush → snapshot_swap → plan → execute →
+scatter) plus ``results/serving_metrics.prom`` (the tier's full
+Prometheus exposition, per-engine cache/span-class/padding-waste series
+included).  Both exports are validated in tiny mode too.
 """
 
 from __future__ import annotations
 
+import os
 import threading
 import time
 
@@ -37,9 +46,26 @@ import numpy as np
 from benchmarks.common import csv_row, tiny_mode
 from repro.core.api import RMQ
 from repro.kernels.profiling import count_launches
+from repro.obs.trace import Tracer, use_tracer
 from repro.qe import QueryService
 from repro.qe.executors import INDEX, VALUE
 from repro.serving import ServingTier
+
+# Observability exports from the measured deadline-tier run — anchored at
+# the repo root like BENCH_query.json (results/ is gitignored).
+RESULTS_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "results"
+)
+TRACE_PATH = os.path.join(RESULTS_DIR, "serving_trace.json")
+PROM_PATH = os.path.join(RESULTS_DIR, "serving_metrics.prom")
+
+# Every flush cycle must show this span vocabulary in the exported trace
+# (submit/admission on caller threads, queue retroactive, the rest under
+# the flush) — asserted in tiny mode too so CI catches a dropped hook.
+EXPECTED_SPANS = frozenset({
+    "submit", "admission", "queue", "flush", "snapshot_swap",
+    "plan", "execute", "scatter",
+})
 
 
 def _workload(rng, n: int, workers: int, requests: int, q: int):
@@ -236,6 +262,9 @@ def run_deadline_tier(x, plans, mut_interval: float, seed: int,
         "p50_ms": _percentile(lat, 50) * 1e3,
         "launches": stats["flushes"], "swaps": stats["snapshot_swaps"],
         "answered": answered, "mutation_log": mut.log, "base": x,
+        # full-stack Prometheus exposition: tier counters/histograms,
+        # service scope, per-engine cache/span-class/padding series
+        "metrics_prom": tier.metrics.to_prometheus(),
     }
 
 
@@ -294,7 +323,27 @@ def check_single_launch_per_flush() -> dict:
     return dict(counts)
 
 
-def main() -> None:
+def export_observability(tracer: Tracer, prom_text: str) -> None:
+    """Write the Chrome trace + Prometheus dump, asserting both carry
+    the serving-path signal (span vocabulary; cache/span-class/padding
+    series).  Runs in tiny mode too — this is the CI observability
+    smoke's substrate."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    missing = EXPECTED_SPANS - {s.name for s in tracer.spans()}
+    assert not missing, f"tier trace is missing spans: {sorted(missing)}"
+    tracer.save_chrome_trace(TRACE_PATH)
+    for series in ("cache_hit_rate", "span_class_", "bucket_padding_waste",
+                   "flushes_total", "latency_s_bucket"):
+        assert series in prom_text, (
+            f"Prometheus dump is missing the {series!r} series"
+        )
+    with open(PROM_PATH, "w") as f:
+        f.write(prom_text)
+    print(f"# wrote {TRACE_PATH}")
+    print(f"# wrote {PROM_PATH}")
+
+
+def main() -> dict:
     tiny = tiny_mode()
     if tiny:
         n, workers, requests, q = 1 << 12, 4, 6, 4
@@ -309,12 +358,33 @@ def main() -> None:
 
     base = run_flush_per_request(x, plans, mut_interval, seed=5,
                                  warm_sizes=warm)
-    tier = run_deadline_tier(x, plans, mut_interval, seed=5,
-                             warm_sizes=warm)
+    tracer = Tracer(capacity=1 << 17)
+    with use_tracer(tracer):
+        tier = run_deadline_tier(x, plans, mut_interval, seed=5,
+                                 warm_sizes=warm)
     checked = check_snapshot_parity(tier)
     launches = check_single_launch_per_flush()
+    export_observability(tracer, tier["metrics_prom"])
 
     nq = workers * requests * q
+    payload = {
+        "benchmark": "serving_qps",
+        "tiny": tiny,
+        "geometry": {"n": n, "workers": workers, "requests": requests,
+                     "queries_per_request": q},
+        "flush_per_request": {
+            k: base[k] for k in ("qps", "p50_ms", "p99_ms", "launches")
+        },
+        "deadline_tier": {
+            k: tier[k]
+            for k in ("qps", "p50_ms", "p99_ms", "launches", "swaps")
+        },
+        "snapshot_parity_checked": checked,
+        "fused_launches_per_flush": launches,
+        "trace_path": TRACE_PATH,
+        "trace_spans": len(tracer.spans()),
+        "metrics_path": PROM_PATH,
+    }
     print(csv_row(
         "serving_flush_per_request", 1e6 / base["qps"],
         f"qps={base['qps']:.0f}|p50_ms={base['p50_ms']:.2f}"
@@ -346,6 +416,10 @@ def main() -> None:
             f"|p99_ms={routed['p99_ms']:.2f}"
             f"|launches={routed['launches']}",
         ))
+        payload["deadline_tier_routed"] = {
+            k: routed[k]
+            for k in ("qps", "p50_ms", "p99_ms", "launches", "swaps")
+        }
         # acceptance bar: >=3x sustained QPS at equal-or-better p99.
         # tiny-mode runs are too small for stable percentiles, so the
         # perf gate (like every other module's) is full-mode only.
@@ -360,6 +434,8 @@ def main() -> None:
         )
         print(csv_row("serving_qps_speedup", 0,
                       f"speedup={speedup:.2f}x|checked={nq}"))
+        payload["speedup"] = speedup
+    return payload
 
 
 if __name__ == "__main__":

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 from repro.core.hierarchy import Hierarchy, build_hierarchy, build_many
 from repro.core.plan import HierarchyPlan
 from repro.core.query import _debug_checks_enabled
+from repro.obs import trace
 
 __all__ = [
     "RMQIndex",
@@ -265,20 +266,34 @@ def build_hierarchy_with_backend(
 # ---------------------------------------------------------------------------
 # query dispatch (previously duplicated in api.py / structure.py)
 # ---------------------------------------------------------------------------
+def _run_dispatch(kind: str, backend: str, fn, *args) -> jax.Array:
+    # guarded span (not trace.span): dispatch helpers sit on the per-call
+    # query path, so with tracing disabled this must stay one global load
+    tr = trace.current()
+    if tr is None:
+        return fn(*args)
+    sp = tr.begin("dispatch")
+    out = fn(*args)
+    tr.end(sp, kind=kind, backend=backend)
+    return out
+
+
 def dispatch_query_value(h: Hierarchy, ls, rs, backend: str) -> jax.Array:
     """Batched ``RMQ_value`` through the chosen backend."""
     backend = runtime_backend(backend)
     if backend == "fused":
         from repro.kernels.rmq_fused import ops as fused_ops
 
-        return fused_ops.rmq_fused_value_batch(h, ls, rs)
-    if backend == "pallas":
+        fn = fused_ops.rmq_fused_value_batch
+    elif backend == "pallas":
         from repro.kernels.rmq_scan import ops as scan_ops
 
-        return scan_ops.rmq_value_batch_pallas(h, ls, rs)
-    from repro.core.query import rmq_value_batch
+        fn = scan_ops.rmq_value_batch_pallas
+    else:
+        from repro.core.query import rmq_value_batch
 
-    return rmq_value_batch(h, ls, rs)
+        fn = rmq_value_batch
+    return _run_dispatch("query_value", backend, fn, h, ls, rs)
 
 
 def dispatch_query_index(h: Hierarchy, ls, rs, backend: str) -> jax.Array:
@@ -287,14 +302,16 @@ def dispatch_query_index(h: Hierarchy, ls, rs, backend: str) -> jax.Array:
     if backend == "fused":
         from repro.kernels.rmq_fused import ops as fused_ops
 
-        return fused_ops.rmq_fused_index_batch(h, ls, rs)
-    if backend == "pallas":
+        fn = fused_ops.rmq_fused_index_batch
+    elif backend == "pallas":
         from repro.kernels.rmq_scan import ops as scan_ops
 
-        return scan_ops.rmq_index_batch_pallas(h, ls, rs)
-    from repro.core.query import rmq_index_batch
+        fn = scan_ops.rmq_index_batch_pallas
+    else:
+        from repro.core.query import rmq_index_batch
 
-    return rmq_index_batch(h, ls, rs)
+        fn = rmq_index_batch
+    return _run_dispatch("query_index", backend, fn, h, ls, rs)
 
 
 # ---------------------------------------------------------------------------
@@ -306,10 +323,12 @@ def dispatch_update(h: Hierarchy, idxs, vals, backend: str) -> Hierarchy:
     if backend == "pallas":
         from repro.kernels.hierarchy_update import ops as upd_ops
 
-        return upd_ops.update_hierarchy_pallas(h, idxs, vals)
-    from repro.streaming import updates as U
+        fn = upd_ops.update_hierarchy_pallas
+    else:
+        from repro.streaming import updates as U
 
-    return U.update_hierarchy(h, idxs, vals)
+        fn = U.update_hierarchy
+    return _run_dispatch("update", backend, fn, h, idxs, vals)
 
 
 def dispatch_append(h: Hierarchy, vals, start, backend: str) -> Hierarchy:
@@ -318,10 +337,12 @@ def dispatch_append(h: Hierarchy, vals, start, backend: str) -> Hierarchy:
     if backend == "pallas":
         from repro.kernels.hierarchy_update import ops as upd_ops
 
-        return upd_ops.append_hierarchy_pallas(h, vals, start)
-    from repro.streaming import updates as U
+        fn = upd_ops.append_hierarchy_pallas
+    else:
+        from repro.streaming import updates as U
 
-    return U.append_hierarchy(h, vals, start)
+        fn = U.append_hierarchy
+    return _run_dispatch("append", backend, fn, h, vals, start)
 
 
 def validate_update_batch(idxs, vals, n: Optional[int] = None):

@@ -59,7 +59,14 @@ def _build_jit(x, plan, with_positions, interpret):
         tile = _pick_tile_out(want, c)
         want_aligned = -(-want // (tile * c)) * (tile * c)
         v_in = _pad_to(cur_v, want_aligned, inf)
-        profiling.record_launch("hierarchy_build")
+        profiling.record_launch(
+            "hierarchy_build",
+            lowering="pallas",
+            level=k,
+            grid=int(want_aligned // (tile * c)),
+            with_positions=bool(with_positions),
+            operand_bytes=profiling.operand_bytes(v_in),
+        )
         if with_positions:
             p_in = _pad_to(cur_p, want_aligned, jnp.array(_PAD_POS, pos_dtype))
             nxt_v, nxt_p = K.build_level_with_positions(

@@ -57,7 +57,14 @@ def _fused_jit(x, plan, with_positions, tile_out, interpret):
     # same +inf / PAD_POS padding the oracle stores.
     xin = _pad_to(base, plan.padded_lens[0] * c, inf)
     offs = jnp.asarray(plan.offsets, jnp.int32)
-    profiling.record_launch("hierarchy_fused")
+    profiling.record_launch(
+        "hierarchy_fused",
+        lowering="pallas",
+        levels=plan.num_levels,
+        grid=int(plan.padded_lens[0] // tile_out),
+        with_positions=bool(with_positions),
+        operand_bytes=profiling.operand_bytes(xin, offs),
+    )
     if with_positions:
         upper, upper_pos = K.fused_build_with_positions(
             xin, offs, plan, pos_dtype_for(plan.capacity),

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.core.hierarchy import Hierarchy, _pad_to, pos_dtype_for
 from repro.core.plan import HierarchyPlan
+from repro.kernels import profiling
 from repro.kernels.hierarchy_update import kernel as K
 from repro.streaming.updates import scatter_base, touched_chunk_ids
 
@@ -50,6 +51,17 @@ def _propagate_pallas(
     ids = idxs // c
     for level in range(1, plan.num_levels):
         ids = touched_chunk_ids(ids, plan.level_lens[level])
+        src_len = (plan.level_lens[1] * c if level == 1
+                   else plan.level_slice(level - 1)[1])
+        profiling.record_launch(
+            "hierarchy_update",
+            lowering="pallas",
+            level=level,
+            touched=int(ids.shape[0]),
+            with_positions=bool(track),
+            operand_bytes=(src_len * base.dtype.itemsize
+                           + profiling.operand_bytes(ids)),
+        )
         if level == 1:
             # Level 0 is capacity-long; align it to the chunk grid so the
             # kernel's block DMA stays in range.

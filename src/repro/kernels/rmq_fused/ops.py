@@ -58,7 +58,15 @@ def _kernel_applicable(plan: HierarchyPlan) -> bool:
 @functools.partial(jax.jit, static_argnames=("plan", "track_pos"))
 def _fused_jnp(base, upper, upper_pos, ls, rs, plan, track_pos):
     """The one-dispatch jnp lowering (walk + in-program sparse top)."""
-    profiling.record_launch("rmq_fused")
+    profiling.record_launch(
+        "rmq_fused",
+        lowering="jnp",
+        queries=int(ls.shape[0]),
+        levels=plan.num_levels,
+        track_pos=bool(track_pos),
+        operand_bytes=profiling.operand_bytes(
+            base, upper, upper_pos, ls, rs),
+    )
     if plan.num_levels == 1:
         top = base  # the plan is a pure scan; the top level IS level 0
         top_pos = (
@@ -86,9 +94,18 @@ def _fused_jnp(base, upper, upper_pos, ls, rs, plan, track_pos):
 )
 def _run_kernel(base, upper, upper_pos, ls, rs, plan, qb, track_pos,
                 interpret):
-    profiling.record_launch("rmq_fused")
     m = ls.shape[0]
     m_pad = -(-m // qb) * qb
+    profiling.record_launch(
+        "rmq_fused",
+        lowering="pallas",
+        queries=int(m),
+        grid=int(m_pad // qb),
+        levels=plan.num_levels,
+        track_pos=bool(track_pos),
+        operand_bytes=profiling.operand_bytes(
+            base, upper, upper_pos, ls, rs),
+    )
     if m_pad != m:
         ls = jnp.pad(ls, (0, m_pad - m))
         rs = jnp.pad(rs, (0, m_pad - m))

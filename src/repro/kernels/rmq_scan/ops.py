@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core.hierarchy import Hierarchy
 from repro.core.query import rmq_index_batch, rmq_value_batch
+from repro.kernels import profiling
 from repro.kernels.rmq_scan import kernel as K
 
 
@@ -32,6 +33,16 @@ def _kernel_applicable(h: Hierarchy) -> bool:
 def _run(base, upper, upper_pos, ls, rs, plan, qb, track_pos, interpret):
     m = ls.shape[0]
     m_pad = -(-m // qb) * qb
+    profiling.record_launch(
+        "rmq_scan",
+        lowering="pallas",
+        queries=int(m),
+        grid=int(m_pad // qb),
+        levels=plan.num_levels,
+        track_pos=bool(track_pos),
+        operand_bytes=profiling.operand_bytes(
+            base, upper, upper_pos, ls, rs),
+    )
     if m_pad != m:
         ls = jnp.pad(ls, (0, m_pad - m))
         rs = jnp.pad(rs, (0, m_pad - m))

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hierarchy import Hierarchy
+from repro.kernels import profiling
 from repro.kernels.rmq_short import kernel as K
 from repro.kernels.rmq_short.ref import rmq_short_batch_ref
 
@@ -35,6 +36,14 @@ def _kernel_applicable(h: Hierarchy) -> bool:
 def _run(base, ls, rs, plan, qb, track_pos, interpret):
     m = ls.shape[0]
     m_pad = -(-m // qb) * qb
+    profiling.record_launch(
+        "rmq_short",
+        lowering="pallas",
+        queries=int(m),
+        grid=int(m_pad // qb),
+        track_pos=bool(track_pos),
+        operand_bytes=profiling.operand_bytes(base, ls, rs),
+    )
     if m_pad != m:
         ls = jnp.pad(ls, (0, m_pad - m))
         rs = jnp.pad(rs, (0, m_pad - m))

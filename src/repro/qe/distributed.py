@@ -29,6 +29,7 @@ from typing import Dict
 
 import numpy as np
 
+from repro.obs import trace
 from repro.qe.executors import INDEX
 from repro.qe.planner import _next_pow2
 
@@ -62,17 +63,26 @@ class DistributedExecutor:
         self.class_counts[SEG_LOCAL] += int(local.sum())
         self.class_counts[CROSSING] += int(m - local.sum())
 
+        tr = trace.current()
         cross_idx = np.nonzero(~local)[0]
         if cross_idx.shape[0]:
+            sp = tr.begin("execute") if tr is not None else None
             out[cross_idx] = self._run_crossing(
                 index, ls[cross_idx], rs[cross_idx], op, out_dtype
             )
+            if tr is not None:
+                tr.end(sp, cls=CROSSING, count=int(cross_idx.shape[0]),
+                       op=op)
         local_idx = np.nonzero(local)[0]
         if local_idx.shape[0]:
+            sp = tr.begin("execute") if tr is not None else None
             out[local_idx] = self._run_seg_local(
                 index, ls[local_idx], rs[local_idx], owner[local_idx], op,
                 out_dtype,
             )
+            if tr is not None:
+                tr.end(sp, cls=SEG_LOCAL, count=int(local_idx.shape[0]),
+                       op=op)
         return out
 
     # -- crossing spans: the pmin oracle, padded to bounded shapes --------

@@ -51,6 +51,8 @@ import numpy as np
 
 from repro.core.protocol import is_distributed, live_length, runtime_backend
 from repro.core.query import check_query_args
+from repro.obs import trace
+from repro.obs.metrics import SIZE_BUCKETS, Metrics
 from repro.qe.cache import ResultCache
 from repro.qe.distributed import DistributedExecutor
 from repro.qe.executors import (
@@ -79,6 +81,7 @@ class QueryEngine:
         max_bucket: int = 4096,
         backend: Optional[str] = None,
         interpret: Optional[bool] = None,
+        metrics: Optional[Metrics] = None,
     ):
         backend = runtime_backend(backend or index.backend)
         self.backend = backend
@@ -103,7 +106,47 @@ class QueryEngine:
         self._index = None
         self.planner: Optional[QueryPlanner] = None
         self.distributed: Optional[DistributedExecutor] = None
+        self.metrics: Optional[Metrics] = None
+        self._m_padding = None
+        self._m_padded_lanes = None
+        self._m_live_lanes = None
+        if metrics is not None:
+            self._register_metrics(metrics)
         self.attach(index)
+
+    def _register_metrics(self, metrics: Metrics) -> None:
+        """Export engine state into ``metrics``.
+
+        Hot-path counters stay plain attributes — the gauges read them
+        through callbacks at export time, so enabling metrics adds no
+        per-query locking.  The only per-bucket write is the
+        padding-waste histogram (one lock per *bucket*, not per query).
+        """
+        self.metrics = metrics
+        cache = self.cache
+        metrics.gauge("cache_hits", fn=lambda: cache.hits)
+        metrics.gauge("cache_misses", fn=lambda: cache.misses)
+        metrics.gauge("cache_hit_rate", fn=cache.hit_rate)
+        metrics.gauge("cache_entries", fn=cache.__len__)
+        metrics.gauge("cache_evictions", fn=lambda: cache.evictions)
+        metrics.gauge("batches", fn=lambda: self.batches)
+        metrics.gauge("queries", fn=lambda: self.queries_in)
+        metrics.gauge("dedup_saved", fn=lambda: self.dedup_saved)
+        for cls in (SHORT, MID, LONG, FUSED):
+            metrics.gauge(f"span_class_{cls}",
+                          fn=lambda c=cls: self.class_counts[c])
+        self._m_padding = metrics.histogram(
+            "bucket_padding_waste", SIZE_BUCKETS)
+        self._m_padded_lanes = metrics.counter("padded_lanes")
+        self._m_live_lanes = metrics.counter("live_lanes")
+
+    def _note_bucket(self, bucket) -> None:
+        """Per-bucket accounting shared by both execution paths."""
+        self.class_counts[bucket.cls] += bucket.count
+        if self._m_padding is not None:
+            self._m_padding.record(bucket.padding)
+            self._m_padded_lanes.inc(bucket.padding)
+            self._m_live_lanes.inc(bucket.count)
 
     @classmethod
     def for_index(cls, index, **kwargs) -> "QueryEngine":
@@ -294,14 +337,21 @@ class QueryEngine:
         else:
             miss_idx = np.arange(k)
 
+        tr = trace.current()
         if miss_idx.shape[0]:
             h = index.hierarchy
             fused = self.executors[FUSED]
             mls, mrs = uls[miss_idx], urs[miss_idx]
-            for bucket in self.planner.plan(mls, mrs):
+            sp = tr.begin("plan") if tr is not None else None
+            buckets = self.planner.plan(mls, mrs)
+            if tr is not None:
+                tr.end(sp, misses=int(miss_idx.shape[0]),
+                       buckets=len(buckets), op="mixed")
+            for bucket in buckets:
                 if bucket.count == 0:
                     continue
-                self.class_counts[bucket.cls] += bucket.count
+                self._note_bucket(bucket)
+                sp = tr.begin("execute") if tr is not None else None
                 bv, bp = fused.run_mixed(
                     h, jnp.asarray(bucket.ls), jnp.asarray(bucket.rs)
                 )
@@ -310,6 +360,9 @@ class QueryEngine:
                     val_dtype, copy=False
                 )
                 up[rows] = np.asarray(bp)[: bucket.count]
+                if tr is not None:
+                    tr.end(sp, cls=bucket.cls, count=bucket.count,
+                           shape=bucket.shape, op="mixed")
             if self.cache.capacity > 0:
                 for i in miss_idx:
                     l, r = int(uls[i]), int(urs[i])
@@ -318,7 +371,11 @@ class QueryEngine:
                     if need_pos[i]:
                         self.cache.put(INDEX, gen, l, r, int(up[i]))
 
-        return uv[inverse], up[inverse]
+        sp = tr.begin("scatter") if tr is not None else None
+        out = uv[inverse], up[inverse]
+        if tr is not None:
+            tr.end(sp, queries=m, unique=k, op="mixed")
+        return out
 
     # -- execution --------------------------------------------------------
     # NOTE: query_mixed above carries a dual-plane variant of this
@@ -364,6 +421,7 @@ class QueryEngine:
             miss_idx = np.arange(k)
 
         # -- plan + execute the misses ------------------------------------
+        tr = trace.current()
         if miss_idx.shape[0]:
             mls, mrs = uls[miss_idx], urs[miss_idx]
             if self.distributed is not None:
@@ -371,10 +429,16 @@ class QueryEngine:
                 uniq_res[miss_idx] = res.astype(out_dtype, copy=False)
             else:
                 h = index.hierarchy
-                for bucket in self.planner.plan(mls, mrs):
+                sp = tr.begin("plan") if tr is not None else None
+                buckets = self.planner.plan(mls, mrs)
+                if tr is not None:
+                    tr.end(sp, misses=int(miss_idx.shape[0]),
+                           buckets=len(buckets), op=op)
+                for bucket in buckets:
                     if bucket.count == 0:
                         continue
-                    self.class_counts[bucket.cls] += bucket.count
+                    self._note_bucket(bucket)
+                    sp = tr.begin("execute") if tr is not None else None
                     res = self.executors[bucket.cls].run(
                         h, jnp.asarray(bucket.ls), jnp.asarray(bucket.rs),
                         op,
@@ -382,6 +446,9 @@ class QueryEngine:
                     res = np.asarray(res)[: bucket.count].astype(
                         out_dtype, copy=False
                     )
+                    if tr is not None:
+                        tr.end(sp, cls=bucket.cls, count=bucket.count,
+                               shape=bucket.shape, op=op)
                     uniq_res[miss_idx[bucket.idxs]] = res
             if self.cache.capacity > 0:
                 for i in miss_idx:
@@ -390,7 +457,11 @@ class QueryEngine:
                         uniq_res[i].item(),
                     )
 
-        return jnp.asarray(uniq_res[inverse.ravel()])
+        sp = tr.begin("scatter") if tr is not None else None
+        out = jnp.asarray(uniq_res[inverse.ravel()])
+        if tr is not None:
+            tr.end(sp, queries=m, unique=k, op=op)
+        return out
 
     # -- introspection ----------------------------------------------------
     def stats(self) -> dict:

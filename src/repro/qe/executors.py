@@ -26,6 +26,7 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 
 from repro.core.hierarchy import Hierarchy
+from repro.kernels.profiling import timed_dispatch
 
 __all__ = [
     "ShortSpanExecutor",
@@ -41,6 +42,9 @@ MIXED = "mixed"
 
 class _ExecutorBase:
     """Shared bookkeeping: the (op, shape) -> callable table and stats."""
+
+    # dispatch-site label for the launch registry's opt-in wall timer
+    label = "executor"
 
     def __init__(self):
         self._compiled: Dict[Tuple[str, int], Callable] = {}
@@ -59,7 +63,7 @@ class _ExecutorBase:
         self.calls += 1
         self.queries += int(ls.shape[0])
         fn = self._bind(op, int(ls.shape[0]), lambda: self._make(h, op))
-        return fn(h, ls, rs)
+        return timed_dispatch(f"{self.label}:{op}", fn, h, ls, rs)
 
     def stats(self) -> dict:
         return {
@@ -74,6 +78,8 @@ class _ExecutorBase:
 
 class ShortSpanExecutor(_ExecutorBase):
     """Two-chunk level-0 scan; never touches the hierarchy."""
+
+    label = "short"
 
     def __init__(self, backend: str, interpret: Optional[bool] = None):
         super().__init__()
@@ -98,6 +104,8 @@ class ShortSpanExecutor(_ExecutorBase):
 
 class MidSpanExecutor(_ExecutorBase):
     """The standard full hierarchy walk (the previous monolithic path)."""
+
+    label = "mid"
 
     def __init__(self, backend: str, interpret: Optional[bool] = None):
         super().__init__()
@@ -128,6 +136,8 @@ class LongSpanExecutor(_ExecutorBase):
     build), so it must be re-derived when the index mutates: the engine
     calls :meth:`invalidate` on every attach.
     """
+
+    label = "long"
 
     def __init__(self):
         super().__init__()
@@ -160,6 +170,8 @@ class FusedExecutor(_ExecutorBase):
     ops avoids a second dispatch.
     """
 
+    label = "fused"
+
     def __init__(self, interpret: Optional[bool] = None):
         super().__init__()
         self.interpret = interpret
@@ -186,4 +198,4 @@ class FusedExecutor(_ExecutorBase):
         self.queries += int(ls.shape[0])
         fn = self._bind(MIXED, int(ls.shape[0]),
                         lambda: self._make(h, MIXED))
-        return fn(h, ls, rs)
+        return timed_dispatch(f"{self.label}:{MIXED}", fn, h, ls, rs)

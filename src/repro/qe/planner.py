@@ -65,6 +65,11 @@ class Bucket:
     def count(self) -> int:
         return int(self.idxs.shape[0])
 
+    @property
+    def padding(self) -> int:
+        """Dead lanes: padded pow2 shape minus live queries."""
+        return self.shape - self.count
+
 
 @dataclasses.dataclass(frozen=True)
 class QueryPlanner:

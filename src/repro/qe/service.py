@@ -38,6 +38,8 @@ from typing import Callable, Dict, Iterable, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace
+from repro.obs.metrics import Metrics
 from repro.qe.engine import QueryEngine
 from repro.qe.executors import INDEX, VALUE
 
@@ -62,6 +64,7 @@ class QueryService:
         max_unclaimed: int = 4096,
         auto_flush: bool = True,
         on_dropped_result: Optional[Callable[[str, int], None]] = None,
+        metrics: Optional[Metrics] = None,
         **engine_defaults,
     ):
         self.max_pending = max_pending
@@ -92,6 +95,26 @@ class QueryService:
         self.mixed_retries = 0
         self.requests = 0
         self.dropped_results = 0
+        # Optional obs registry: service counters export as read-through
+        # gauges (no double bookkeeping on the hot path) and each
+        # registered engine gets a child scope that renders as an
+        # {index="..."} label in the Prometheus exposition.
+        self.metrics = metrics
+        self._engine_metrics: Optional[Metrics] = None
+        if metrics is not None:
+            self._engine_metrics = metrics.scope(
+                "engines", child_label="index")
+            metrics.gauge("requests", fn=lambda: self.requests)
+            metrics.gauge("flushes", fn=lambda: self.flushes)
+            metrics.gauge("coalesced_batches",
+                          fn=lambda: self.coalesced_batches)
+            metrics.gauge("mixed_retries", fn=lambda: self.mixed_retries)
+            metrics.gauge("pending_queries",
+                          fn=lambda: self._pending_queries)
+            metrics.gauge("unclaimed_results",
+                          fn=lambda: len(self._result_name))
+            metrics.gauge("dropped_results",
+                          fn=lambda: self.dropped_results)
 
     # -- registry ---------------------------------------------------------
     def register(self, name: str, index, **engine_kwargs) -> QueryEngine:
@@ -107,6 +130,8 @@ class QueryService:
                 f"index {name!r} has pending requests; flush first"
             )
         kwargs = {**self._engine_defaults, **engine_kwargs}
+        if self._engine_metrics is not None and "metrics" not in kwargs:
+            kwargs["metrics"] = self._engine_metrics.scope(name)
         engine = QueryEngine.for_index(index, **kwargs)
         self._engines[name] = engine
         return engine
@@ -281,6 +306,8 @@ class QueryService:
         results stay claimable as usual, and the first error re-raises
         after the loop with the failed groups' tickets in the message.
         """
+        tr = trace.current()
+        sp = tr.begin("service_flush") if tr is not None else None
         if names is None:
             pending, self._pending = self._pending, []
             self._pending_queries = 0
@@ -385,6 +412,9 @@ class QueryService:
             run_group(name, op, reqs)
         for ticket, res in out.items():
             self._store_result(out_name[ticket], ticket, res)
+        if tr is not None:
+            tr.end(sp, requests=len(pending), groups=len(groups),
+                   failed=len(failures))
         if failures:
             name, op, tickets, err = failures[0]
             raise RuntimeError(

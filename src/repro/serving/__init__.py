@@ -16,12 +16,16 @@ The layer cake, bottom-up:
   :class:`~repro.serving.tier.Ticket`;
 * :class:`~repro.serving.aio.AsyncServingTier` — the same tier behind
   ``await``, with an event-loop pump replacing the flusher thread;
-* :mod:`~repro.serving.metrics` — counters/histograms for submits,
+* :mod:`repro.obs.metrics` (re-exported here as
+  ``repro.serving.metrics``) — counters/gauges/histograms for submits,
   flushes, batch sizes, queue depth, rejections and snapshot swaps,
-  exported as one plain dict (:meth:`ServingTier.stats`).
+  exported as one plain dict (:meth:`ServingTier.stats`) or Prometheus
+  text (``tier.metrics.to_prometheus()``); request-lifecycle tracing
+  comes from :mod:`repro.obs.trace` (install a tracer with
+  ``trace.use_tracer`` and export ``tracer.to_chrome_trace()``).
 """
 
-from repro.serving.metrics import Counter, Histogram, Metrics
+from repro.serving.metrics import Counter, Gauge, Histogram, Metrics
 from repro.serving.snapshot import Snapshot, SnapshotSlot
 from repro.serving.tier import (
     Backpressure,
@@ -36,6 +40,7 @@ __all__ = [
     "Backpressure",
     "Counter",
     "FlushEvent",
+    "Gauge",
     "Histogram",
     "Metrics",
     "ServingTier",

@@ -18,6 +18,7 @@ from __future__ import annotations
 import asyncio
 from typing import Optional
 
+from repro.obs import trace
 from repro.qe.executors import VALUE
 from repro.serving.tier import ServingTier, Ticket
 
@@ -83,6 +84,7 @@ class AsyncServingTier:
         self._pumping = True
         try:
             while stop is None or not stop.is_set():
+                trace.instant("pump_wakeup", driver="asyncio")
                 nxt = self._tier.step()
                 now = self._tier._clock()
                 delay = self._tier._idle_tick if nxt is None else \

@@ -1,178 +1,20 @@
-"""Serving-tier telemetry: counters + latency histograms, dict export.
+"""Back-compat shim: this module moved to :mod:`repro.obs.metrics`.
 
-Deliberately dependency-free (no prometheus client in the container):
-monotonic :class:`Counter`\\ s and fixed-bucket :class:`Histogram`\\ s
-collected in a :class:`Metrics` registry whose :meth:`Metrics.as_dict`
-emits a plain nested dict — the exchange format tests, benchmarks and
-examples consume directly.  Everything is lock-protected: the tier's
-flusher thread and caller threads record concurrently (``x += 1`` on an
-attribute is NOT atomic under the GIL).
-
-Registries nest: ``metrics.scope("tenants").scope("search")`` gives each
-tenant its own namespace inside one exported tree.  Metric objects are
-created lazily on first touch and are stable thereafter, so hot paths
-can hold a reference (``self._submits = scope.counter("submits")``)
-instead of re-resolving names per call.
+The serving tier was the first metrics consumer, but the engine and
+query service now share the same registry tree, so the implementation
+lives in the cross-cutting ``repro.obs`` package.  Existing imports
+(``from repro.serving.metrics import Metrics``) keep working via this
+re-export.
 """
 
-from __future__ import annotations
+from repro.obs.metrics import (  # noqa: F401
+    LATENCY_BUCKETS,
+    SIZE_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    Metrics,
+)
 
-import threading
-from typing import Dict, Optional, Sequence, Union
-
-__all__ = ["Counter", "Histogram", "Metrics", "LATENCY_BUCKETS",
+__all__ = ["Counter", "Gauge", "Histogram", "Metrics", "LATENCY_BUCKETS",
            "SIZE_BUCKETS"]
-
-# Log-spaced seconds from 10us to ~10s — spans a sub-millisecond SLO and
-# a pathological multi-second stall in the same histogram.
-LATENCY_BUCKETS = tuple(1e-5 * (10 ** (i / 3.0)) for i in range(19))
-
-# Pow2 batch/queue-depth buckets up to the fused bucket ceiling.
-SIZE_BUCKETS = tuple(float(1 << i) for i in range(15))
-
-
-class Counter:
-    """Monotonic counter (thread-safe)."""
-
-    __slots__ = ("_lock", "_value")
-
-    def __init__(self):
-        self._lock = threading.Lock()
-        self._value = 0
-
-    def inc(self, n: int = 1) -> None:
-        with self._lock:
-            self._value += n
-
-    @property
-    def value(self) -> int:
-        return self._value
-
-    def as_dict(self) -> int:
-        return self._value
-
-
-class Histogram:
-    """Fixed-bucket histogram with count/sum/min/max + bucket percentiles.
-
-    ``bounds`` are bucket *upper* edges; an implicit +inf bucket catches
-    the overflow.  :meth:`percentile` answers from bucket edges (clamped
-    to the observed max), so it is a bounded-error estimate — callers
-    needing exact tail latencies keep their own sample list and use this
-    for the exported summary.
-    """
-
-    __slots__ = ("_lock", "bounds", "counts", "count", "total",
-                 "vmin", "vmax")
-
-    def __init__(self, bounds: Sequence[float] = LATENCY_BUCKETS):
-        self._lock = threading.Lock()
-        self.bounds = tuple(float(b) for b in bounds)
-        if list(self.bounds) != sorted(set(self.bounds)):
-            raise ValueError("histogram bounds must be strictly increasing")
-        self.counts = [0] * (len(self.bounds) + 1)
-        self.count = 0
-        self.total = 0.0
-        self.vmin = float("inf")
-        self.vmax = float("-inf")
-
-    def record(self, value: float) -> None:
-        value = float(value)
-        lo, hi = 0, len(self.bounds)
-        while lo < hi:                      # first bucket with bound >= value
-            mid = (lo + hi) // 2
-            if value <= self.bounds[mid]:
-                hi = mid
-            else:
-                lo = mid + 1
-        with self._lock:
-            self.counts[lo] += 1
-            self.count += 1
-            self.total += value
-            self.vmin = min(self.vmin, value)
-            self.vmax = max(self.vmax, value)
-
-    def percentile(self, q: float) -> float:
-        """Upper-edge estimate of the ``q``-quantile (q in [0, 1])."""
-        if not 0.0 <= q <= 1.0:
-            raise ValueError(f"q must be in [0, 1], got {q}")
-        with self._lock:
-            if self.count == 0:
-                return 0.0
-            rank = q * self.count
-            seen = 0
-            for i, c in enumerate(self.counts):
-                seen += c
-                if seen >= rank and c:
-                    edge = (self.bounds[i] if i < len(self.bounds)
-                            else self.vmax)
-                    return min(edge, self.vmax)
-            return self.vmax
-
-    @property
-    def mean(self) -> float:
-        return self.total / self.count if self.count else 0.0
-
-    def as_dict(self) -> dict:
-        with self._lock:
-            if self.count == 0:
-                return {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
-                        "mean": 0.0, "p50": 0.0, "p99": 0.0}
-        return {
-            "count": self.count,
-            "sum": self.total,
-            "min": self.vmin,
-            "max": self.vmax,
-            "mean": self.mean,
-            "p50": self.percentile(0.50),
-            "p99": self.percentile(0.99),
-        }
-
-
-class Metrics:
-    """Lazy registry of named counters/histograms + nested scopes."""
-
-    def __init__(self):
-        self._lock = threading.Lock()
-        self._metrics: Dict[str, Union[Counter, Histogram]] = {}
-        self._scopes: Dict[str, "Metrics"] = {}
-
-    def counter(self, name: str) -> Counter:
-        return self._get(name, Counter, ())
-
-    def histogram(
-        self, name: str, bounds: Optional[Sequence[float]] = None
-    ) -> Histogram:
-        return self._get(name, Histogram,
-                         (bounds if bounds is not None else LATENCY_BUCKETS,))
-
-    def scope(self, name: str) -> "Metrics":
-        with self._lock:
-            if name in self._metrics:
-                raise ValueError(f"{name!r} is already a metric here")
-            scope = self._scopes.get(name)
-            if scope is None:
-                scope = self._scopes[name] = Metrics()
-            return scope
-
-    def _get(self, name, cls, args):
-        with self._lock:
-            if name in self._scopes:
-                raise ValueError(f"{name!r} is already a scope here")
-            m = self._metrics.get(name)
-            if m is None:
-                m = self._metrics[name] = cls(*args)
-            elif not isinstance(m, cls):
-                raise ValueError(
-                    f"{name!r} is a {type(m).__name__}, not {cls.__name__}"
-                )
-            return m
-
-    def as_dict(self) -> dict:
-        with self._lock:
-            metrics = dict(self._metrics)
-            scopes = dict(self._scopes)
-        out = {name: m.as_dict() for name, m in metrics.items()}
-        for name, scope in scopes.items():
-            out[name] = scope.as_dict()
-        return out

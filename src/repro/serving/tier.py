@@ -43,9 +43,10 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import trace
+from repro.obs.metrics import LATENCY_BUCKETS, Metrics, SIZE_BUCKETS
 from repro.qe.executors import INDEX, VALUE
 from repro.qe.service import QueryService
-from repro.serving.metrics import LATENCY_BUCKETS, Metrics, SIZE_BUCKETS
 from repro.serving.snapshot import SnapshotSlot
 
 __all__ = [
@@ -226,17 +227,21 @@ class ServingTier:
         idle_tick: float = 0.05,
         on_flush: Optional[Callable[[FlushEvent], None]] = None,
     ):
+        self.metrics = metrics if metrics is not None else Metrics()
         if service is None:
             # the tier owns flush timing; the service must never flush
-            # behind its back on a max_pending crossing
-            service = QueryService(auto_flush=False)
+            # behind its back on a max_pending crossing.  A tier-owned
+            # service also joins the tier's metrics tree (engine scopes
+            # included) so one to_prometheus() covers the whole stack.
+            service = QueryService(auto_flush=False,
+                                   metrics=self.metrics.scope("service"))
         self._service = service
         self._service_lock = threading.Lock()
         self._clock = clock
         self._idle_tick = float(idle_tick)
         self._on_flush = on_flush
-        self.metrics = metrics if metrics is not None else Metrics()
-        self._tenant_metrics = self.metrics.scope("tenants")
+        self._tenant_metrics = self.metrics.scope(
+            "tenants", child_label="tenant")
         self._m_steps = self.metrics.counter("steps")
         self._m_errors = self.metrics.counter("flusher_errors")
         self._tenants: Dict[str, _Tenant] = {}
@@ -315,46 +320,60 @@ class ServingTier:
         """Enqueue a read; non-blocking.  Raises :class:`Backpressure`
         when the tenant's queue bound or quota rejects it."""
         tenant = self._tenant(name)
-        with self._service_lock:
-            ls, rs = self._service.validate_request(name, ls, rs, op)
-        m = int(ls.shape[0])
-        now = self._clock()
-        cfg = tenant.cfg
-        with tenant.lock:
-            if cfg.quota_qps is not None:
-                if tenant.last_refill is None:
-                    tenant.last_refill = now
-                tenant.tokens = min(
-                    float(cfg.quota_burst or cfg.quota_qps),
-                    tenant.tokens
-                    + (now - tenant.last_refill) * cfg.quota_qps,
-                )
-                tenant.last_refill = now
-                if tenant.tokens < m:
-                    tenant.m_rejected_quota.inc()
-                    raise Backpressure(
-                        name, "quota",
-                        (m - tenant.tokens) / cfg.quota_qps,
-                    )
-                tenant.tokens -= m
-            if tenant.queued_queries + m > cfg.max_queue:
-                tenant.m_rejected_queue.inc()
-                head = tenant.queue[0].ticket.deadline if tenant.queue \
-                    else now + cfg.slo_ms / 1e3
-                raise Backpressure(
-                    name, "queue_full", max(head - now, 0.0) + 1e-4
-                )
-            deadline = now + (slo_ms if slo_ms is not None
-                              else cfg.slo_ms) / 1e3
-            ticket = Ticket(name, op, m, now, deadline)
-            tenant.queue.append(_Queued(ticket, ls, rs))
-            tenant.queued_queries += m
-            depth = tenant.queued_queries
-        tenant.m_submits.inc()
-        tenant.m_submitted_queries.inc(m)
-        tenant.m_depth.record(depth)
-        self._wake.set()
-        return ticket
+        tr = trace.current()
+        sp = tr.begin("submit") if tr is not None else None
+        admitted = False
+        try:
+            with self._service_lock:
+                ls, rs = self._service.validate_request(name, ls, rs, op)
+            m = int(ls.shape[0])
+            now = self._clock()
+            cfg = tenant.cfg
+            asp = tr.begin("admission") if tr is not None else None
+            try:
+                with tenant.lock:
+                    if cfg.quota_qps is not None:
+                        if tenant.last_refill is None:
+                            tenant.last_refill = now
+                        tenant.tokens = min(
+                            float(cfg.quota_burst or cfg.quota_qps),
+                            tenant.tokens
+                            + (now - tenant.last_refill) * cfg.quota_qps,
+                        )
+                        tenant.last_refill = now
+                        if tenant.tokens < m:
+                            tenant.m_rejected_quota.inc()
+                            raise Backpressure(
+                                name, "quota",
+                                (m - tenant.tokens) / cfg.quota_qps,
+                            )
+                        tenant.tokens -= m
+                    if tenant.queued_queries + m > cfg.max_queue:
+                        tenant.m_rejected_queue.inc()
+                        head = tenant.queue[0].ticket.deadline \
+                            if tenant.queue else now + cfg.slo_ms / 1e3
+                        raise Backpressure(
+                            name, "queue_full",
+                            max(head - now, 0.0) + 1e-4,
+                        )
+                    deadline = now + (slo_ms if slo_ms is not None
+                                      else cfg.slo_ms) / 1e3
+                    ticket = Ticket(name, op, m, now, deadline)
+                    tenant.queue.append(_Queued(ticket, ls, rs))
+                    tenant.queued_queries += m
+                    depth = tenant.queued_queries
+                admitted = True
+            finally:
+                if tr is not None:
+                    tr.end(asp, tenant=name, queries=m, admitted=admitted)
+            tenant.m_submits.inc()
+            tenant.m_submitted_queries.inc(m)
+            tenant.m_depth.record(depth)
+            self._wake.set()
+            return ticket
+        finally:
+            if tr is not None:
+                tr.end(sp, tenant=name, op=op, admitted=admitted)
 
     # -- mutation staging -------------------------------------------------
     def update(self, name: str, idxs, vals) -> None:
@@ -441,46 +460,71 @@ class ServingTier:
 
     # -- one flush cycle --------------------------------------------------
     def _flush_tenant(self, tenant: _Tenant, reason: str) -> int:
+        tr = trace.current()
         with tenant.flush_lock:
-            with tenant.lock:
-                batch: List[_Queued] = list(tenant.queue)
-                tenant.queue.clear()
-                tenant.queued_queries = 0
-                tenant.mutation_deadline = None
-            # 1. generation swap: staged mutations fold into the
-            #    successor and publish BEFORE any read executes — a
-            #    flush never observes a half-applied batch, and
-            #    mutations staged from here on wait for the next cycle.
-            front, applied = tenant.slot.swap()
-            if applied:
-                with self._service_lock:
-                    self._service.attach(tenant.name, front)
-                tenant.m_swaps.inc()
-                tenant.m_mut_applied.inc(applied)
-            if not batch and not applied and reason == "forced":
-                return 0
-            # 2. pin the snapshot every request in this flush answers
-            #    against (concurrent staging cannot move it).
-            snap = tenant.slot.pin()
+            sp = tr.begin("flush") if tr is not None else None
+            batch: List[_Queued] = []
+            applied = 0
+            generation = -1
             try:
-                if self._on_flush is not None:
-                    self._on_flush(FlushEvent(
-                        tenant.name, snap.generation, reason,
-                        len(batch), applied,
-                    ))
-                if batch:
-                    self._execute(tenant, batch, snap.generation)
+                with tenant.lock:
+                    batch = list(tenant.queue)
+                    tenant.queue.clear()
+                    tenant.queued_queries = 0
+                    tenant.mutation_deadline = None
+                if tr is not None:
+                    # the queue wait is a cross-thread edge (submitted on
+                    # a caller thread, drained here) — record it
+                    # retroactively from the ticket's own timestamps
+                    drained = self._clock()
+                    for q in batch:
+                        tr.record("queue", q.ticket.submitted_at, drained,
+                                  parent=sp, tenant=tenant.name,
+                                  queries=q.ticket.count)
+                # 1. generation swap: staged mutations fold into the
+                #    successor and publish BEFORE any read executes — a
+                #    flush never observes a half-applied batch, and
+                #    mutations staged from here on wait for the next
+                #    cycle.
+                ssp = tr.begin("snapshot_swap") if tr is not None else None
+                front, applied = tenant.slot.swap()
+                if applied:
+                    with self._service_lock:
+                        self._service.attach(tenant.name, front)
+                    tenant.m_swaps.inc()
+                    tenant.m_mut_applied.inc(applied)
+                if tr is not None:
+                    tr.end(ssp, applied=applied)
+                if not batch and not applied and reason == "forced":
+                    return 0
+                # 2. pin the snapshot every request in this flush answers
+                #    against (concurrent staging cannot move it).
+                snap = tenant.slot.pin()
+                generation = snap.generation
+                try:
+                    if self._on_flush is not None:
+                        self._on_flush(FlushEvent(
+                            tenant.name, snap.generation, reason,
+                            len(batch), applied,
+                        ))
+                    if batch:
+                        self._execute(tenant, batch, snap.generation)
+                finally:
+                    snap.release()
+                tenant.m_flushes.inc()
+                {
+                    "deadline": tenant.m_flush_deadline,
+                    "size": tenant.m_flush_size,
+                    "mutation": tenant.m_flush_mutation,
+                    "forced": tenant.m_flush_forced,
+                }[reason].inc()
+                tenant.m_batch.record(sum(q.ticket.count for q in batch))
+                return len(batch)
             finally:
-                snap.release()
-            tenant.m_flushes.inc()
-            {
-                "deadline": tenant.m_flush_deadline,
-                "size": tenant.m_flush_size,
-                "mutation": tenant.m_flush_mutation,
-                "forced": tenant.m_flush_forced,
-            }[reason].inc()
-            tenant.m_batch.record(sum(q.ticket.count for q in batch))
-            return len(batch)
+                if tr is not None:
+                    tr.end(sp, tenant=tenant.name, reason=reason,
+                           requests=len(batch), applied=applied,
+                           generation=generation)
 
     def _execute(self, tenant: _Tenant, batch: List[_Queued],
                  generation: int) -> None:
@@ -574,6 +618,7 @@ class ServingTier:
     def _run(self) -> None:
         while not self._stop_evt.is_set():
             try:
+                trace.instant("pump_wakeup", driver="thread")
                 nxt = self.step()
             except Exception:
                 # a tenant's flush failure resolves its tickets with the

@@ -1,0 +1,486 @@
+"""Unified observability layer: tracer, launch registry, metrics.
+
+Covers the obs subsystem's contracts directly (span nesting under a fake
+clock, Chrome-trace schema, Prometheus exposition, registry attribution,
+the Histogram torn-read regression) plus the end-to-end wiring: one
+ServingTier flush must produce the full span tree and one metrics tree
+must export engine cache/span-class/padding series.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.api import RMQ
+from repro.kernels.profiling import (
+    count_launches,
+    launch_registry,
+    operand_bytes,
+    timed_dispatch,
+)
+from repro.obs import trace
+from repro.obs.metrics import Counter, Gauge, Histogram, Metrics
+from repro.obs.trace import Tracer, use_tracer
+from repro.qe import QueryService
+from repro.qe.cache import ResultCache
+from repro.qe.executors import INDEX, VALUE
+from repro.serving import ServingTier
+
+
+class FakeClock:
+    """Deterministic monotonic clock for exact span-time assertions."""
+
+    def __init__(self, t: float = 100.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+class TestTracer:
+    def test_nesting_and_ordering_under_fake_clock(self):
+        clock = FakeClock()
+        tr = Tracer(clock=clock)
+        outer = tr.begin("flush")
+        clock.advance(1.0)
+        inner = tr.begin("plan")
+        clock.advance(0.5)
+        tr.end(inner, buckets=2)
+        clock.advance(0.25)
+        tr.end(outer, tenant="a")
+        spans = tr.spans()
+        # completion order: children close before parents
+        assert [s.name for s in spans] == ["plan", "flush"]
+        plan, flush = spans
+        assert plan.parent_id == flush.span_id
+        assert flush.parent_id is None
+        assert (plan.start, plan.end) == (101.0, 101.5)
+        assert (flush.start, flush.end) == (100.0, 101.75)
+        assert plan.duration == pytest.approx(0.5)
+        assert plan.args == {"buckets": 2}
+        assert flush.args == {"tenant": "a"}
+
+    def test_sibling_spans_share_parent(self):
+        tr = Tracer(clock=FakeClock())
+        root = tr.begin("root")
+        a = tr.begin("a")
+        tr.end(a)
+        b = tr.begin("b")
+        tr.end(b)
+        tr.end(root)
+        assert a.parent_id == root.span_id
+        assert b.parent_id == root.span_id
+
+    def test_span_context_manager(self):
+        tr = Tracer(clock=FakeClock())
+        with tr.span("execute", cls="fused") as sp:
+            pass
+        assert sp.end is not None
+        assert tr.spans()[0].args == {"cls": "fused"}
+
+    def test_threads_keep_separate_parent_stacks(self):
+        tr = Tracer(clock=FakeClock())
+        root = tr.begin("root")
+
+        def worker():
+            sp = tr.begin("worker_span")
+            tr.end(sp)
+
+        t = threading.Thread(target=worker, name="obs-worker")
+        t.start()
+        t.join()
+        tr.end(root)
+        worker_sp = next(s for s in tr.spans() if s.name == "worker_span")
+        # never adopts another thread's open span as parent
+        assert worker_sp.parent_id is None
+        assert worker_sp.thread == "obs-worker"
+
+    def test_unbalanced_end_truncates_descendants(self):
+        tr = Tracer(clock=FakeClock())
+        outer = tr.begin("outer")
+        tr.begin("leaked")          # never explicitly ended
+        tr.end(outer)
+        nxt = tr.begin("next")
+        tr.end(nxt)
+        assert nxt.parent_id is None
+
+    def test_ring_buffer_bounds_and_dropped(self):
+        tr = Tracer(clock=FakeClock(), capacity=4)
+        for i in range(6):
+            tr.instant(f"e{i}")
+        spans = tr.spans()
+        assert len(spans) == 4
+        assert [s.name for s in spans] == ["e2", "e3", "e4", "e5"]
+        assert tr.dropped == 2
+        tr.clear()
+        assert tr.spans() == [] and tr.dropped == 0
+
+    def test_record_explicit_timestamps(self):
+        tr = Tracer(clock=FakeClock())
+        parent = tr.begin("flush")
+        sp = tr.record("queue", 10.0, 12.5, parent=parent, queries=3)
+        tr.end(parent)
+        assert sp.start == 10.0 and sp.end == 12.5
+        assert sp.parent_id == parent.span_id
+        assert sp.args == {"queries": 3}
+
+    def test_chrome_trace_schema(self, tmp_path):
+        clock = FakeClock(0.0)
+        tr = Tracer(clock=clock)
+        outer = tr.begin("flush")
+        clock.advance(0.002)
+        inner = tr.begin("plan")
+        clock.advance(0.001)
+        tr.end(inner)
+        tr.end(outer, tenant="a")
+        doc = tr.to_chrome_trace()
+        assert doc["displayTimeUnit"] == "ms"
+        events = doc["traceEvents"]
+        assert len(events) == 2
+        for e in events:
+            assert e["ph"] == "X" and e["cat"] == "repro"
+            assert set(e) >= {"name", "ts", "dur", "pid", "tid", "args"}
+            assert "span_id" in e["args"]
+        plan = next(e for e in events if e["name"] == "plan")
+        flush = next(e for e in events if e["name"] == "flush")
+        assert plan["ts"] == pytest.approx(2000.0)      # microseconds
+        assert plan["dur"] == pytest.approx(1000.0)
+        assert plan["args"]["parent_id"] == flush["args"]["span_id"]
+        assert flush["args"]["tenant"] == "a"
+        # round-trips through the file export
+        path = tmp_path / "trace.json"
+        tr.save_chrome_trace(str(path))
+        assert json.loads(path.read_text()) == doc
+
+    def test_disabled_tracing_is_noop(self):
+        assert trace.current() is None
+        # module helpers: shared null context, no spans anywhere
+        assert trace.span("x") is trace.span("y")
+        with trace.span("x") as sp:
+            assert sp is None
+        assert trace.instant("x") is None
+        assert trace.record("x", 0.0, 1.0) is None
+
+    def test_use_tracer_installs_and_restores(self):
+        tr = Tracer(clock=FakeClock())
+        with use_tracer(tr) as got:
+            assert got is tr and trace.current() is tr
+            trace.instant("inside")
+        assert trace.current() is None
+        assert [s.name for s in tr.spans()] == ["inside"]
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+class TestMetrics:
+    def test_prometheus_counter_and_gauge(self):
+        m = Metrics()
+        m.counter("requests").inc(3)
+        m.gauge("depth").set(7)
+        text = m.to_prometheus()
+        assert "# TYPE repro_requests_total counter" in text
+        assert "repro_requests_total 3.0" in text
+        assert "# TYPE repro_depth gauge" in text
+        assert "repro_depth 7.0" in text
+        assert text.endswith("\n")
+
+    def test_gauge_callback_and_failure(self):
+        m = Metrics()
+        state = {"v": 2}
+        g = m.gauge("live", fn=lambda: state["v"])
+        assert g.value == 2.0
+        state["v"] = 5
+        assert g.value == 5.0
+        g.set_fn(lambda: 1 / 0)
+        assert g.value == 0.0          # a broken callback must not poison
+        g.set(9)                       # explicit set clears the callback
+        assert g.value == 9.0
+
+    def test_prometheus_histogram_cumulative_buckets(self):
+        m = Metrics()
+        h = m.histogram("lat", bounds=(1.0, 2.0))
+        for v in (0.5, 1.5, 5.0):
+            h.record(v)
+        text = m.to_prometheus()
+        assert "# TYPE repro_lat histogram" in text
+        assert 'repro_lat_bucket{le="1.0"} 1' in text
+        assert 'repro_lat_bucket{le="2.0"} 2' in text
+        assert 'repro_lat_bucket{le="+Inf"} 3' in text
+        assert "repro_lat_sum 7.0" in text
+        assert "repro_lat_count 3" in text
+
+    def test_labeled_scopes(self):
+        m = Metrics()
+        tenants = m.scope("tenants", child_label="tenant")
+        tenants.scope("search").counter("submits").inc()
+        tenants.scope("ads").counter("submits").inc(2)
+        text = m.to_prometheus()
+        assert 'repro_tenants_submits_total{tenant="search"} 1.0' in text
+        assert 'repro_tenants_submits_total{tenant="ads"} 2.0' in text
+        # one TYPE line for the shared series
+        assert text.count("# TYPE repro_tenants_submits_total") == 1
+        # nested dict export keeps the tree shape
+        assert m.as_dict()["tenants"]["ads"]["submits"] == 2
+
+    def test_name_collisions_rejected(self):
+        m = Metrics()
+        m.counter("x")
+        with pytest.raises(ValueError):
+            m.scope("x")
+        with pytest.raises(ValueError):
+            m.gauge("x")
+        m.scope("s")
+        with pytest.raises(ValueError):
+            m.counter("s")
+
+    def test_histogram_percentiles(self):
+        h = Histogram(bounds=(1.0, 2.0, 4.0))
+        for v in (0.5, 1.5, 3.0, 3.5):
+            h.record(v)
+        assert h.percentile(0.0) == 0.0 or h.percentile(0.0) <= 1.0
+        assert h.percentile(1.0) == 3.5       # clamped to observed max
+        d = h.as_dict()
+        assert d["count"] == 4 and d["sum"] == pytest.approx(8.5)
+        assert d["min"] == 0.5 and d["max"] == 3.5
+
+    def test_histogram_as_dict_torn_read_regression(self):
+        """A concurrent record() must never yield count/sum out of sync
+        (the old implementation re-read attributes after the lock)."""
+        h = Histogram(bounds=(1.0,))
+        stop = threading.Event()
+
+        def writer():
+            while not stop.is_set():
+                h.record(1.0)
+
+        t = threading.Thread(target=writer)
+        t.start()
+        try:
+            for _ in range(2000):
+                d = h.as_dict()
+                assert d["sum"] == float(d["count"])
+                assert d["mean"] in (0.0, 1.0)
+        finally:
+            stop.set()
+            t.join()
+
+    def test_concurrent_recording_stress(self):
+        m = Metrics()
+        c = m.counter("c")
+        h = m.histogram("h", bounds=(0.5,))
+        g = m.gauge("g")
+
+        def work():
+            for i in range(1000):
+                c.inc()
+                h.record(1.0)
+                g.set(i)
+
+        threads = [threading.Thread(target=work) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert c.value == 8000
+        snap_counts, count, total, _, _ = h.snapshot()
+        assert count == 8000 and sum(snap_counts) == 8000
+        assert total == pytest.approx(8000.0)
+
+    def test_serving_metrics_shim_reexports(self):
+        # back-compat: the old import path must expose the same classes
+        from repro.serving import metrics as old
+        assert old.Counter is Counter
+        assert old.Gauge is Gauge
+        assert old.Histogram is Histogram
+        assert old.Metrics is Metrics
+
+
+# ---------------------------------------------------------------------------
+# ResultCache thread safety
+# ---------------------------------------------------------------------------
+class TestResultCache:
+    def test_capacity_zero_counts_misses(self):
+        cache = ResultCache(0)
+        cache.put(VALUE, 0, 1, 2, 3.0)
+        assert cache.get(VALUE, 0, 1, 2) is None
+        assert cache.stats()["misses"] == 1
+        assert cache.hit_rate() == 0.0
+
+    def test_concurrent_counters_consistent(self):
+        cache = ResultCache(64)
+        per_thread = 500
+
+        def work(seed):
+            rng = np.random.default_rng(seed)
+            for _ in range(per_thread):
+                k = int(rng.integers(0, 32))
+                if cache.get(VALUE, 0, k, k + 1) is None:
+                    cache.put(VALUE, 0, k, k + 1, float(k))
+
+        threads = [threading.Thread(target=work, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        s = cache.stats()
+        assert s["hits"] + s["misses"] == 8 * per_thread
+        assert cache.hit_rate() == pytest.approx(
+            s["hits"] / (8 * per_thread))
+
+
+# ---------------------------------------------------------------------------
+# Launch registry
+# ---------------------------------------------------------------------------
+class TestLaunchRegistry:
+    def test_operand_bytes_helper(self):
+        a = np.zeros((4, 8), np.float32)
+        b = np.zeros(3, np.int32)
+        assert operand_bytes(a, None, b) == 4 * 8 * 4 + 3 * 4
+
+    def test_count_launches_contract_unchanged(self):
+        # unique geometry: trace-time records fire on first trace only
+        rng = np.random.default_rng(0)
+        x = rng.random(2897).astype(np.float32)
+        engine = RMQ.build(x, c=8, t=8, backend="fused").engine(
+            cache_size=0)
+        ls = np.array([1, 10, 100], np.int32)
+        rs = np.array([5, 200, 2000], np.int32)
+        with count_launches() as counts:
+            engine.query(ls, rs)
+        assert counts == {"rmq_fused": 1}
+
+    def test_registry_attribution_build_and_query(self):
+        rng = np.random.default_rng(1)
+        x = rng.random(3331).astype(np.float32)
+        ls = np.array([0, 7, 31], np.int32)
+        rs = np.array([6, 300, 3000], np.int32)
+        with launch_registry() as reg:
+            engine = RMQ.build(
+                x, c=8, t=8, with_positions=True, backend="fused"
+            ).engine(cache_size=0)
+            engine.query(ls, rs)
+        assert reg.counts == {"hierarchy_fused": 1, "rmq_fused": 1}
+        by_name = {r.name: r for r in reg.records}
+        build = by_name["hierarchy_fused"].meta
+        assert build["lowering"] == "pallas"
+        assert build["levels"] >= 2
+        assert build["operand_bytes"] > 3331 * 4
+        query = by_name["rmq_fused"].meta
+        # the engine pads batches to pow2 bucket lanes before dispatch,
+        # so the recorded count is the bucket shape, not the raw batch
+        assert query["queries"] >= 3
+        assert query["operand_bytes"] > 0
+        ob = reg.operand_bytes()
+        assert set(ob) == {"hierarchy_fused", "rmq_fused"}
+        dump = reg.as_dict()
+        assert dump["counts"] == reg.counts
+        assert len(dump["launches"]) == 2
+        assert "timings_s" not in dump      # timing was off
+
+    def test_timed_dispatch_records_only_when_enabled(self):
+        import jax.numpy as jnp
+
+        calls = []
+
+        def fn(a, b):
+            calls.append(1)
+            return jnp.add(a, b)
+
+        # no registry: pure passthrough
+        out = timed_dispatch("k", fn, 1, 2)
+        assert int(out) == 3
+        # registry without timing: still passthrough
+        with launch_registry() as reg:
+            timed_dispatch("k", fn, 1, 2)
+        assert reg.timings == {}
+        # timing on: wall-clock recorded under the dispatch label
+        with launch_registry(timing=True) as reg:
+            timed_dispatch("k", fn, 1, 2)
+            timed_dispatch("k", fn, 3, 4)
+        assert len(reg.timings["k"]) == 2
+        assert all(t >= 0.0 for t in reg.timings["k"])
+        assert len(calls) == 4
+        assert "timings_s" in reg.as_dict()
+
+
+# ---------------------------------------------------------------------------
+# End-to-end wiring
+# ---------------------------------------------------------------------------
+class TestEndToEnd:
+    def test_service_engine_metrics_export(self):
+        m = Metrics()
+        svc = QueryService(auto_flush=False, metrics=m)
+        x = np.random.default_rng(2).random(512).astype(np.float32)
+        svc.register("idx", RMQ.build(x, c=8, t=8, backend="jax"),
+                     cache_size=16)
+        tk = svc.submit("idx", np.array([1, 5]), np.array([3, 9]), VALUE)
+        svc.flush(names=("idx",))
+        np.asarray(svc.take(tk))
+        prom = m.to_prometheus()
+        assert 'repro_engines_cache_hit_rate{index="idx"}' in prom
+        assert 'repro_engines_span_class_short{index="idx"}' in prom
+        assert "repro_engines_bucket_padding_waste_bucket" in prom
+        assert "repro_flushes" in prom
+        d = m.as_dict()
+        assert d["engines"]["idx"]["queries"] >= 2
+        assert d["engines"]["idx"]["span_class_short"] >= 2
+
+    def test_tier_flush_produces_full_span_tree(self):
+        clock = FakeClock()
+        tracer = Tracer(clock=clock)
+        tier = ServingTier(clock=clock)
+        x = np.random.default_rng(3).random(256).astype(np.float32)
+        tier.register_tenant(
+            "t", RMQ.build(x, c=8, t=8, with_positions=True,
+                           backend="fused"),
+            slo_ms=5.0, cache_size=0,
+        )
+        with use_tracer(tracer):
+            for op in (VALUE, INDEX):
+                tier.submit("t", np.array([1, 9], np.int32),
+                            np.array([6, 200], np.int32), op)
+                clock.advance(0.001)
+            tier.drain("t")
+        spans = tracer.spans()
+        by_id = {s.span_id: s for s in spans}
+        names = {s.name for s in spans}
+        assert {"submit", "admission", "queue", "flush", "snapshot_swap",
+                "service_flush", "plan", "execute", "scatter"} <= names
+
+        flush = next(s for s in spans if s.name == "flush")
+        assert flush.args["requests"] == 2
+        # admission nests under submit on the caller thread
+        admission = next(s for s in spans if s.name == "admission")
+        assert by_id[admission.parent_id].name == "submit"
+        assert admission.args["admitted"] is True
+        # retroactive queue spans hang off the flush and carry the real
+        # submit->drain wait on the shared clock
+        queues = [s for s in spans if s.name == "queue"]
+        assert len(queues) == 2
+        for q in queues:
+            assert q.parent_id == flush.span_id
+            assert q.end - q.start > 0
+        # engine spans reach the flush through the parent chain
+        scatter = next(s for s in spans if s.name == "scatter")
+        chain = []
+        cur = scatter
+        while cur.parent_id is not None:
+            cur = by_id[cur.parent_id]
+            chain.append(cur.name)
+        assert chain == ["service_flush", "flush"]
+        # the whole thing exports as a valid Chrome trace
+        doc = tracer.to_chrome_trace()
+        assert len(doc["traceEvents"]) == len(spans)
