@@ -1,15 +1,12 @@
-"""Shared benchmark utilities: timing, the paper's workload generators.
+"""Shared benchmark utilities (thin caller over ``repro.tune.measure``).
 
-Workloads follow paper §5.1:
-* input arrays: i.i.d. uniform [0, 1) float32;
-* query range-size classes — large (uniform in [1, n]),
-  medium (log-normal, mu = ln(n^0.6), sigma = 0.3),
-  small (log-normal, mu = ln(n^0.3), sigma = 0.3),
-  mixed (equal thirds);
-* left borders uniform in [0, n - s].
+The timing discipline and the paper §5.1 workload generators moved into
+:mod:`repro.tune.measure` so the autotuner and the benchmarks share ONE
+implementation — the tuning cache is built from exactly the numbers the
+benchmarks report.  This module keeps the benchmark-only helpers
+(tiny-mode detection, CSV formatting) and re-exports the rest for
+existing callers.
 
-Timings are wall-clock medians over repeats with a warmup call
-(block_until_ready), reported as ns/query like the paper's "time per RMQ".
 This container is CPU-only, so absolute numbers are NOT the paper's GPU
 numbers — benchmarks reproduce the paper's *relative* claims (scaling
 shapes, method orderings, parameter trade-offs) and the harness runs
@@ -19,62 +16,18 @@ unchanged on a TPU host.
 from __future__ import annotations
 
 import os
-import time
-from typing import Callable, Dict, Tuple
 
-import numpy as np
-import jax
+from repro.tune.measure import (  # noqa: F401  (re-exports)
+    make_input_array,
+    make_queries,
+    make_span_queries,
+    time_fn,
+)
 
 
 def tiny_mode() -> bool:
     """CI-smoke size reduction (``REPRO_BENCH_TINY=1``)."""
     return os.environ.get("REPRO_BENCH_TINY", "0") not in ("", "0")
-
-
-def time_fn(fn: Callable, repeats: int = 5) -> float:
-    """Median wall-clock seconds of fn() with one warmup."""
-    out = fn()
-    jax.block_until_ready(out)
-    times = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        out = fn()
-        jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times))
-
-
-def make_input_array(n: int, seed: int = 0) -> np.ndarray:
-    rng = np.random.default_rng(seed)
-    return rng.random(n, dtype=np.float32)
-
-
-def make_queries(
-    n: int, m: int, kind: str = "mixed", seed: int = 1
-) -> Tuple[np.ndarray, np.ndarray]:
-    rng = np.random.default_rng(seed)
-
-    def sizes(kind, count):
-        if kind == "large":
-            return rng.integers(1, n + 1, count)
-        if kind == "medium":
-            s = rng.lognormal(np.log(n ** 0.6), 0.3, count)
-            return np.clip(s.astype(np.int64), 1, n)
-        if kind == "small":
-            s = rng.lognormal(np.log(n ** 0.3), 0.3, count)
-            return np.clip(s.astype(np.int64), 1, n)
-        if kind == "mixed":
-            parts = [sizes(k, count // 3 + 1)
-                     for k in ("large", "medium", "small")]
-            s = np.concatenate(parts)[:count]
-            rng.shuffle(s)
-            return s
-        raise ValueError(kind)
-
-    s = sizes(kind, m)
-    ls = (rng.random(m) * (n - s + 1)).astype(np.int64)
-    rs = ls + s - 1
-    return ls.astype(np.int32), rs.astype(np.int32)
 
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:

@@ -1,27 +1,8 @@
-"""Roofline analysis from dry-run artifacts (deliverable g).
+"""Roofline analysis from dry-run artifacts (thin caller).
 
-Reads ``results/dryrun_single.jsonl`` (written by ``repro.launch.dryrun
---all --calibrate``) and derives, per (arch × shape):
-
-  compute term    = HLO_FLOPs_per_device / peak_FLOPs
-  memory term     = HLO_bytes_per_device / HBM_bw
-  collective term = Σ_k factor_k · collective_bytes_k_per_device / ICI_bw
-
-Hardware constants (TPU v5e class, per assignment):
-  peak 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
-
-Notes on sourcing (DESIGN.md §7):
-* FLOPs/bytes use the *calibrated* numbers (2/4-layer unrolled compiles
-  extrapolated to depth) because XLA cost analysis counts while bodies
-  once; the raw production-compile numbers are kept for reference.
-* collective bytes are parsed from partitioned HLO result shapes
-  (per-device); ring factors: all-reduce 2×(k-1)/k ≈ 2, all-gather /
-  reduce-scatter / all-to-all / collective-permute (k-1)/k ≈ 1.
-* MODEL_FLOPS = 6·N·D for training (N = params, D = tokens; N_active for
-  MoE), 2·N_active·B per decode step, 2·N_active·D + attention for
-  prefill.  The ratio MODEL_FLOPS/HLO_FLOPs flags remat / redundant
-  compute (ratio < 1 ⇒ HLO does extra work: remat recompute, z-loss,
-  attention, optimizer math).
+The analysis machinery lives in :mod:`repro.tune.roofline` (shared with
+the autotuner package); this benchmark only resolves the input path,
+renders the table, and writes the ``results/`` artifacts.
 """
 
 from __future__ import annotations
@@ -29,122 +10,8 @@ from __future__ import annotations
 import json
 import os
 import sys
-from typing import Dict, Optional
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
-
-_COLL_FACTOR = {
-    "all-reduce": 2.0,
-    "all-gather": 1.0,
-    "reduce-scatter": 1.0,
-    "all-to-all": 1.0,
-    "collective-permute": 1.0,
-}
-
-
-def model_flops_per_device(arch: str, shape: str, chips: int) -> float:
-    from repro.configs.base import get_config
-    from repro.launch.cells import SHAPES
-
-    cfg = get_config(arch)
-    spec = SHAPES[shape]
-    n_active = cfg.num_active_params()
-    seq, gb = spec["seq_len"], spec["global_batch"]
-    if spec["kind"] == "train":
-        total = 6.0 * n_active * (seq * gb)
-    elif spec["kind"] == "prefill":
-        total = 2.0 * n_active * (seq * gb)
-    else:  # decode: one token per sequence
-        total = 2.0 * n_active * gb
-    return total / chips
-
-
-def analyse_record(rec: Dict, chips: int) -> Optional[Dict]:
-    if rec.get("skipped"):
-        return {
-            "arch": rec["arch"], "shape": rec["shape"],
-            "skipped": rec["skipped"],
-        }
-    if not rec.get("ok", False):
-        return {
-            "arch": rec["arch"], "shape": rec["shape"],
-            "error": rec.get("error", "unknown"),
-        }
-    cal = rec.get("calibrated")
-    flops = (cal or rec)["flops_per_device"]
-    hbm_bytes = (cal or rec)["bytes_per_device"]
-    colls = (cal or rec)["collective_bytes"]
-
-    t_compute = flops / PEAK_FLOPS
-    t_memory = hbm_bytes / HBM_BW
-    t_coll = sum(
-        _COLL_FACTOR.get(k, 1.0) * v for k, v in colls.items()
-    ) / ICI_BW
-
-    terms = {"compute": t_compute, "memory": t_memory,
-             "collective": t_coll}
-    bottleneck = max(terms, key=terms.get)
-    mf = model_flops_per_device(rec["arch"], rec["shape"], chips)
-    t_ideal = max(mf / PEAK_FLOPS, 1e-12)
-    t_bound = max(terms.values())
-    return {
-        "arch": rec["arch"],
-        "shape": rec["shape"],
-        "mesh": rec.get("mesh_desc", "single"),
-        "compute_s": t_compute,
-        "memory_s": t_memory,
-        "collective_s": t_coll,
-        "bottleneck": bottleneck,
-        "model_flops_per_device": mf,
-        "hlo_flops_per_device": flops,
-        "useful_flops_ratio": mf / max(flops, 1.0),
-        # fraction of the ideal (model-flops-only) roofline achieved if
-        # the step runs at its binding term
-        "roofline_fraction": t_ideal / t_bound if t_bound > 0 else 0.0,
-        "calibrated": cal is not None,
-        "temp_gib": rec.get("temp_bytes", 0) / 2**30,
-        "args_gib": rec.get("argument_bytes", 0) / 2**30,
-    }
-
-
-def load_results(path: str) -> Dict:
-    out = {}
-    if not os.path.exists(path):
-        return out
-    with open(path) as f:
-        for line in f:
-            rec = json.loads(line)
-            out[(rec["arch"], rec["shape"])] = rec  # last write wins
-    return out
-
-
-def render_table(rows) -> str:
-    hdr = ("| arch | shape | compute(s) | memory(s) | collective(s) | "
-           "bottleneck | useful-FLOPs | roofline-frac | temp GiB |")
-    sep = "|" + "---|" * 9
-    lines = [hdr, sep]
-    for r in rows:
-        if "skipped" in r:
-            lines.append(
-                f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | — "
-                f"| — |"
-            )
-            continue
-        if "error" in r:
-            lines.append(
-                f"| {r['arch']} | {r['shape']} | — | — | — | "
-                f"ERROR: {r['error'][:40]} | — | — | — |"
-            )
-            continue
-        lines.append(
-            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
-            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
-            f"{r['bottleneck']} | {r['useful_flops_ratio']:.2f} | "
-            f"{r['roofline_fraction']:.2f} | {r['temp_gib']:.1f} |"
-        )
-    return "\n".join(lines)
+from repro.tune.roofline import analyse_record, load_results, render_table
 
 
 def main():

@@ -36,6 +36,8 @@ def main():
     x = rng.random(n, dtype=np.float32)
 
     # --- one index, one engine -------------------------------------------
+    # explicit geometry here so the walkthrough is deterministic; see the
+    # tuned section below (and `python -m repro.tune`) for c="auto"
     rmq = RMQ.build(x, c=c, t=64, with_positions=True, backend="jax")
     engine = rmq.engine()
     print(f"index: n={n}, {rmq.plan.num_levels} levels, "
@@ -102,6 +104,19 @@ def main():
     vals_mx, poss_mx = fused_engine.query_mixed(ls_m, rs_m, is_index)
     print(f"fused backend: mixed batch in {counts} "
           f"(class split {fused_engine.stats()['class_counts']})")
+
+    # --- autotuned: geometry/backend/planner from the tuning cache ---------
+    # c="auto" consults results/tuning_cache.json (regenerate with
+    # `python -m repro.tune`); on a cache miss this is bit-identical to
+    # the c=128, t=64 default above.
+    tuned_rmq = RMQ.build(x, c="auto", with_positions=True)
+    tuned_engine = tuned_rmq.engine(cache_size=0)
+    cfg = tuned_engine.tuned or {"source": "default (cache miss)"}
+    print(f"tuned build: c={tuned_rmq.plan.c}, t={tuned_rmq.plan.t}, "
+          f"backend={tuned_engine.backend} (config source: "
+          f"{cfg.get('source')})")
+    tv = np.asarray(tuned_engine.query(ls_m, rs_m))
+    assert np.array_equal(tv, np.asarray(fused_engine.query(ls_m, rs_m)))
     print("query engine demo OK")
 
 

@@ -16,10 +16,14 @@ def main():
     x = rng.random(n, dtype=np.float32)
 
     # --- build (paper §4.1: hierarchy of chunk minima) -------------------
-    rmq = RMQ.build(x, c=128, t=64, with_positions=True, backend="jax")
+    # c="auto" resolves geometry from the committed tuning cache for
+    # this platform and input size (falls back to c=128, t=64 on a
+    # cache miss); pass explicit c/t to pin a geometry instead.
+    rmq = RMQ.build(x, c="auto", with_positions=True)
     plan = rmq.plan
-    print(f"n = {n}: {plan.num_levels} levels, level sizes "
-          f"{plan.level_lens}")
+    print(f"n = {n}: geometry c={plan.c}, t={plan.t} "
+          f"(tuned: {plan.level_split is not None}), "
+          f"{plan.num_levels} levels, level sizes {plan.level_lens}")
     print(f"auxiliary memory: {rmq.auxiliary_bytes() / 2**20:.2f} MiB "
           f"({100 * plan.overhead_fraction():.2f}% of the input — "
           f"paper bound n/(c-1) = {100 / (plan.c - 1):.2f}%)")

@@ -4,10 +4,16 @@ Public API:
 
     from repro.core import RMQ, make_plan, build_hierarchy
 
-    rmq = RMQ.build(x, c=128, t=64)           # value-only
+    rmq = RMQ.build(x, c="auto")              # geometry from the tuning
+                                              # cache (c=128, t=64 on a
+                                              # cache miss)
     vals = rmq.query(ls, rs)                  # batched RMQ_value
     rmq = RMQ.build(x, with_positions=True)
     pos  = rmq.query_index(ls, rs)            # batched RMQ_index (leftmost)
+
+Explicit ``c``/``t`` still work everywhere; ``c="auto"`` resolves them
+from ``results/tuning_cache.json`` (see ``repro.tune``) per platform,
+input-size bucket, and span mix.
 """
 
 from repro.core.api import RMQ
@@ -18,7 +24,7 @@ from repro.core.hierarchy import (
     build_many,
     pos_dtype_for,
 )
-from repro.core.plan import HierarchyPlan, make_plan
+from repro.core.plan import HierarchyPlan, LevelSplit, make_plan
 from repro.core.protocol import (
     MutableRMQIndex,
     RMQIndex,
@@ -43,6 +49,7 @@ __all__ = [
     "supports_mutation",
     "Hierarchy",
     "HierarchyPlan",
+    "LevelSplit",
     "PAD_POS",
     "POS_INF_I32",
     "build_hierarchy",

@@ -57,22 +57,54 @@ class RMQ:
     @staticmethod
     def build(
         x,
-        c: int = 128,
+        c=128,
         t: int = 64,
         with_positions: bool = False,
         backend: str = "auto",
         plan: Optional[HierarchyPlan] = None,
         capacity: Optional[int] = None,
+        tuning=None,
+        span_mix: str = "mixed",
     ) -> "RMQ":
-        """Build over ``x``; pass ``capacity > len(x)`` to allow appends."""
+        """Build over ``x``; pass ``capacity > len(x)`` to allow appends.
+
+        ``c="auto"`` resolves geometry from the tuning cache (``tuning``
+        — default: the committed ``repro.tune.default_cache()`` — keyed
+        by platform × size bucket × ``span_mix``) and attaches the
+        winner's ``LevelSplit`` to the plan; with ``backend="auto"`` the
+        tuned *query* backend is adopted too (hierarchies are
+        bit-identical across backends, so this only changes which
+        lowering answers queries).  A cache miss falls back to today's
+        defaults (``c=128, t=64``, platform backend) bit-identically.
+        """
         x = px.coerce_values(x)
         if plan is not None and capacity is not None:
             raise ValueError(
                 "pass capacity via make_plan(..., capacity=...) when "
                 "supplying an explicit plan"
             )
+        tuned_cfg = None
+        if plan is None and (c == "auto" or tuning is not None):
+            from repro.tune import cache as _tc
+
+            store = tuning if tuning is not None else _tc.default_cache()
+            tuned_cfg = store.lookup(
+                _tc.current_platform(), int(x.shape[0]), span_mix
+            )
         if plan is None:
-            plan = make_plan(int(x.shape[0]), c=c, t=t, capacity=capacity)
+            if tuned_cfg is not None:
+                plan = make_plan(
+                    int(x.shape[0]), c=tuned_cfg.c, t=tuned_cfg.t,
+                    capacity=capacity,
+                    level_split=tuned_cfg.level_split(),
+                )
+            else:
+                plan = make_plan(
+                    int(x.shape[0]), c=128 if c == "auto" else c, t=t,
+                    capacity=capacity,
+                )
+        if backend == "auto" and tuned_cfg is not None:
+            backend = tuned_cfg.backend
         backend = px.resolve_backend(backend)
         h = px.build_hierarchy_with_backend(
             x, plan, with_positions=with_positions, backend=backend

@@ -21,9 +21,9 @@ Everything in this module is *static* Python metadata (hashable, usable as a
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
-__all__ = ["HierarchyPlan", "make_plan"]
+__all__ = ["HierarchyPlan", "LevelSplit", "make_plan"]
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -32,6 +32,45 @@ def _ceil_div(a: int, b: int) -> int:
 
 def _round_up(a: int, b: int) -> int:
     return _ceil_div(a, b) * b
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelSplit:
+    """How hierarchy levels split across execution engines (paper "hybrid").
+
+    The plan's geometry says *what* the levels are; a ``LevelSplit`` says
+    *who answers them*.  It is static, hashable metadata carried on the
+    plan (usually resolved from the tuning cache — see ``repro.tune``)
+    that the query planner consumes instead of its analytic guesses:
+
+    scan_chunks:  spans covering at most this many aligned ``c``-chunks
+                  take the bottom scan route (the dedicated short-span
+                  kernel).  1 or 2 only — the ``rmq_short`` kernel scans
+                  at most two aligned chunks.
+    sparse_top:   whether spans past ``long_cutoff`` route to the O(1)
+                  sparse-table top (``HybridRMQ``) instead of walking
+                  the hierarchy.
+    long_cutoff:  the *measured* walk-vs-sparse-top crossover span;
+                  ``None`` keeps the planner's analytic ``2c·c^(L-2)``
+                  default.
+    fused:        execute through the single-launch ``rmq_fused`` path
+                  (no host-side class split) — the tuned winner for
+                  workloads where one launch beats routing.
+    """
+
+    scan_chunks: int = 2
+    sparse_top: bool = True
+    long_cutoff: Optional[int] = None
+    fused: bool = False
+
+    def __post_init__(self):
+        if self.scan_chunks not in (1, 2):
+            raise ValueError(
+                f"scan_chunks must be 1 or 2 (the short-span kernel scans "
+                f"at most two aligned chunks), got {self.scan_chunks}")
+        if self.long_cutoff is not None and self.long_cutoff < 1:
+            raise ValueError(
+                f"long_cutoff must be positive, got {self.long_cutoff}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +92,9 @@ class HierarchyPlan:
     offsets:      start offset of each *upper* level (k >= 1) inside the
                   single contiguous ``upper`` buffer (paper: "we store all
                   precomputed layers in a single, contiguous buffer").
+    level_split:  optional :class:`LevelSplit` routing levels across
+                  execution engines (attached by the tuned build path);
+                  ``None`` keeps every consumer's analytic defaults.
     """
 
     n: int
@@ -62,6 +104,7 @@ class HierarchyPlan:
     padded_lens: Tuple[int, ...]
     offsets: Tuple[int, ...]
     capacity: int = 0  # 0 means "== n" (plans predating streaming support)
+    level_split: Optional[LevelSplit] = None
 
     def __post_init__(self):
         if self.capacity == 0:
@@ -118,7 +161,15 @@ class HierarchyPlan:
 
 
 def make_plan(
-    n: int, c: int = 128, t: int = 64, capacity: Optional[int] = None
+    n: int,
+    c: Union[int, str] = 128,
+    t: int = 64,
+    capacity: Optional[int] = None,
+    tuned: bool = False,
+    span_mix: str = "mixed",
+    tuning=None,
+    platform: Optional[str] = None,
+    level_split: Optional[LevelSplit] = None,
 ) -> HierarchyPlan:
     """Compute the level geometry for an input of length ``n``.
 
@@ -132,9 +183,30 @@ def make_plan(
     builds pad level 0 out to ``capacity`` with ``+inf``.  Because the
     geometry is capacity-derived, growing the live length up to
     ``capacity`` (``StreamingRMQ.append``) reuses every jit specialization.
+
+    ``tuned=True`` (or ``c="auto"``) resolves geometry from the tuning
+    cache (``tuning`` — default: the committed ``repro.tune.default_cache``
+    — keyed by ``platform`` × size bucket × ``span_mix``) and attaches the
+    winner's :class:`LevelSplit` to the plan.  A cache miss falls back to
+    the numeric ``c``/``t`` passed here (i.e. today's defaults) with no
+    split attached — tuning can never make a plan worse than untuned.
     """
     if n <= 0:
         raise ValueError(f"n must be positive, got {n}")
+    if tuned or c == "auto":
+        # Lazy import: the tuned path is the only jax-adjacent dependency
+        # in this module, and only pays for itself when requested.
+        from repro.tune import cache as _tc
+
+        store = tuning if tuning is not None else _tc.default_cache()
+        plat = platform or _tc.current_platform()
+        cfg = store.lookup(plat, n, span_mix)
+        if cfg is not None:
+            c, t = cfg.c, cfg.t
+            if level_split is None:
+                level_split = cfg.level_split()
+        elif c == "auto":
+            c = 128  # cache miss: today's default geometry
     if c < 2 or (c & (c - 1)) != 0:
         raise ValueError(f"chunk size c must be a power of two >= 2, got {c}")
     if t < 1:
@@ -163,4 +235,5 @@ def make_plan(
         padded_lens=tuple(padded),
         offsets=tuple(offsets),
         capacity=capacity,
+        level_split=level_split,
     )

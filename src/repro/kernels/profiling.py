@@ -57,6 +57,7 @@ __all__ = [
     "count_launches",
     "launch_registry",
     "operand_bytes",
+    "record_config",
     "record_launch",
     "timed_dispatch",
 ]
@@ -101,11 +102,20 @@ class LaunchRegistry:
         self.records: List[LaunchRecord] = []
         self.timings: Dict[str, List[float]] = {}
         self.costs: Dict[str, Dict[str, float]] = {}
+        self.configs: List[LaunchRecord] = []
 
     # -- recording ---------------------------------------------------------
     def add(self, name: str, meta: Dict[str, Any]) -> None:
         with self._lock:
             self.records.append(LaunchRecord(name, dict(meta)))
+
+    def add_config(self, name: str, meta: Dict[str, Any]) -> None:
+        """File a configuration decision (e.g. an engine adopting a tuned
+        geometry).  Configs live in their own table: they are *not*
+        launches and never reach :func:`count_launches` counts or the
+        per-kernel launch views."""
+        with self._lock:
+            self.configs.append(LaunchRecord(name, dict(meta)))
 
     def add_timing(self, name: str, seconds: float) -> None:
         with self._lock:
@@ -153,10 +163,13 @@ class LaunchRegistry:
             records = [r.as_dict() for r in self.records]
             timings = {k: list(v) for k, v in self.timings.items()}
             costs = {k: dict(v) for k, v in self.costs.items()}
+            configs = [r.as_dict() for r in self.configs]
         counts: Dict[str, int] = {}
         for r in records:
             counts[r["name"]] = counts.get(r["name"], 0) + 1
         out: dict = {"counts": counts, "launches": records}
+        if configs:
+            out["configs"] = configs
         if timings:
             out["timings_s"] = {
                 k: {"calls": len(v), "total": sum(v),
@@ -181,6 +194,18 @@ def record_launch(name: str, **meta: Any) -> None:
         _counts[name] = _counts.get(name, 0) + 1
     if _registry is not None:
         _registry.add(name, meta)
+
+
+def record_config(name: str, **meta: Any) -> None:
+    """Record a configuration decision (no-op when no registry is active).
+
+    Unlike :func:`record_launch` this NEVER touches the plain launch
+    counter — :func:`count_launches` results stay byte-identical whether
+    or not engines record their tuned configs — and only feeds an active
+    :func:`launch_registry`'s ``configs`` table.
+    """
+    if _registry is not None:
+        _registry.add_config(name, meta)
 
 
 @contextlib.contextmanager

@@ -33,8 +33,8 @@ import re
 import threading
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
-__all__ = ["Counter", "Gauge", "Histogram", "Metrics", "LATENCY_BUCKETS",
-           "SIZE_BUCKETS"]
+__all__ = ["Counter", "Gauge", "Histogram", "Info", "Metrics",
+           "LATENCY_BUCKETS", "SIZE_BUCKETS"]
 
 # Log-spaced seconds from 10us to ~10s — spans a sub-millisecond SLO and
 # a pathological multi-second stall in the same histogram.
@@ -104,6 +104,36 @@ class Gauge:
 
     def as_dict(self) -> float:
         return self.value
+
+
+class Info:
+    """The Prometheus *info* pattern: a constant-``1`` gauge whose
+    **labels** carry the payload (build/version/config facts that are
+    strings, not numbers) — e.g.
+    ``repro_engine_tuned_config{c="128",backend="fused",...} 1``.
+
+    :meth:`set` replaces the whole label set atomically; exporting an
+    Info that was never set emits nothing (no labels to report).
+    """
+
+    __slots__ = ("_lock", "_labels")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._labels: Dict[str, str] = {}
+
+    def set(self, labels: Optional[Dict[str, str]]) -> None:
+        labels = {str(k): str(v) for k, v in dict(labels or {}).items()}
+        with self._lock:
+            self._labels = labels
+
+    @property
+    def labels(self) -> Dict[str, str]:
+        with self._lock:
+            return dict(self._labels)
+
+    def as_dict(self) -> Dict[str, str]:
+        return self.labels
 
 
 class Histogram:
@@ -235,7 +265,8 @@ class Metrics:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._metrics: Dict[str, Union[Counter, Gauge, Histogram]] = {}
+        self._metrics: Dict[
+            str, Union[Counter, Gauge, Histogram, Info]] = {}
         self._scopes: Dict[str, "Metrics"] = {}
         self._child_label: Optional[str] = None
 
@@ -254,6 +285,15 @@ class Metrics:
     ) -> Histogram:
         return self._get(name, Histogram,
                          (bounds if bounds is not None else LATENCY_BUCKETS,))
+
+    def info(self, name: str,
+             labels: Optional[Dict[str, str]] = None) -> Info:
+        """Constant-1 gauge whose labels carry string facts (see
+        :class:`Info`)."""
+        m = self._get(name, Info, ())
+        if labels is not None:
+            m.set(labels)
+        return m
 
     def scope(self, name: str,
               child_label: Optional[str] = None) -> "Metrics":
@@ -305,6 +345,11 @@ class Metrics:
                 out.append((pname + "_total", "counter", labels, m.value))
             elif isinstance(m, Gauge):
                 out.append((pname, "gauge", labels, m.value))
+            elif isinstance(m, Info):
+                info_labels = m.labels
+                if info_labels:
+                    out.append(
+                        (pname, "gauge", {**labels, **info_labels}, 1.0))
             else:
                 out.append((pname, "histogram", labels, m))
         for name, scope in scopes:

@@ -51,6 +51,7 @@ import numpy as np
 
 from repro.core.protocol import is_distributed, live_length, runtime_backend
 from repro.core.query import check_query_args
+from repro.kernels.profiling import record_config
 from repro.obs import trace
 from repro.obs.metrics import SIZE_BUCKETS, Metrics
 from repro.qe.cache import ResultCache
@@ -82,23 +83,25 @@ class QueryEngine:
         backend: Optional[str] = None,
         interpret: Optional[bool] = None,
         metrics: Optional[Metrics] = None,
+        tuning=None,
+        span_mix: str = "mixed",
     ):
-        backend = runtime_backend(backend or index.backend)
-        self.backend = backend
-        self.cache = ResultCache(cache_size)
+        # Config precedence (most- to least-specific), resolved per
+        # attach by _resolve_config:
+        #   explicit ctor kwargs > ``tuning`` cache lookup
+        #   > plan.level_split (baked at build) > analytic defaults.
+        self._tuning = tuning
+        self._span_mix = span_mix
+        self._explicit_backend = backend
         self._long_enabled = long_enabled
         self._long_cutoff = long_cutoff
         self._min_bucket = min_bucket
         self._max_bucket = max_bucket
-        self.executors = {
-            SHORT: ShortSpanExecutor(backend, interpret=interpret),
-            MID: MidSpanExecutor(backend, interpret=interpret),
-            LONG: LongSpanExecutor(),
-        }
-        if backend == "fused":
-            # the whole span mix in one launch per bucket — the per-class
-            # executors above never run (the planner emits FUSED only)
-            self.executors[FUSED] = FusedExecutor(interpret=interpret)
+        self._interpret = interpret
+        self.cache = ResultCache(cache_size)
+        self.tuned: Optional[dict] = None  # resolved config provenance
+        self.backend = self._resolve_backend(index)
+        self._configure_executors(self.backend)
         self.batches = 0
         self.queries_in = 0
         self.dedup_saved = 0
@@ -110,9 +113,82 @@ class QueryEngine:
         self._m_padding = None
         self._m_padded_lanes = None
         self._m_live_lanes = None
+        self._m_tuned = None
         if metrics is not None:
             self._register_metrics(metrics)
         self.attach(index)
+
+    # -- tuned-config resolution ------------------------------------------
+    def _tuned_lookup(self, index):
+        """The tuning-cache entry for this index, or ``None``."""
+        if self._tuning is None or is_distributed(index):
+            return None
+        from repro.tune.cache import current_platform
+
+        return self._tuning.lookup(
+            current_platform(), live_length(index), self._span_mix
+        )
+
+    def _resolve_backend(self, index) -> str:
+        """Query lowering per the precedence ladder (hierarchies are
+        bit-identical across backends, so adopting a tuned backend over
+        any build only changes which lowering answers)."""
+        if self._explicit_backend is not None:
+            return runtime_backend(self._explicit_backend)
+        cfg = self._tuned_lookup(index)
+        if cfg is not None:
+            return runtime_backend(cfg.backend)
+        split = getattr(index.plan, "level_split", None)
+        if split is not None and split.fused:
+            return "fused"
+        return runtime_backend(index.backend)
+
+    def _resolve_config(self, index) -> dict:
+        """Planner knobs + provenance for ``index`` (non-distributed)."""
+        cfg = self._tuned_lookup(index)
+        split = getattr(index.plan, "level_split", None)
+        source = "default"
+        long_cutoff = self._long_cutoff
+        scan_chunks = 2
+        sparse_top = True
+        if split is not None:
+            source = "plan"
+            scan_chunks = split.scan_chunks
+            sparse_top = split.sparse_top
+            if long_cutoff is None:
+                long_cutoff = split.long_cutoff
+        if cfg is not None:
+            source = "cache"
+            scan_chunks = cfg.scan_chunks
+            sparse_top = cfg.sparse_top
+            if self._long_cutoff is None:
+                long_cutoff = cfg.long_cutoff
+        if self._long_cutoff is not None:
+            long_cutoff = self._long_cutoff
+            if source != "default":
+                source += "+override"
+        return {
+            "backend": self.backend,
+            "planner": "fused" if self.backend == "fused" else "routed",
+            "long_cutoff": long_cutoff,
+            "scan_chunks": scan_chunks,
+            "long_enabled": self._long_enabled and sparse_top,
+            "source": source,
+        }
+
+    def _configure_executors(self, backend: str) -> None:
+        """(Re)build the executor table for ``backend`` — called at
+        construction and when an attach adopts a different tuned
+        backend (dropping the old backend's compiled tables)."""
+        self.executors = {
+            SHORT: ShortSpanExecutor(backend, interpret=self._interpret),
+            MID: MidSpanExecutor(backend, interpret=self._interpret),
+            LONG: LongSpanExecutor(),
+        }
+        if backend == "fused":
+            # the whole span mix in one launch per bucket — the per-class
+            # executors above never run (the planner emits FUSED only)
+            self.executors[FUSED] = FusedExecutor(interpret=self._interpret)
 
     def _register_metrics(self, metrics: Metrics) -> None:
         """Export engine state into ``metrics``.
@@ -139,6 +215,9 @@ class QueryEngine:
             "bucket_padding_waste", SIZE_BUCKETS)
         self._m_padded_lanes = metrics.counter("padded_lanes")
         self._m_live_lanes = metrics.counter("live_lanes")
+        self._m_tuned = metrics.info("tuned_config")
+        if self.tuned is not None:
+            self._m_tuned.set({k: str(v) for k, v in self.tuned.items()})
 
     def _note_bucket(self, bucket) -> None:
         """Per-bucket accounting shared by both execution paths."""
@@ -196,6 +275,7 @@ class QueryEngine:
             # Sharded index: routing is by segment containment, not span
             # class — the planner and span executors never run.
             self.planner = None
+            self.tuned = None
             if self.distributed is None:
                 self.distributed = DistributedExecutor(
                     min_bucket=self._min_bucket,
@@ -203,21 +283,52 @@ class QueryEngine:
                 )
         else:
             self.distributed = None
-            if self.planner is None or (
-                plan.c != self.planner.c
-                or plan.num_levels != self.planner.num_levels
-            ):
-                self.planner = QueryPlanner(
-                    c=plan.c,
-                    num_levels=plan.num_levels,
-                    long_cutoff=self._long_cutoff,
-                    long_enabled=self._long_enabled,
-                    min_bucket=self._min_bucket,
-                    max_bucket=self._max_bucket,
-                    fused=self.backend == "fused",
-                )
+            # Re-resolve the tuned config against the new binding: a
+            # successor index may carry a different plan (and cache
+            # lookups key on the live length).  Adopting a different
+            # tuned backend rebuilds the executor table.
+            backend = self._resolve_backend(index)
+            if backend != self.backend:
+                self.backend = backend
+                self._configure_executors(backend)
+            resolved = self._resolve_config(index)
+            planner = QueryPlanner(
+                c=plan.c,
+                num_levels=plan.num_levels,
+                long_cutoff=resolved["long_cutoff"],
+                long_enabled=resolved["long_enabled"],
+                min_bucket=self._min_bucket,
+                max_bucket=self._max_bucket,
+                fused=self.backend == "fused",
+                scan_chunks=resolved["scan_chunks"],
+            )
+            if planner != self.planner:
+                self.planner = planner
+            self._record_tuned(index, resolved)
         self._index = index
         self.executors[LONG].invalidate()
+
+    def _record_tuned(self, index, resolved: dict) -> None:
+        """Expose the chosen config: ``stats()["tuned"]``, the launch
+        registry (``engine_tuned_config`` records), and the metrics tree
+        (``repro_..._tuned_config`` info gauge labels)."""
+        plan = index.plan
+        tuned = {
+            "c": plan.c,
+            "t": plan.t,
+            "n": live_length(index),
+            **{k: resolved[k] for k in
+               ("backend", "planner", "long_cutoff", "scan_chunks",
+                "long_enabled", "source")},
+        }
+        if tuned == self.tuned:
+            return
+        self.tuned = tuned
+        record_config("engine_tuned_config", **tuned)
+        if self._m_tuned is not None:
+            self._m_tuned.set(
+                {k: str(v) for k, v in tuned.items()}
+            )
 
     # -- public query surface ---------------------------------------------
     def query(self, ls, rs) -> jnp.ndarray:
@@ -481,4 +592,5 @@ class QueryEngine:
             "class_counts": counts,
             "cache": self.cache.stats(),
             "executors": executors,
+            "tuned": dict(self.tuned) if self.tuned else None,
         }

@@ -84,6 +84,10 @@ class QueryPlanner:
     # fused runtime backend: no class split — the kernel decomposes
     # spans internally, so everything packs into FUSED buckets.
     fused: bool = False
+    # bottom-scan threshold in aligned c-chunks (1 or 2): spans touching
+    # at most this many chunks take the rmq_short route.  Tuned via
+    # LevelSplit.scan_chunks; 2 is the kernel's maximum.
+    scan_chunks: int = 2
 
     def effective_long_cutoff(self) -> int:
         if self.long_cutoff is not None:
@@ -96,7 +100,7 @@ class QueryPlanner:
             return np.full(ls.shape, FUSED, dtype="<U5")
         c = self.c
         out = np.full(ls.shape, MID, dtype="<U5")
-        short = (rs // c) - (ls // c) <= 1
+        short = (rs // c) - (ls // c) <= self.scan_chunks - 1
         out[short] = SHORT
         if self.long_enabled and self.num_levels >= 2:
             span = rs.astype(np.int64) - ls + 1

@@ -65,8 +65,15 @@ class QueryService:
         auto_flush: bool = True,
         on_dropped_result: Optional[Callable[[str, int], None]] = None,
         metrics: Optional[Metrics] = None,
+        tuning=None,
         **engine_defaults,
     ):
+        # A TuningCache here flows into every engine the service
+        # constructs: per-tenant engines self-configure their geometry
+        # knobs (backend, long_cutoff, scan chunks) from measured
+        # winners.  Explicit per-engine kwargs still win.
+        if tuning is not None:
+            engine_defaults.setdefault("tuning", tuning)
         self.max_pending = max_pending
         # Results stay claimable via take() after a flush, but a caller
         # that only reads flush()'s return value never claims — so the

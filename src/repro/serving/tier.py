@@ -226,6 +226,7 @@ class ServingTier:
         metrics: Optional[Metrics] = None,
         idle_tick: float = 0.05,
         on_flush: Optional[Callable[[FlushEvent], None]] = None,
+        tuning=None,
     ):
         self.metrics = metrics if metrics is not None else Metrics()
         if service is None:
@@ -233,8 +234,15 @@ class ServingTier:
             # behind its back on a max_pending crossing.  A tier-owned
             # service also joins the tier's metrics tree (engine scopes
             # included) so one to_prometheus() covers the whole stack.
+            # A TuningCache passed here reaches every per-tenant engine
+            # the service constructs (self-configured geometry knobs).
             service = QueryService(auto_flush=False,
-                                   metrics=self.metrics.scope("service"))
+                                   metrics=self.metrics.scope("service"),
+                                   tuning=tuning)
+        elif tuning is not None:
+            raise ValueError(
+                "pass tuning via the QueryService when supplying an "
+                "explicit service")
         self._service = service
         self._service_lock = threading.Lock()
         self._clock = clock

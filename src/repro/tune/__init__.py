@@ -1,0 +1,67 @@
+"""``repro.tune`` — geometry autotuning for the RMQ hierarchy.
+
+GPU-RMQ's headline design (paper §4, Fig. 12) is *hybrid*: no single
+``(c, t)`` geometry or execution engine wins across array sizes and
+span mixes.  This package makes that choice measured instead of
+guessed:
+
+* :mod:`repro.tune.measure` — the timing discipline + paper workload
+  generators (benchmarks are thin callers over these);
+* :mod:`repro.tune.search` — the :class:`Autotuner`: races candidate
+  geometries through routed AND fused engines per span mix, measures
+  the routed-vs-sparse-top ``long_cutoff`` crossover, reports skipped
+  configs;
+* :mod:`repro.tune.cache` — the versioned, schema-validated JSON
+  tuning cache (:class:`TuningCache` / :class:`TunedConfig`) consumed
+  by ``make_plan(..., tuned=True)``, ``RMQ.build(c="auto")``, and
+  ``QueryEngine(tuning=...)``;
+* :mod:`repro.tune.roofline` — the hardware roofline model.
+
+Regenerate the committed CPU cache with ``python -m repro.tune``.
+"""
+
+from repro.tune.cache import (
+    DEFAULT_CACHE_PATH,
+    SCHEMA_VERSION,
+    SPAN_MIXES,
+    TunedConfig,
+    TuningCache,
+    TuningCacheError,
+    current_platform,
+    default_cache,
+    n_bucket,
+)
+from repro.tune.measure import (
+    make_input_array,
+    make_queries,
+    make_span_queries,
+    time_fn,
+)
+from repro.tune.search import (
+    DEFAULT_GEOMETRIES,
+    TINY_GEOMETRIES,
+    Autotuner,
+    Measurement,
+    SkippedConfig,
+)
+
+__all__ = [
+    "Autotuner",
+    "DEFAULT_CACHE_PATH",
+    "DEFAULT_GEOMETRIES",
+    "Measurement",
+    "SCHEMA_VERSION",
+    "SPAN_MIXES",
+    "SkippedConfig",
+    "TINY_GEOMETRIES",
+    "TunedConfig",
+    "TuningCache",
+    "TuningCacheError",
+    "current_platform",
+    "default_cache",
+    "make_input_array",
+    "make_queries",
+    "make_span_queries",
+    "n_bucket",
+    "time_fn",
+]

@@ -1,0 +1,69 @@
+"""CLI: run the autotuner and write the tuning cache.
+
+    python -m repro.tune [--out results/tuning_cache.json]
+                         [--sizes 65536 262144 1048576]
+                         [--tiny] [--m 4096] [--repeats 3]
+                         [--report PATH] [--platform NAME]
+
+``--tiny`` is the CI-smoke configuration: one small size, the small-
+chunk geometry subset, single repeat — it exercises the full search +
+persistence path in seconds and produces a valid (if not
+representative) cache.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.tune.cache import DEFAULT_CACHE_PATH
+from repro.tune.search import TINY_GEOMETRIES, Autotuner
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tune",
+        description="Measure RMQ geometry/engine winners and persist "
+                    "them as a tuning cache.")
+    ap.add_argument("--out", default=DEFAULT_CACHE_PATH,
+                    help="cache JSON output path "
+                         "(default: results/tuning_cache.json)")
+    ap.add_argument("--sizes", type=int, nargs="+",
+                    default=[2**16, 2**18, 2**20],
+                    help="array sizes to tune (default: 2^16 2^18 2^20)")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: one tiny size, small geometries, "
+                         "single repeat")
+    ap.add_argument("--m", type=int, default=4096,
+                    help="queries per measurement batch")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed repeats per measurement (median)")
+    ap.add_argument("--report", default=None,
+                    help="also write the full measurement report JSON")
+    ap.add_argument("--platform", default=None,
+                    help="cache platform key (default: the running JAX "
+                         "backend)")
+    args = ap.parse_args(argv)
+
+    kwargs = dict(m=args.m, repeats=args.repeats, log=print)
+    sizes = args.sizes
+    if args.tiny:
+        sizes = [2**13]
+        kwargs.update(geometries=TINY_GEOMETRIES, m=min(args.m, 512),
+                      repeats=1, crossover_points=3)
+
+    tuner = Autotuner(**kwargs)
+    cache, report = tuner.search(sizes, platform=args.platform)
+    cache.save(args.out)
+    print(f"wrote {len(cache)} entries to {args.out}")
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        print(f"wrote report to {args.report}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

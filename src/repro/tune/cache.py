@@ -1,0 +1,320 @@
+"""Persistent tuning cache: measured winners for (platform, n, span mix).
+
+GPU-RMQ's headline design is *hybrid* (paper §4, Fig. 12): no single
+``(c, t)`` geometry or execution engine is optimal across array sizes
+and span mixes, so the system must pick geometry per workload and split
+hierarchy levels across engines.  This module is the persistence layer
+of that choice: the autotuner (:mod:`repro.tune.search`) measures
+candidate configurations and files the winners here; ``make_plan(...,
+tuned=True)`` / ``RMQ.build(c="auto")`` / ``QueryEngine(tuning=...)``
+consume them.
+
+Keying: ``(platform, n_bucket, span_mix)`` where ``platform`` is the
+JAX backend name (``cpu``/``tpu``/``gpu``), ``n_bucket`` is
+``floor(log2(n))`` (geometry winners are stable within a power-of-two
+size band — the paper's Fig. 12 sweeps sizes on exactly that grid), and
+``span_mix`` is one of ``short``/``mid``/``long``/``mixed``.  Lookup
+falls back ``span_mix -> "mixed" -> nearest n_bucket``; a full miss
+returns ``None`` and every consumer then uses the current hardcoded
+defaults (``c=128, t=64``, analytic long cutoff) — a missing or empty
+cache can never change results or make anything slower than today.
+
+The JSON file format is versioned and schema-validated on load:
+unknown versions and malformed entries raise :class:`TuningCacheError`
+loudly instead of silently mis-tuning production geometry.  The
+committed CPU cache lives at ``results/tuning_cache.json`` (repo root)
+and is what :func:`default_cache` loads; regenerate it with
+``python -m repro.tune`` (see README "Autotuning").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from typing import Dict, List, Optional, Tuple
+
+__all__ = [
+    "DEFAULT_CACHE_PATH",
+    "SCHEMA_VERSION",
+    "SPAN_MIXES",
+    "TunedConfig",
+    "TuningCache",
+    "TuningCacheError",
+    "current_platform",
+    "default_cache",
+]
+
+SCHEMA_VERSION = 1
+
+SPAN_MIXES = ("short", "mid", "long", "mixed")
+
+# Committed CPU cache, anchored at the repo root like BENCH_query.json.
+DEFAULT_CACHE_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))),
+    "results", "tuning_cache.json",
+)
+
+
+class TuningCacheError(ValueError):
+    """A tuning cache file failed schema validation on load."""
+
+
+def current_platform() -> str:
+    """The JAX platform name used as the cache's platform key."""
+    import jax
+
+    return jax.default_backend()
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedConfig:
+    """One measured winner: geometry + engine choice for a workload.
+
+    ``c``/``t`` are the hierarchy geometry; ``backend`` is the query
+    lowering the engine should run (``jax``/``pallas``/``fused`` — the
+    hierarchy is bit-identical across backends, so an engine may adopt
+    a tuned backend over any build); ``planner`` records whether the
+    winner executes through the host-side class split (``"routed"``) or
+    the single-launch path (``"fused"``); ``long_cutoff`` is the
+    *measured* routed-vs-sparse-top crossover span (``None`` keeps the
+    analytic ``2c·c^(L-2)`` default); ``scan_chunks``/``sparse_top``
+    parameterize the :class:`repro.core.plan.LevelSplit` the config
+    expands to.  ``ns_per_query`` is the winning measurement,
+    informational only.
+    """
+
+    c: int
+    t: int
+    backend: str = "jax"
+    planner: str = "routed"
+    long_cutoff: Optional[int] = None
+    scan_chunks: int = 2
+    sparse_top: bool = True
+    ns_per_query: Optional[float] = None
+
+    def __post_init__(self):
+        if self.c < 2 or (self.c & (self.c - 1)) != 0:
+            raise ValueError(f"c must be a power of two >= 2, got {self.c}")
+        if self.t < 1:
+            raise ValueError(f"t must be >= 1, got {self.t}")
+        if self.backend not in ("jax", "pallas", "fused"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.planner not in ("routed", "fused"):
+            raise ValueError(f"planner must be routed|fused, "
+                             f"got {self.planner!r}")
+        if self.long_cutoff is not None and self.long_cutoff < 1:
+            raise ValueError(
+                f"long_cutoff must be positive, got {self.long_cutoff}")
+        if self.scan_chunks not in (1, 2):
+            raise ValueError(
+                f"scan_chunks must be 1 or 2 (the rmq_short kernel scans "
+                f"at most two aligned chunks), got {self.scan_chunks}")
+
+    def level_split(self):
+        """The :class:`repro.core.plan.LevelSplit` this config implies."""
+        from repro.core.plan import LevelSplit
+
+        return LevelSplit(
+            scan_chunks=self.scan_chunks,
+            sparse_top=self.sparse_top,
+            long_cutoff=self.long_cutoff,
+            fused=self.planner == "fused",
+        )
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+_REQUIRED_ENTRY_KEYS = {
+    "platform": str, "n_bucket": int, "span_mix": str,
+    "c": int, "t": int, "backend": str, "planner": str,
+    "scan_chunks": int, "sparse_top": bool,
+}
+
+
+def n_bucket(n: int) -> int:
+    """The cache's size bucket for an array of length ``n``."""
+    if n < 1:
+        raise ValueError(f"n must be positive, got {n}")
+    return int(n).bit_length() - 1
+
+
+class TuningCache:
+    """In-memory view of the tuning cache, with JSON (de)serialization.
+
+    Thread-safe: engines resolve configs at attach time from whatever
+    thread owns them, and the autotuner populates from the main thread.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: Dict[Tuple[str, int, str], TunedConfig] = {}
+        self.source: Optional[str] = None
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # -- population --------------------------------------------------------
+    def put(self, platform: str, n: int, span_mix: str,
+            config: TunedConfig) -> None:
+        if span_mix not in SPAN_MIXES:
+            raise ValueError(
+                f"span_mix must be one of {SPAN_MIXES}, got {span_mix!r}")
+        with self._lock:
+            self._entries[(platform, n_bucket(n), span_mix)] = config
+
+    # -- resolution --------------------------------------------------------
+    def lookup(self, platform: str, n: int,
+               span_mix: str = "mixed") -> Optional[TunedConfig]:
+        """The tuned config for ``(platform, n, span_mix)``, or ``None``.
+
+        Fallback ladder (most- to least-specific; a miss at every rung
+        returns ``None`` and the caller keeps today's defaults):
+
+        1. exact ``(platform, floor(log2 n), span_mix)``;
+        2. same bucket, ``span_mix="mixed"`` (the general-purpose
+           winner);
+        3. nearest measured bucket for the platform (same span-mix
+           preference), because geometry winners drift slowly in
+           ``log n`` — a 2^19 array is better served by the 2^18 winner
+           than by an untuned guess.
+        """
+        b = n_bucket(n)
+        with self._lock:
+            entries = dict(self._entries)
+        for mix in ((span_mix, "mixed") if span_mix != "mixed"
+                    else ("mixed",)):
+            hit = entries.get((platform, b, mix))
+            if hit is not None:
+                return hit
+        # nearest-bucket fallback, preferring the requested span mix
+        best: Optional[Tuple[int, int, TunedConfig]] = None
+        for (p, eb, mix), cfg in entries.items():
+            if p != platform:
+                continue
+            mix_rank = 0 if mix == span_mix else (
+                1 if mix == "mixed" else 2)
+            if mix_rank == 2:
+                continue
+            key = (abs(eb - b), mix_rank)
+            if best is None or key < (best[0], best[1]):
+                best = (abs(eb - b), mix_rank, cfg)
+        return best[2] if best is not None else None
+
+    # -- (de)serialization -------------------------------------------------
+    def as_json(self) -> dict:
+        with self._lock:
+            entries = sorted(self._entries.items())
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "entries": [
+                {"platform": p, "n_bucket": b, "span_mix": mix,
+                 **cfg.as_dict()}
+                for (p, b, mix), cfg in entries
+            ],
+        }
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.as_json(), f, indent=2)
+            f.write("\n")
+
+    @classmethod
+    def from_json(cls, doc: dict, source: Optional[str] = None
+                  ) -> "TuningCache":
+        """Validate + materialize a cache document.
+
+        Raises :class:`TuningCacheError` on version/shape mismatches —
+        a malformed cache must fail loudly, never silently mis-tune.
+        """
+        where = source or "<dict>"
+        if not isinstance(doc, dict):
+            raise TuningCacheError(
+                f"{where}: tuning cache must be a JSON object, "
+                f"got {type(doc).__name__}")
+        version = doc.get("schema_version")
+        if version != SCHEMA_VERSION:
+            raise TuningCacheError(
+                f"{where}: unsupported tuning cache schema_version "
+                f"{version!r} (this build reads version {SCHEMA_VERSION}; "
+                "regenerate with `python -m repro.tune`)")
+        entries = doc.get("entries")
+        if not isinstance(entries, list):
+            raise TuningCacheError(
+                f"{where}: 'entries' must be a list, "
+                f"got {type(entries).__name__}")
+        cache = cls()
+        cache.source = source
+        for i, e in enumerate(entries):
+            if not isinstance(e, dict):
+                raise TuningCacheError(
+                    f"{where}: entry {i} must be an object")
+            for key, typ in _REQUIRED_ENTRY_KEYS.items():
+                if key not in e:
+                    raise TuningCacheError(
+                        f"{where}: entry {i} missing key {key!r}")
+                if not isinstance(e[key], typ) or (
+                        typ is int and isinstance(e[key], bool)):
+                    raise TuningCacheError(
+                        f"{where}: entry {i} key {key!r} must be "
+                        f"{typ.__name__}, got {type(e[key]).__name__}")
+            if e["span_mix"] not in SPAN_MIXES:
+                raise TuningCacheError(
+                    f"{where}: entry {i} span_mix {e['span_mix']!r} not "
+                    f"in {SPAN_MIXES}")
+            try:
+                cfg = TunedConfig(
+                    c=e["c"], t=e["t"], backend=e["backend"],
+                    planner=e["planner"],
+                    long_cutoff=e.get("long_cutoff"),
+                    scan_chunks=e["scan_chunks"],
+                    sparse_top=e["sparse_top"],
+                    ns_per_query=e.get("ns_per_query"),
+                )
+            except ValueError as err:
+                raise TuningCacheError(
+                    f"{where}: entry {i} invalid: {err}") from err
+            with cache._lock:
+                cache._entries[
+                    (e["platform"], e["n_bucket"], e["span_mix"])] = cfg
+        return cache
+
+    @classmethod
+    def load(cls, path: str) -> "TuningCache":
+        """Load + schema-validate a cache file (must exist)."""
+        with open(path) as f:
+            try:
+                doc = json.load(f)
+            except json.JSONDecodeError as err:
+                raise TuningCacheError(
+                    f"{path}: not valid JSON: {err}") from err
+        return cls.from_json(doc, source=path)
+
+
+_default_cache: Optional[TuningCache] = None
+_default_lock = threading.Lock()
+
+
+def default_cache(refresh: bool = False) -> TuningCache:
+    """The committed tuning cache (``results/tuning_cache.json``).
+
+    Loaded once per process; a missing file yields an *empty* cache
+    (every lookup misses → every consumer keeps today's defaults), a
+    present-but-invalid file raises :class:`TuningCacheError`.  Override
+    the path with ``REPRO_TUNING_CACHE`` (``REPRO_TUNING_CACHE=`` —
+    empty — disables loading entirely).
+    """
+    global _default_cache
+    with _default_lock:
+        if _default_cache is not None and not refresh:
+            return _default_cache
+        path = os.environ.get("REPRO_TUNING_CACHE", DEFAULT_CACHE_PATH)
+        if path and os.path.exists(path):
+            _default_cache = TuningCache.load(path)
+        else:
+            _default_cache = TuningCache()
+        return _default_cache

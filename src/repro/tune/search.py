@@ -1,0 +1,281 @@
+"""The geometry/engine autotuner (paper §4 + Fig. 12, made operational).
+
+Searches ``(c, t, backend, planner mode, long_cutoff)`` per
+``(platform, n-bucket, span-mix)`` by *measuring the engines we actually
+serve*: every candidate geometry is built once, then timed through a
+routed :class:`~repro.qe.QueryEngine` (host-side class split) AND a
+fused one (single-launch path) over span-class-pinned workloads — the
+hierarchy is bit-identical across backends, so one build serves both
+engines.  Winners become :class:`~repro.tune.cache.TunedConfig` entries
+in a :class:`~repro.tune.cache.TuningCache`.
+
+On top of the geometry sweep, :meth:`Autotuner.measure_crossover` finds
+the *measured* routed-vs-sparse-top crossover: the smallest span where
+the O(1) sparse-table top beats the hierarchy walk.  That number
+replaces the planner's analytic ``2c·c^(L-2)`` guess (which describes
+when a span *must* reach the top level, not when the sparse top is
+actually faster) as the routed planner's ``long_cutoff``.
+
+Configs where ``c * t >= n`` degenerate to a single level (a pure scan)
+and are *skipped but reported* — no silent caps: every skip carries its
+reason into the report and the benchmark output.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.tune.cache import (
+    SPAN_MIXES,
+    TunedConfig,
+    TuningCache,
+    current_platform,
+)
+from repro.tune.measure import (
+    make_input_array,
+    make_span_queries,
+    time_fn,
+)
+
+__all__ = ["Autotuner", "Measurement", "SkippedConfig",
+           "DEFAULT_GEOMETRIES", "TINY_GEOMETRIES"]
+
+# The paper's Fig. 12 grid (VL regime c=8 through atom-aligned c=512).
+DEFAULT_GEOMETRIES: Tuple[Tuple[int, int], ...] = (
+    (8, 8), (8, 64),
+    (32, 8), (32, 64),
+    (128, 8), (128, 64),
+    (256, 8), (256, 64),
+    (512, 8),
+)
+
+# CI-smoke subset: small chunks so tiny arrays still get multi-level
+# plans (same reasoning as REPRO_BENCH_TINY elsewhere).
+TINY_GEOMETRIES: Tuple[Tuple[int, int], ...] = ((8, 8), (16, 8), (32, 8))
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    """One timed candidate: a (geometry, backend) on one workload."""
+
+    n: int
+    span_mix: str
+    c: int
+    t: int
+    backend: str
+    ns_per_query: float
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class SkippedConfig:
+    """A candidate excluded from the sweep, with its reason (reported,
+    never silently dropped)."""
+
+    n: int
+    c: int
+    t: int
+    reason: str
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Autotuner:
+    """Measure candidate configs and produce a populated tuning cache.
+
+    ``backends`` are *query* lowerings to race (``"jax"`` = the routed
+    class-split engine, ``"fused"`` = the single-launch engine; add
+    ``"pallas"`` on TPU hosts).  ``m``/``repeats`` trade search time for
+    measurement stability; the defaults match the committed benchmark
+    discipline (warmup + median, see :func:`repro.tune.measure.time_fn`).
+    """
+
+    def __init__(
+        self,
+        geometries: Sequence[Tuple[int, int]] = DEFAULT_GEOMETRIES,
+        backends: Sequence[str] = ("jax", "fused"),
+        span_mixes: Sequence[str] = SPAN_MIXES,
+        m: int = 4096,
+        repeats: int = 3,
+        crossover_points: int = 5,
+        seed: int = 0,
+        log: Optional[Callable[[str], None]] = None,
+    ):
+        for mix in span_mixes:
+            if mix not in SPAN_MIXES:
+                raise ValueError(
+                    f"span mix {mix!r} not in {SPAN_MIXES}")
+        self.geometries = tuple(geometries)
+        self.backends = tuple(backends)
+        self.span_mixes = tuple(span_mixes)
+        self.m = int(m)
+        self.repeats = int(repeats)
+        self.crossover_points = int(crossover_points)
+        self.seed = seed
+        self._log = log or (lambda msg: None)
+
+    def reference_c(self, n: int) -> int:
+        """The chunk size that *defines* the span-mix workloads.
+
+        Every candidate geometry must race on the SAME queries or the
+        winner comparison is meaningless, so spans are pinned relative
+        to the served default chunk (c=128 — also what the committed
+        benchmarks measure), stepped down only when ``n`` is too small
+        for a valid mid-span band (``4c < n``).
+        """
+        c = 128
+        while c > 2 and 4 * c >= n:
+            c //= 2
+        return c
+
+    # -- one size ----------------------------------------------------------
+    def search_size(self, n: int) -> Tuple[
+            Dict[str, TunedConfig], List[Measurement], List[SkippedConfig]]:
+        """Race every candidate on one array size.
+
+        Returns ``(winners by span mix, all measurements, skipped)``.
+        """
+        from repro.core.api import RMQ
+        from repro.qe import QueryEngine
+
+        x = make_input_array(n)
+        best: Dict[str, Tuple[float, Measurement]] = {}
+        measurements: List[Measurement] = []
+        skipped: List[SkippedConfig] = []
+        crossover_geom: Dict[str, Tuple[int, int]] = {}
+        ref_c = self.reference_c(n)
+        workloads = {
+            mix: make_span_queries(n, self.m, ref_c, mix,
+                                   seed=self.seed + 1)
+            for mix in self.span_mixes
+        }
+
+        for c, t in self.geometries:
+            if c * t >= n:
+                skipped.append(SkippedConfig(
+                    n, c, t,
+                    f"c*t = {c * t} >= n = {n}: plan degenerates to a "
+                    "single level (pure scan)"))
+                self._log(f"skip n={n} c={c} t={t}: c*t >= n")
+                continue
+            # ONE build per geometry: hierarchies are bit-identical
+            # across backends, so every engine races over the same index.
+            index = RMQ.build(x, c=c, t=t, backend="jax")
+            engines = {
+                b: QueryEngine(index, cache_size=0, backend=b)
+                for b in self.backends
+            }
+            for mix in self.span_mixes:
+                ls, rs = workloads[mix]
+                for backend, engine in engines.items():
+                    secs = time_fn(lambda e=engine: e.query(ls, rs),
+                                   repeats=self.repeats)
+                    meas = Measurement(
+                        n=n, span_mix=mix, c=c, t=t, backend=backend,
+                        ns_per_query=secs / self.m * 1e9)
+                    measurements.append(meas)
+                    self._log(
+                        f"n={n} mix={mix} c={c} t={t} {backend}: "
+                        f"{meas.ns_per_query:.0f} ns/q")
+                    prev = best.get(mix)
+                    if prev is None or meas.ns_per_query < prev[0]:
+                        best[mix] = (meas.ns_per_query, meas)
+
+        winners: Dict[str, TunedConfig] = {}
+        for mix, (_, meas) in best.items():
+            long_cutoff = None
+            if meas.backend != "fused":
+                geom = (meas.c, meas.t)
+                if geom not in crossover_geom.values():
+                    crossover_geom[mix] = geom
+                long_cutoff = self.measure_crossover(n, meas.c, meas.t)
+            winners[mix] = TunedConfig(
+                c=meas.c, t=meas.t, backend=meas.backend,
+                planner="fused" if meas.backend == "fused" else "routed",
+                long_cutoff=long_cutoff,
+                ns_per_query=meas.ns_per_query,
+            )
+        return winners, measurements, skipped
+
+    # -- the routed-vs-sparse-top crossover --------------------------------
+    def measure_crossover(self, n: int, c: int, t: int) -> Optional[int]:
+        """Smallest span where the O(1) sparse-table top beats the walk.
+
+        Races two routed engines over span-pinned batches: one with the
+        long route disabled (every span walks the hierarchy) and one
+        whose ``long_cutoff`` admits every candidate span to the
+        sparse-table top.  Returns the first candidate span the top
+        wins, or ``None`` when the walk wins everywhere (the planner
+        then keeps its analytic default — graceful, never worse).
+        """
+        from repro.core.api import RMQ
+        from repro.qe import QueryEngine
+
+        if n <= c * t:
+            return None
+        x = make_input_array(n)
+        index = RMQ.build(x, c=c, t=t, backend="jax")
+        lo = max(4 * c, 2 * c + 2)
+        hi = max(n // 2, lo + 1)
+        spans = sorted({
+            int(s) for s in np.geomspace(lo, hi, self.crossover_points)
+        })
+        walk = QueryEngine(index, cache_size=0, backend="jax",
+                           long_enabled=False)
+        top = QueryEngine(index, cache_size=0, backend="jax",
+                          long_cutoff=spans[0])
+        rng = np.random.default_rng(self.seed + 2)
+        for span in spans:
+            ls = (rng.random(self.m) * (n - span + 1)).astype(np.int32)
+            rs = (ls + span - 1).astype(np.int32)
+            t_walk = time_fn(lambda: walk.query(ls, rs),
+                             repeats=self.repeats)
+            t_top = time_fn(lambda: top.query(ls, rs),
+                            repeats=self.repeats)
+            self._log(
+                f"crossover n={n} c={c} span={span}: walk "
+                f"{t_walk / self.m * 1e9:.0f} vs top "
+                f"{t_top / self.m * 1e9:.0f} ns/q")
+            if t_top < t_walk:
+                return span
+        return None
+
+    # -- the full search ---------------------------------------------------
+    def search(self, sizes: Sequence[int],
+               platform: Optional[str] = None
+               ) -> Tuple[TuningCache, dict]:
+        """Populate a cache for ``sizes`` on ``platform`` (default: the
+        running JAX backend).  Returns ``(cache, report)`` where the
+        report carries every measurement and every skipped config."""
+        platform = platform or current_platform()
+        cache = TuningCache()
+        report = {
+            "platform": platform,
+            "sizes": [int(s) for s in sizes],
+            "geometries": [list(g) for g in self.geometries],
+            "backends": list(self.backends),
+            "m": self.m,
+            "repeats": self.repeats,
+            "measurements": [],
+            "skipped": [],
+            "winners": {},
+        }
+        for n in sizes:
+            winners, measurements, skipped = self.search_size(int(n))
+            report["measurements"] += [m.as_dict() for m in measurements]
+            report["skipped"] += [s.as_dict() for s in skipped]
+            for mix, cfg in winners.items():
+                cache.put(platform, int(n), mix, cfg)
+                report["winners"][f"n{n}_{mix}"] = cfg.as_dict()
+                self._log(
+                    f"winner n={n} mix={mix}: c={cfg.c} t={cfg.t} "
+                    f"{cfg.backend}/{cfg.planner} "
+                    f"long_cutoff={cfg.long_cutoff} "
+                    f"({cfg.ns_per_query:.0f} ns/q)")
+        return cache, report

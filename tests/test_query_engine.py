@@ -76,6 +76,75 @@ class TestPlanner:
             # padded slots hold the (0, 0) sentinel
             assert (b.ls[b.count:] == 0).all() and (b.rs[b.count:] == 0).all()
 
+    def test_long_cutoff_override_boundary(self):
+        # the cutoff is inclusive: span == cutoff routes LONG, one less
+        # routes MID (chunk-misaligned so neither is SHORT)
+        cutoff = 1000
+        p = QueryPlanner(c=128, num_levels=3, long_cutoff=cutoff)
+        assert p.effective_long_cutoff() == cutoff
+        ls = np.array([1, 1], np.int32)
+        rs = np.array([1 + cutoff - 1, 1 + cutoff - 2], np.int32)
+        labels = p.classify(ls, rs)
+        assert labels[0] == LONG    # span == cutoff exactly
+        assert labels[1] == MID     # span == cutoff - 1
+
+    def test_long_cutoff_larger_than_n(self):
+        # a cutoff no span can reach: the long route exists but never
+        # fires — everything walks (or short-scans)
+        n = 10_000
+        p = QueryPlanner(c=128, num_levels=3, long_cutoff=n + 1)
+        ls = np.zeros(3, np.int32)
+        rs = np.array([n - 1, n // 2, 100], np.int32)
+        labels = p.classify(ls, rs)
+        assert LONG not in labels
+        assert labels[0] == MID and labels[2] == SHORT
+
+    def test_analytic_default_boundary(self):
+        # with no override the cutoff is the analytic 2c * c^(L-2)
+        p = QueryPlanner(c=8, num_levels=3)
+        cutoff = 2 * 8 * 8
+        assert p.effective_long_cutoff() == cutoff
+        ls = np.array([1, 1], np.int32)
+        rs = np.array([cutoff, cutoff - 1], np.int32)
+        assert list(p.classify(ls, rs)) == [LONG, MID]
+
+    def test_scan_chunks_one(self):
+        # scan_chunks=1: only strictly chunk-contained spans are SHORT
+        p = QueryPlanner(c=128, num_levels=2, scan_chunks=1)
+        ls = np.array([0, 100], np.int32)
+        rs = np.array([127, 200], np.int32)   # contained / crossing
+        assert list(p.classify(ls, rs)) == [SHORT, MID]
+
+    def test_cache_fed_cutoff_round_trip_through_engine(self):
+        # a tuned long_cutoff from a TuningCache must land in the
+        # engine's planner — and results stay bit-identical
+        from repro.tune import TunedConfig, TuningCache
+
+        n, c, t = 50_000, 128, 4
+        rng, x, rmq = _build(n, c, t, seed=3)
+        cutoff = 2_000
+        cache = TuningCache()
+        cache.put("cpu", n, "mixed", TunedConfig(
+            c=c, t=t, backend="jax", planner="routed",
+            long_cutoff=cutoff))
+        engine = QueryEngine(rmq, cache_size=0, tuning=cache,
+                             span_mix="mixed")
+        assert engine.planner.effective_long_cutoff() == cutoff
+        assert engine.tuned["long_cutoff"] == cutoff
+        assert engine.tuned["source"] == "cache"
+        ls, rs = _mixed_queries(rng, n, c, 400)
+        np.testing.assert_array_equal(
+            np.asarray(engine.query(ls, rs)),
+            np.asarray(rmq_value_batch(
+                rmq.hierarchy, jnp.asarray(ls), jnp.asarray(rs))),
+        )
+        # spans past the tuned cutoff actually took the long route
+        assert engine.stats()["class_counts"][LONG] > 0
+        # an explicit ctor override outranks the cache
+        engine2 = QueryEngine(rmq, cache_size=0, tuning=cache,
+                              span_mix="mixed", long_cutoff=5_000)
+        assert engine2.planner.effective_long_cutoff() == 5_000
+
 
 # ---------------------------------------------------------------------------
 # engine parity (the acceptance contract)

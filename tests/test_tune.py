@@ -1,0 +1,403 @@
+"""Geometry autotuner + tuning cache (repro.tune): schema, resolution,
+end-to-end consumption, and the miss-falls-back-bit-identically contract.
+
+The cache's core promise is *graceful*: a present entry reconfigures
+geometry/backend/planner knobs from measured winners; a missing entry
+(or a wholly empty cache) leaves every consumer — ``make_plan``,
+``RMQ.build(c="auto")``, ``QueryEngine(tuning=...)`` — byte-for-byte on
+today's defaults.  A malformed cache *file* must instead fail loudly
+(schema-validated on load), never silently mis-tune production geometry.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core.api import RMQ
+from repro.core.distributed import DistributedRMQ
+from repro.core.hybrid import HybridRMQ
+from repro.core.plan import LevelSplit, make_plan
+from repro.kernels.profiling import count_launches, launch_registry
+from repro.obs.metrics import Metrics
+from repro.qe import QueryEngine, QueryService
+from repro.streaming import StreamingRMQ
+from repro.tune import (
+    Autotuner,
+    SCHEMA_VERSION,
+    TINY_GEOMETRIES,
+    TunedConfig,
+    TuningCache,
+    TuningCacheError,
+    n_bucket,
+)
+
+
+def _entry(platform="cpu", nb=13, mix="mixed", **over):
+    e = {
+        "platform": platform, "n_bucket": nb, "span_mix": mix,
+        "c": 32, "t": 8, "backend": "jax", "planner": "routed",
+        "long_cutoff": None, "scan_chunks": 2, "sparse_top": True,
+        "ns_per_query": 100.0,
+    }
+    e.update(over)
+    return e
+
+
+def _doc(*entries):
+    return {"schema_version": SCHEMA_VERSION, "entries": list(entries)}
+
+
+# ---------------------------------------------------------------------------
+# config + cache semantics
+# ---------------------------------------------------------------------------
+class TestTunedConfig:
+    def test_validation(self):
+        TunedConfig(c=8, t=8)  # valid
+        with pytest.raises(ValueError):
+            TunedConfig(c=12, t=8)          # not a power of two
+        with pytest.raises(ValueError):
+            TunedConfig(c=8, t=0)
+        with pytest.raises(ValueError):
+            TunedConfig(c=8, t=8, backend="cuda")
+        with pytest.raises(ValueError):
+            TunedConfig(c=8, t=8, planner="hybrid")
+        with pytest.raises(ValueError):
+            TunedConfig(c=8, t=8, scan_chunks=3)
+        with pytest.raises(ValueError):
+            TunedConfig(c=8, t=8, long_cutoff=0)
+
+    def test_level_split_expansion(self):
+        cfg = TunedConfig(c=8, t=8, backend="fused", planner="fused",
+                          long_cutoff=512, scan_chunks=1)
+        split = cfg.level_split()
+        assert split == LevelSplit(scan_chunks=1, sparse_top=True,
+                                   long_cutoff=512, fused=True)
+
+    def test_level_split_validation(self):
+        with pytest.raises(ValueError):
+            LevelSplit(scan_chunks=3)
+        with pytest.raises(ValueError):
+            LevelSplit(long_cutoff=-5)
+
+
+class TestCacheResolution:
+    def test_exact_hit(self):
+        cache = TuningCache()
+        cfg = TunedConfig(c=32, t=8)
+        cache.put("cpu", 8000, "short", cfg)       # bucket 12
+        assert cache.lookup("cpu", 8191, "short") is cfg
+        assert n_bucket(8000) == n_bucket(8191) == 12
+
+    def test_span_mix_falls_back_to_mixed(self):
+        cache = TuningCache()
+        mixed = TunedConfig(c=32, t=8)
+        cache.put("cpu", 8000, "mixed", mixed)
+        assert cache.lookup("cpu", 8000, "long") is mixed
+
+    def test_nearest_bucket_fallback_prefers_requested_mix(self):
+        cache = TuningCache()
+        near_mixed = TunedConfig(c=64, t=8)
+        far_short = TunedConfig(c=8, t=8)
+        cache.put("cpu", 2**14, "mixed", near_mixed)
+        cache.put("cpu", 2**18, "short", far_short)
+        # bucket 16 request: bucket-14 mixed is nearer than bucket-18
+        assert cache.lookup("cpu", 2**16, "mixed") is near_mixed
+        # but for "short" the exact-mix entry wins at equal specificity
+        cache.put("cpu", 2**14, "short", far_short)
+        assert cache.lookup("cpu", 2**16, "short") is far_short
+
+    def test_platform_never_crosses(self):
+        cache = TuningCache()
+        cache.put("tpu", 8000, "mixed", TunedConfig(c=32, t=8))
+        assert cache.lookup("cpu", 8000, "mixed") is None
+
+    def test_empty_cache_misses(self):
+        assert TuningCache().lookup("cpu", 10_000) is None
+
+
+class TestCacheSchema:
+    def test_round_trip(self, tmp_path):
+        cache = TuningCache()
+        cache.put("cpu", 2**13, "mixed",
+                  TunedConfig(c=32, t=8, backend="fused", planner="fused",
+                              long_cutoff=900, ns_per_query=55.5))
+        path = str(tmp_path / "cache.json")
+        cache.save(path)
+        loaded = TuningCache.load(path)
+        assert len(loaded) == 1
+        cfg = loaded.lookup("cpu", 2**13, "mixed")
+        assert cfg == cache.lookup("cpu", 2**13, "mixed")
+        # the file is versioned
+        with open(path) as f:
+            assert json.load(f)["schema_version"] == SCHEMA_VERSION
+
+    def test_unknown_version_rejected(self):
+        with pytest.raises(TuningCacheError, match="schema_version"):
+            TuningCache.from_json({"schema_version": 99, "entries": []})
+
+    def test_missing_key_rejected(self):
+        e = _entry()
+        del e["backend"]
+        with pytest.raises(TuningCacheError, match="backend"):
+            TuningCache.from_json(_doc(e))
+
+    def test_wrong_type_rejected(self):
+        with pytest.raises(TuningCacheError, match="'c' must be int"):
+            TuningCache.from_json(_doc(_entry(c="128")))
+        # bools are ints in Python; the schema still rejects them
+        with pytest.raises(TuningCacheError, match="'t' must be int"):
+            TuningCache.from_json(_doc(_entry(t=True)))
+
+    def test_bad_span_mix_rejected(self):
+        with pytest.raises(TuningCacheError, match="span_mix"):
+            TuningCache.from_json(_doc(_entry(mix="huge")))
+
+    def test_invalid_config_rejected(self):
+        with pytest.raises(TuningCacheError, match="power of two"):
+            TuningCache.from_json(_doc(_entry(c=12)))
+
+    def test_not_json_rejected(self, tmp_path):
+        path = tmp_path / "bad.json"
+        path.write_text("{nope")
+        with pytest.raises(TuningCacheError, match="not valid JSON"):
+            TuningCache.load(str(path))
+
+
+# ---------------------------------------------------------------------------
+# consumption: make_plan / RMQ.build / QueryEngine
+# ---------------------------------------------------------------------------
+class TestTunedPlan:
+    def test_miss_keeps_defaults(self):
+        plan = make_plan(50_000, c="auto", tuning=TuningCache(),
+                         platform="cpu")
+        ref = make_plan(50_000)
+        assert (plan.c, plan.t) == (ref.c, ref.t) == (128, 64)
+        assert plan.level_split is None
+
+    def test_hit_resolves_geometry_and_split(self):
+        cache = TuningCache()
+        cache.put("cpu", 50_000, "mixed",
+                  TunedConfig(c=32, t=8, backend="fused", planner="fused",
+                              long_cutoff=700))
+        plan = make_plan(50_000, c="auto", tuning=cache, platform="cpu")
+        assert (plan.c, plan.t) == (32, 8)
+        assert plan.level_split == LevelSplit(
+            scan_chunks=2, sparse_top=True, long_cutoff=700, fused=True)
+        # geometry matches an explicitly-built twin
+        twin = make_plan(50_000, c=32, t=8)
+        assert plan.level_lens == twin.level_lens
+        assert plan.offsets == twin.offsets
+
+    def test_tuned_flag_with_numeric_c(self):
+        # tuned=True + a miss keeps the numeric c the caller passed
+        plan = make_plan(50_000, c=64, tuned=True, tuning=TuningCache(),
+                         platform="cpu")
+        assert plan.c == 64 and plan.level_split is None
+
+
+class TestTunedBuild:
+    def test_auto_miss_is_bit_identical_to_default(self):
+        rng = np.random.default_rng(0)
+        x = rng.integers(-4, 4, 30_000).astype(np.float32)
+        default = RMQ.build(x, with_positions=True)
+        tuned = RMQ.build(x, c="auto", with_positions=True,
+                          tuning=TuningCache())
+        assert tuned.plan == default.plan
+        assert tuned.backend == default.backend
+        np.testing.assert_array_equal(
+            np.asarray(tuned.hierarchy.upper),
+            np.asarray(default.hierarchy.upper))
+
+    def test_auto_hit_adopts_geometry_and_backend(self):
+        cache = TuningCache()
+        cache.put(jax.default_backend(), 30_000, "mixed",
+                  TunedConfig(c=32, t=8, backend="fused",
+                              planner="fused"))
+        x = np.random.default_rng(1).random(30_000).astype(np.float32)
+        rmq = RMQ.build(x, c="auto", tuning=cache)
+        assert (rmq.plan.c, rmq.plan.t) == (32, 8)
+        assert rmq.backend == "fused"
+        assert rmq.plan.level_split.fused
+        # an explicit backend is NOT overridden by the cache
+        rmq2 = RMQ.build(x, c="auto", tuning=cache, backend="jax")
+        assert rmq2.backend == "jax"
+
+
+class TestEngineSelfConfig:
+    def _cache(self, n, **over):
+        cache = TuningCache()
+        kw = dict(c=32, t=8, backend="fused", planner="fused")
+        kw.update(over)
+        cache.put(jax.default_backend(), n, "mixed", TunedConfig(**kw))
+        return cache
+
+    def test_adopts_tuned_backend_over_any_build(self):
+        n = 20_000
+        x = np.random.default_rng(2).random(n).astype(np.float32)
+        rmq = RMQ.build(x, c=32, t=8, backend="jax")
+        engine = QueryEngine(rmq, cache_size=0, tuning=self._cache(n))
+        assert engine.backend == "fused"
+        assert engine.planner.fused
+        assert engine.tuned["source"] == "cache"
+        ls = np.array([0, 5, 100], np.int32)
+        rs = np.array([n - 1, 4_000, 131], np.int32)
+        np.testing.assert_array_equal(
+            np.asarray(engine.query(ls, rs)),
+            [x[l:r + 1].min() for l, r in zip(ls, rs)])
+
+    def test_explicit_kwargs_outrank_cache(self):
+        n = 20_000
+        x = np.random.default_rng(2).random(n).astype(np.float32)
+        rmq = RMQ.build(x, c=32, t=8, backend="jax")
+        engine = QueryEngine(rmq, cache_size=0, tuning=self._cache(n),
+                             backend="jax")
+        assert engine.backend == "jax"
+        assert not engine.planner.fused
+
+    def test_config_recorded_in_registry_and_metrics(self):
+        # geometry unique to this test: the launch counter records at
+        # trace time, so a jit-cache hit from a sibling test would
+        # otherwise record nothing
+        n = 21_017
+        x = np.random.default_rng(2).random(n).astype(np.float32)
+        rmq = RMQ.build(x, c=32, t=8, backend="jax")
+        m = Metrics()
+        with launch_registry() as reg, count_launches() as counts:
+            engine = QueryEngine(rmq, cache_size=0,
+                                 tuning=self._cache(n),
+                                 metrics=m.scope("engine"))
+            engine.query(np.array([0], np.int32),
+                         np.array([n - 1], np.int32))
+        configs = reg.as_dict()["configs"]
+        assert configs and configs[0]["name"] == "engine_tuned_config"
+        assert configs[0]["backend"] == "fused"
+        # config records must NOT pollute the launch-count contract
+        assert counts == {"rmq_fused": 1}
+        prom = m.to_prometheus()
+        assert 'repro_engine_tuned_config{' in prom
+        assert 'backend="fused"' in prom
+        assert engine.stats()["tuned"]["backend"] == "fused"
+
+    def test_plan_level_split_configures_untuned_engine(self):
+        # a split baked into the plan at build time reaches an engine
+        # constructed with no cache at all
+        n = 20_000
+        cache = self._cache(n, backend="jax", planner="routed",
+                            long_cutoff=3_000)
+        x = np.random.default_rng(3).random(n).astype(np.float32)
+        rmq = RMQ.build(x, c="auto", tuning=cache)
+        engine = QueryEngine(rmq, cache_size=0)
+        assert engine.planner.effective_long_cutoff() == 3_000
+        assert engine.tuned["source"] == "plan"
+
+    def test_service_and_tier_plumb_tuning(self):
+        from repro.serving import ServingTier
+
+        n = 20_000
+        cache = self._cache(n)
+        x = np.random.default_rng(4).random(n).astype(np.float32)
+        rmq = RMQ.build(x, c=32, t=8, backend="jax")
+        svc = QueryService(tuning=cache)
+        svc.register("a", rmq)
+        assert svc.engine("a").backend == "fused"
+
+        tier = ServingTier(tuning=cache)
+        tier.register_tenant("a", rmq)
+        assert tier.service.engine("a").backend == "fused"
+        with pytest.raises(ValueError):
+            ServingTier(service=QueryService(), tuning=cache)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance contract: a miss falls back bit-identically, all indexes
+# ---------------------------------------------------------------------------
+class TestMissFallbackDifferential:
+    @pytest.mark.parametrize("kind", ("rmq", "streaming", "hybrid",
+                                      "distributed"))
+    def test_empty_cache_engine_matches_numpy_oracle(self, kind):
+        rng = np.random.default_rng(hash(kind) % 2**31)
+        n, c, t = 6_000, 16, 8
+        x = rng.integers(-4, 4, n).astype(np.float32)  # heavy ties
+        if kind == "rmq":
+            idx = RMQ.build(x, c=c, t=t, with_positions=True)
+        elif kind == "streaming":
+            idx = StreamingRMQ.from_array(x, c=c, t=t,
+                                          with_positions=True)
+        elif kind == "hybrid":
+            idx = HybridRMQ.build(x, c=c, t=t, with_positions=True)
+        else:
+            mesh = jax.make_mesh((1, 1), ("data", "model"))
+            idx = DistributedRMQ.build(x, mesh, c=c, t=t,
+                                       with_positions=True)
+        empty = TuningCache()
+        tuned_engine = QueryEngine(idx, cache_size=0, tuning=empty)
+        plain_engine = QueryEngine(idx, cache_size=0)
+        assert tuned_engine.backend == plain_engine.backend
+        ls = rng.integers(0, n, 300)
+        rs = np.minimum(ls + rng.integers(0, n, 300), n - 1)
+        ls = np.minimum(ls, rs).astype(np.int32)
+        rs = np.maximum(ls, rs).astype(np.int32)
+        expect_v = np.array(
+            [x[l:r + 1].min() for l, r in zip(ls, rs)], np.float32)
+        expect_i = np.array(
+            [l + int(np.argmin(x[l:r + 1])) for l, r in zip(ls, rs)],
+            np.int32)
+        np.testing.assert_array_equal(
+            np.asarray(tuned_engine.query(ls, rs)), expect_v)
+        np.testing.assert_array_equal(
+            np.asarray(tuned_engine.query_index(ls, rs)), expect_i)
+        np.testing.assert_array_equal(
+            np.asarray(tuned_engine.query(ls, rs)),
+            np.asarray(plain_engine.query(ls, rs)))
+
+
+# ---------------------------------------------------------------------------
+# the autotuner itself (tiny smoke)
+# ---------------------------------------------------------------------------
+class TestAutotuner:
+    def test_tiny_search_produces_valid_cache(self, tmp_path):
+        tuner = Autotuner(geometries=TINY_GEOMETRIES, m=128, repeats=1,
+                          crossover_points=2)
+        cache, report = tuner.search([2**11], platform="cpu")
+        # a winner for every span mix, each a valid TunedConfig
+        assert len(cache) == 4
+        for mix in ("short", "mid", "long", "mixed"):
+            cfg = cache.lookup("cpu", 2**11, mix)
+            assert cfg is not None
+            assert cfg.ns_per_query > 0
+        # measurements cover geometries x backends x mixes
+        assert len(report["measurements"]) == 3 * 2 * 4
+        # round-trips through the schema
+        path = str(tmp_path / "cache.json")
+        cache.save(path)
+        assert len(TuningCache.load(path)) == 4
+
+    def test_skipped_configs_are_reported(self):
+        # c*t >= n: (32, 8) at n=256 degenerates and must be REPORTED
+        tuner = Autotuner(geometries=((8, 8), (32, 8)), m=64, repeats=1,
+                          crossover_points=2, span_mixes=("mixed",))
+        _cache, report = tuner.search([256], platform="cpu")
+        assert len(report["skipped"]) == 1
+        skip = report["skipped"][0]
+        assert (skip["c"], skip["t"]) == (32, 8)
+        assert "c*t" in skip["reason"]
+
+    def test_workload_is_shared_across_geometries(self):
+        # the winner comparison is only meaningful on ONE workload: the
+        # reference chunk must not follow the candidate geometry
+        tuner = Autotuner()
+        assert tuner.reference_c(2**18) == 128
+        assert tuner.reference_c(300) < 128
+
+
+def test_rmq_build_auto_smoke():
+    # c="auto" against whatever cache is committed (or none): must build
+    # a working index either way — this is the README quickstart path
+    x = np.random.default_rng(5).random(4_000).astype(np.float32)
+    rmq = RMQ.build(x, c="auto")
+    v = np.asarray(rmq.query(np.array([7], np.int32),
+                             np.array([3_999], np.int32)))
+    assert v[0] == x[7:].min()
