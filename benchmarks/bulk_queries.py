@@ -1,0 +1,197 @@
+"""Bulk-analytics query path: endpoint-sorted coalesced sweep vs fused.
+
+The offline regime (Grabowski & Kowalski, "Faster batched range minimum
+queries"): at 10^6+ queries per batch the right strategy stops being
+per-query decomposition (``rmq_fused``) and becomes *sorting the batch
+by ``(chunk(l), chunk(r))`` and answering it in coalesced passes that
+share level-0 traffic across queries* (``kernels/rmq_bulk`` through
+``QueryEngine.query_bulk``).  This module grew out of
+``coalesced_access.py`` (paper Fig. 4): that microbenchmark shows the
+memory hierarchy rewards grouped access; this one shows the query stack
+harvesting the reward end to end.
+
+Full mode sweeps batch size 2^10..2^22 over an n=2^20 index and reports
+bulk vs fused ns/query per size, the measured crossover, and the
+committed tuning cache's ``bulk_crossover`` for the same geometry; the
+structural claims:
+
+* bulk strictly beats fused at the large end (batch >= 2^20) — the
+  acceptance criterion for the bulk path's existence;
+* fused wins at the small end (2^10) — i.e. the engine's size-based
+  crossover routing is load-bearing, not decorative;
+* results stay bit-identical to the fused path at every probed size.
+
+Tiny mode (CI smoke) skips the timing sweep and gates the execution
+contract instead: one recorded ``rmq_bulk`` launch per bucket — a
+single-bucket batch records exactly one launch, a forced two-bucket
+batch exactly two, and submission-order results match the fused oracle.
+Only full-mode runs refresh the committed ``BENCH_bulk.json``.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (
+    atomic_write_json,
+    csv_row,
+    make_input_array,
+    make_span_queries,
+    time_fn,
+    tiny_mode,
+)
+from repro.core.api import RMQ
+from repro.kernels.profiling import count_launches
+from repro.qe import BulkExecutor, QueryEngine
+from repro.tune import default_cache
+from repro.tune.cache import current_platform
+
+# Committed perf-trajectory artifact: repo-root anchored, full-mode only
+# (same discipline as BENCH_query.json).
+BENCH_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_bulk.json",
+)
+
+NOISE = 1.15
+
+
+def run(n: int, c: int = 128, t: int = 64,
+        batch_exps=range(10, 23, 2)):
+    """Race fused vs bulk per batch size; returns (rows, crossover)."""
+    x = jnp.asarray(make_input_array(n))
+    index = RMQ.build(x, c=c, t=t, backend="fused")
+    fused = QueryEngine(index, cache_size=0)
+    bulk = QueryEngine(index, cache_size=0, bulk_crossover=1)
+    rows = []
+    crossover = None
+    for e in batch_exps:
+        m = 1 << e
+        ls, rs = make_span_queries(n, m, c, "mixed", seed=3)
+        t_fused = time_fn(lambda: fused.query(ls, rs), repeats=3)
+        t_bulk = time_fn(lambda: bulk.query_bulk(ls, rs), repeats=3)
+        rows.append({
+            "batch": m,
+            "fused_ns": t_fused / m * 1e9,
+            "bulk_ns": t_bulk / m * 1e9,
+        })
+        if crossover is None and t_bulk < t_fused:
+            crossover = m
+        # parity at every probed size, not just where it's fast
+        sample = np.asarray(bulk.query_bulk(ls[:4096], rs[:4096]))
+        np.testing.assert_array_equal(
+            sample, np.asarray(fused.query(ls[:4096], rs[:4096])))
+    return rows, crossover
+
+
+def check_launch_contract() -> dict:
+    """One ``rmq_bulk`` launch per bucket, asserted at benchmark time.
+
+    Fresh geometry (primes unused elsewhere) keeps the trace-time
+    launch counter honest — see ``repro.kernels.profiling``.
+    """
+    rng = np.random.default_rng(11)
+    n, c, t = 2203, 8, 8
+    x = rng.integers(-4, 4, n).astype(np.float32)
+    index = RMQ.build(x, c=c, t=t, backend="fused")
+    engine = QueryEngine(index, cache_size=0, bulk_crossover=1)
+    m = 512
+    a, b = rng.integers(0, n, m), rng.integers(0, n, m)
+    ls = np.minimum(a, b).astype(np.int32)
+    rs = np.maximum(a, b).astype(np.int32)
+
+    with count_launches() as counts:
+        res = engine.query_bulk(ls, rs)
+    if counts != {"rmq_bulk": 1}:
+        raise AssertionError(
+            f"a single-bucket query_bulk batch must record exactly ONE "
+            f"rmq_bulk launch, recorded {counts}"
+        )
+    np.testing.assert_array_equal(
+        np.asarray(res), np.asarray(engine.query(ls, rs)))
+    single = dict(counts)
+
+    # A batch wider than max_bucket splits into ceil(m/max) bucket
+    # passes.  The counter records *traces*, so the buckets here are
+    # deliberately unequal (384 -> 256 + 128): each shape must trace —
+    # and record — its own single launch.  (Equal-shaped buckets
+    # sharing one compilation is the desired steady state, not a gap.)
+    ex = BulkExecutor(max_bucket=256)
+    with count_launches() as counts:
+        res2 = ex.run(index.hierarchy, ls[:384], rs[:384], "value")
+    if counts != {"rmq_bulk": 2}:
+        raise AssertionError(
+            f"a 384-query batch over max_bucket=256 must record exactly "
+            f"TWO rmq_bulk launches (256 + 128), recorded {counts}"
+        )
+    np.testing.assert_array_equal(res2, np.asarray(res)[:384])
+    return {"single_bucket": single, "two_bucket": dict(counts)}
+
+
+def main() -> dict:
+    tiny = tiny_mode()
+    launches = check_launch_contract()
+    print("name,us_per_call,derived")
+    print(csv_row(
+        "bulk_launches_per_bucket", 0,
+        f"single={launches['single_bucket']['rmq_bulk']}"
+        f"|split={launches['two_bucket']['rmq_bulk']}",
+    ))
+
+    n, c, t = 2**20, 128, 64
+    cached = default_cache().lookup(current_platform(), n, "mixed")
+    cached_crossover = (
+        cached.bulk_crossover if cached is not None else None
+    )
+    payload = {
+        "benchmark": "bulk_queries",
+        "tiny": tiny,
+        "platform": jax.default_backend(),
+        "unit": "ns_per_query",
+        "geometry": {"n": n, "c": c, "t": t},
+        "launch_contract": launches,
+        "tuned_bulk_crossover": cached_crossover,
+    }
+    if tiny:
+        # CI smoke: the contract above is the whole point; timing a
+        # 2^22-query sweep in CI would be all noise and no signal
+        return payload
+
+    rows, crossover = run(n, c=c, t=t)
+    for r in rows:
+        faster = r["fused_ns"] / r["bulk_ns"]
+        print(csv_row(
+            f"bulk_batch{r['batch']}", r["bulk_ns"] / 1e3,
+            f"fused_ns={r['fused_ns']:.1f}|bulk_ns={r['bulk_ns']:.1f}"
+            f"|bulk_speedup={faster:.2f}x",
+        ))
+    print(csv_row(
+        "bulk_crossover", 0,
+        f"measured={crossover}|tuning_cache={cached_crossover}",
+    ))
+    payload["rows"] = rows
+    payload["measured_crossover"] = crossover
+
+    # the acceptance claims (full mode only; tiny sizes are noise)
+    big = [r for r in rows if r["batch"] >= 2**20]
+    assert big, rows
+    for r in big:
+        assert r["bulk_ns"] < r["fused_ns"], (
+            "bulk must strictly beat fused at batch >= 2^20", r)
+    small = next(r for r in rows if r["batch"] == 2**10)
+    assert small["fused_ns"] < small["bulk_ns"] * NOISE, (
+        "fused should win (or tie) at the small end — otherwise the "
+        "crossover routing is pointing the wrong way", small)
+    assert crossover is not None, rows
+
+    atomic_write_json(BENCH_JSON, payload)
+    print(f"# wrote {BENCH_JSON}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

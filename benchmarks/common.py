@@ -15,6 +15,7 @@ unchanged on a TPU host.
 
 from __future__ import annotations
 
+import json
 import os
 
 from repro.tune.measure import (  # noqa: F401  (re-exports)
@@ -32,3 +33,17 @@ def tiny_mode() -> bool:
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.4f},{derived}"
+
+
+def atomic_write_json(path: str, payload: dict) -> None:
+    """Write a committed baseline atomically (tmp + ``os.replace``).
+
+    The ``BENCH_*.json`` files gate later runs: a full-mode run killed
+    mid-write must leave the previous baseline intact, never a truncated
+    JSON that fails every subsequent comparison.
+    """
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    os.replace(tmp, path)

@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import (
+    atomic_write_json,
     csv_row,
     make_input_array,
     make_span_queries,
@@ -198,9 +199,7 @@ def main() -> dict:
     if not tiny:
         # tiny-mode numbers are meaningless for the trajectory; only
         # full-mode runs refresh the committed artifact
-        with open(BENCH_JSON, "w") as f:
-            json.dump(payload, f, indent=2)
-            f.write("\n")
+        atomic_write_json(BENCH_JSON, payload)
         print(f"# wrote {BENCH_JSON}")
 
     # structural claims — not checked at REPRO_BENCH_TINY sizes, where

@@ -39,6 +39,8 @@ MODULES = [
     ("tuning", "Fig. 12 (c, t) tuning"),
     ("query_assignment", "Fig. 14 multi-load vs WLQ"),
     ("coalesced_access", "Fig. 4 access coalescing microbench"),
+    ("bulk_queries",
+     "offline bulk path: endpoint-sorted sweep vs fused (+ BENCH_bulk.json)"),
     ("overlap_ablation", "Fig. 13 hybrid top-level ablation"),
     ("roofline", "LM framework roofline (from dry-run artifacts)"),
 ]

@@ -26,12 +26,11 @@ repo root (same committed-trajectory discipline as ``BENCH_query.json``).
 
 from __future__ import annotations
 
-import json
 import os
 
 import jax
 
-from benchmarks.common import csv_row, tiny_mode
+from benchmarks.common import atomic_write_json, csv_row, tiny_mode
 from repro.tune import Autotuner, TINY_GEOMETRIES
 
 # Committed perf-trajectory artifact: anchored at the repo root (not the
@@ -125,9 +124,7 @@ def main() -> dict:
     if not tiny:
         # tiny-mode numbers are meaningless for the trajectory; only
         # full-mode runs refresh the committed artifact
-        with open(BENCH_JSON, "w") as f:
-            json.dump(payload, f, indent=2)
-            f.write("\n")
+        atomic_write_json(BENCH_JSON, payload)
         print(f"# wrote {BENCH_JSON}")
     return payload
 

@@ -1,0 +1,268 @@
+"""Pallas TPU kernel: level-0-coalesced sweep over an endpoint-sorted batch.
+
+``rmq_fused`` answers an arbitrary mixed batch in one launch, but pays
+two level-0 chunk DMAs per query — for the offline bulk regime
+(10^7+ queries, Grabowski & Kowalski's "Faster batched range minimum
+queries") that re-reads the same chunks over and over, because a sorted
+batch's consecutive queries overwhelmingly share boundary chunks.  This
+kernel is the fused kernel with the level-0 traffic made *conditional*:
+
+* **chunk-reuse DMA.**  The query loop carries the previous query's
+  aligned window anchors; a boundary chunk is copied HBM→VMEM only when
+  its anchor *changes* (``pl.when(a_start != prev_a)``).  On a batch
+  sorted by ``(chunk(l), chunk(r))`` — the ``BulkExecutor`` contract —
+  runs of queries sharing a chunk pay ONE copy for the run, so level-0
+  bytes scale with the number of *distinct* chunks touched, not with the
+  query count.  The window buffer is single-slot per side: prefetching
+  ahead would be wrong exactly when reuse fires (the next query usually
+  wants the chunk already resident).
+* **everything above level 0 is the fused walk.**  Upper levels stay
+  VMEM-resident for the launch and are merged with the same
+  offset-table lookups as ``rmq_fused`` — sorting buys nothing there
+  (the upper buffer is already on-chip), so the code is kept identical
+  to preserve the bit-for-bit parity contract.
+
+An *unsorted* batch stays correct — anchors then rarely repeat and every
+query pays its two copies, degenerating to fused-kernel traffic — so
+sortedness is a performance contract, not a safety precondition.
+
+Tie-breaking and padding follow the shared contract: lexicographic
+``(value, leftmost position)`` merges, +inf / ``PAD_POS`` tails that can
+never win.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.constants import POS_INF_I32 as _POS_INF_I32
+from repro.core.plan import HierarchyPlan
+from repro.kernels.rmq_fused.kernel import (
+    DEFAULT_QUERY_BLOCK,
+    _masked_min_2d,
+    _merge,
+)
+
+__all__ = ["DEFAULT_QUERY_BLOCK", "rmq_bulk_pallas"]
+
+
+def _rmq_bulk_kernel(
+    # scalar prefetch
+    offs_ref,       # SMEM (L-1,) i32: plan.offsets (entry units)
+    # inputs
+    l_ref,          # SMEM (qb,) i32 — sorted by (chunk(l), chunk(r))
+    r_ref,          # SMEM (qb,) i32
+    base_hbm,       # ANY  (capacity,) level 0, stays in HBM
+    upper_ref,      # VMEM (rows, c): all upper levels, one chunk per row
+    upper_pos_ref,  # VMEM (rows, c) i32 or None (closure decides)
+    # outputs
+    out_ref,        # SMEM (qb,) values
+    out_pos_ref,    # SMEM (qb,) i32 or None
+    # scratch
+    win_ref,        # VMEM (2, c) resident boundary windows [side][c]
+    sems,           # DMA semaphores (2,)
+    *,
+    plan: HierarchyPlan,
+    qb: int,
+    track_pos: bool,
+):
+    c = plan.c
+    n = plan.capacity
+    num_levels = plan.num_levels
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, c), 1)
+
+    def copy(start, side):
+        return pltpu.make_async_copy(
+            base_hbm.at[pl.ds(start, c)], win_ref.at[side],
+            sems.at[side],
+        )
+
+    def body(i, carry):
+        prev_a, prev_b = carry
+        l = l_ref[i]
+        r = r_ref[i] + 1  # exclusive
+        # same anchor formulas as the fused kernel (exclusive-r b_start),
+        # so sorted runs sharing a chunk pair produce identical anchors
+        a_start = jnp.clip((l // c) * c, 0, max(n - c, 0))
+        b_start = jnp.clip((r // c) * c, 0, max(n - c, 0))
+
+        # level-0 chunk reuse: only a changed anchor moves any bytes.
+        # The copies are synchronous (start+wait inside the guard) — a
+        # single-slot window cannot overlap copy with the previous
+        # query's reads, and on a sorted batch most iterations skip the
+        # copy entirely, which is the win being harvested.
+        @pl.when(a_start != prev_a)
+        def _load_a():
+            cp = copy(a_start, 0)
+            cp.start()
+            cp.wait()
+
+        @pl.when(b_start != prev_b)
+        def _load_b():
+            cp = copy(b_start, 1)
+            cp.start()
+            cp.wait()
+
+        # ---- level 0: prefix / suffix scans over the resident windows ---
+        next_l = ((l + c - 1) // c) * c
+        prev_r = (r // c) * c
+        idx_a = a_start + lane
+        idx_b = b_start + lane
+        pos_a = idx_a if track_pos else None
+        pos_b = idx_b if track_pos else None
+        m, p = _masked_min_2d(
+            win_ref[0].reshape(1, c), idx_a, l,
+            jnp.minimum(next_l, r), pos_a,
+        )
+        m2, p2 = _masked_min_2d(
+            win_ref[1].reshape(1, c), idx_b,
+            jnp.maximum(prev_r, l), r, pos_b,
+        )
+        m, p = _merge(m, p, m2, p2)
+
+        l_k = (l + c - 1) // c   # ceil
+        r_k = r // c             # floor
+
+        # ---- upper levels: identical to the fused kernel ----------------
+        for level in range(1, num_levels):
+            off_rows = offs_ref[level - 1] // c
+            padded_rows = plan.padded_lens[level - 1] // c
+            is_last = level == num_levels - 1
+            if is_last:
+                rows = padded_rows
+                vals = upper_ref[pl.ds(off_rows, rows), :]
+                idx = (
+                    jax.lax.broadcasted_iota(jnp.int32, (rows, c), 0) * c
+                    + jax.lax.broadcasted_iota(jnp.int32, (rows, c), 1)
+                )
+                pos = (
+                    upper_pos_ref[pl.ds(off_rows, rows), :]
+                    if track_pos
+                    else None
+                )
+                m2, p2 = _masked_min_2d(vals, idx, l_k, r_k, pos)
+                m, p = _merge(m, p, m2, p2)
+            else:
+                a_row = jnp.clip(l_k // c, 0, padded_rows - 1)
+                b_row = jnp.clip(r_k // c, 0, padded_rows - 1)
+                nl = ((l_k + c - 1) // c) * c
+                pr = (r_k // c) * c
+                va = upper_ref[pl.ds(off_rows + a_row, 1), :]
+                vb = upper_ref[pl.ds(off_rows + b_row, 1), :]
+                ia = a_row * c + lane
+                ib = b_row * c + lane
+                pa = (
+                    upper_pos_ref[pl.ds(off_rows + a_row, 1), :]
+                    if track_pos
+                    else None
+                )
+                pb = (
+                    upper_pos_ref[pl.ds(off_rows + b_row, 1), :]
+                    if track_pos
+                    else None
+                )
+                m2, p2 = _masked_min_2d(va, ia, l_k, jnp.minimum(nl, r_k), pa)
+                m, p = _merge(m, p, m2, p2)
+                m2, p2 = _masked_min_2d(vb, ib, jnp.maximum(pr, l_k), r_k, pb)
+                m, p = _merge(m, p, m2, p2)
+                l_k = (l_k + c - 1) // c
+                r_k = r_k // c
+
+        out_ref[i] = m
+        if track_pos:
+            out_pos_ref[i] = p
+        return a_start, b_start
+
+    # anchors start at -1 so iteration 0 always copies both windows
+    jax.lax.fori_loop(
+        0, qb, body, (jnp.int32(-1), jnp.int32(-1))
+    )
+
+
+def rmq_bulk_pallas(
+    base: jax.Array,
+    upper2d: jax.Array,
+    upper_pos2d: Optional[jax.Array],
+    offsets: jax.Array,
+    ls: jax.Array,
+    rs: jax.Array,
+    plan: HierarchyPlan,
+    qb: int = DEFAULT_QUERY_BLOCK,
+    track_pos: bool = False,
+    interpret: bool = False,
+):
+    """Launch the bulk query kernel.  ``ls.shape[0]`` must divide by qb.
+
+    Same operand layout as ``rmq_fused_pallas`` (contiguous ``(rows, c)``
+    upper buffer, int32 offset table via scalar prefetch).  Returns
+    ``(values, positions)``; positions are ``INT32_MAX`` unless
+    ``track_pos``.  Callers are expected to pass a batch sorted by
+    ``(chunk(l), chunk(r))`` — correctness does not depend on it, the
+    chunk-reuse DMA savings do.
+    """
+    m = ls.shape[0]
+    assert m % qb == 0, (m, qb)
+    rows = upper2d.shape[0]
+    c = plan.c
+
+    kernel = functools.partial(
+        _rmq_bulk_kernel, plan=plan, qb=qb, track_pos=track_pos
+    )
+
+    in_specs = [
+        pl.BlockSpec((qb,), lambda i, offs: (i,), memory_space=pltpu.SMEM),
+        pl.BlockSpec((qb,), lambda i, offs: (i,), memory_space=pltpu.SMEM),
+        pl.BlockSpec(memory_space=pl.ANY),              # base stays in HBM
+        pl.BlockSpec((rows, c), lambda i, offs: (0, 0)),  # upper: resident
+    ]
+    out_specs = [
+        pl.BlockSpec((qb,), lambda i, offs: (i,), memory_space=pltpu.SMEM),
+    ]
+    out_shape = [jax.ShapeDtypeStruct((m,), base.dtype)]
+
+    if track_pos:
+        in_specs.append(pl.BlockSpec((rows, c), lambda i, offs: (0, 0)))
+        out_specs.append(
+            pl.BlockSpec((qb,), lambda i, offs: (i,),
+                         memory_space=pltpu.SMEM)
+        )
+        out_shape.append(jax.ShapeDtypeStruct((m,), jnp.int32))
+        args = (ls, rs, base, upper2d, upper_pos2d)
+
+        def kern(offs_ref, l_ref, r_ref, base_h, up_ref, upos_ref, o_ref,
+                 opos_ref, win, sems):
+            kernel(offs_ref, l_ref, r_ref, base_h, up_ref, upos_ref,
+                   o_ref, opos_ref, win, sems)
+    else:
+        args = (ls, rs, base, upper2d)
+
+        def kern(offs_ref, l_ref, r_ref, base_h, up_ref, o_ref, win, sems):
+            kernel(offs_ref, l_ref, r_ref, base_h, up_ref, None, o_ref,
+                   None, win, sems)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m // qb,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((2, c), base.dtype),   # [side][c] resident windows
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(offsets.astype(jnp.int32), *args)
+    if track_pos:
+        return out[0], out[1]
+    return out[0], None

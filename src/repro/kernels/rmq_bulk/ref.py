@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the bulk query pass.
+
+The bulk pass changes the *execution shape* — one shared per-chunk
+sparse ladder amortized over an endpoint-sorted batch instead of two
+fresh chunk scans per query — not the algebra: every query still
+computes the exact lexicographic (value, leftmost-position) minimum
+over its range.  So the oracle delegates to the shared branch-free
+reference (same policy as ``rmq_fused/ref.py``): any divergence between
+``rmq_bulk`` and this oracle localizes to the ladder/interior
+decomposition, not to drift in a private reference copy.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan import HierarchyPlan
+from repro.kernels.rmq_scan.ref import rmq_branchfree_batch
+
+
+def rmq_bulk_batch_ref(
+    plan: HierarchyPlan,
+    base: jax.Array,
+    upper: jax.Array,
+    upper_pos: Optional[jax.Array],
+    ls: jax.Array,
+    rs: jax.Array,
+    track_pos: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """(values, leftmost-tie positions) for the whole batch, one pass."""
+    ls = jnp.asarray(ls, jnp.int32)
+    rs = jnp.asarray(rs, jnp.int32)
+    return rmq_branchfree_batch(
+        plan, base, upper, upper_pos, ls, rs, track_pos=track_pos
+    )

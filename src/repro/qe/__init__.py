@@ -29,18 +29,25 @@ that observation into an execution layer:
   shard-locally with no all-reduce, crossing spans via ``pmin``);
 * :class:`QueryService` — a multi-index registry with a micro-batching
   admission queue that coalesces small requests into one padded
-  execution with per-request scatter-back.
+  execution with per-request scatter-back;
+* :class:`BulkExecutor` — the offline analytics path
+  (``QueryEngine.query_bulk`` / ``QueryService.submit_bulk``): the
+  whole batch endpoint-sorted by ``(chunk(l), chunk(r))`` and answered
+  in single level-0-coalesced ``kernels/rmq_bulk`` dispatches that
+  share chunk reads across queries, with an autotuned size crossover
+  back to the fused path for small batches.
 """
 
 from repro.qe.cache import ResultCache
 from repro.qe.distributed import CROSSING, SEG_LOCAL, DistributedExecutor
 from repro.qe.engine import QueryEngine
-from repro.qe.executors import FusedExecutor
+from repro.qe.executors import BulkExecutor, FusedExecutor
 from repro.qe.planner import FUSED, LONG, MID, SHORT, Bucket, QueryPlanner
 from repro.qe.service import QueryService
 
 __all__ = [
     "Bucket",
+    "BulkExecutor",
     "CROSSING",
     "DistributedExecutor",
     "FUSED",

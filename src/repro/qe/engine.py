@@ -59,6 +59,7 @@ from repro.qe.distributed import DistributedExecutor
 from repro.qe.executors import (
     INDEX,
     VALUE,
+    BulkExecutor,
     FusedExecutor,
     LongSpanExecutor,
     MidSpanExecutor,
@@ -85,6 +86,7 @@ class QueryEngine:
         metrics: Optional[Metrics] = None,
         tuning=None,
         span_mix: str = "mixed",
+        bulk_crossover: Optional[int] = None,
     ):
         # Config precedence (most- to least-specific), resolved per
         # attach by _resolve_config:
@@ -98,6 +100,13 @@ class QueryEngine:
         self._min_bucket = min_bucket
         self._max_bucket = max_bucket
         self._interpret = interpret
+        self._bulk_crossover = bulk_crossover
+        if bulk_crossover is not None and bulk_crossover < 1:
+            raise ValueError(
+                f"bulk_crossover must be >= 1, got {bulk_crossover}"
+            )
+        self.bulk_crossover: int = 1  # resolved per attach
+        self._bulk = BulkExecutor(interpret=interpret)
         self.cache = ResultCache(cache_size)
         self.tuned: Optional[dict] = None  # resolved config provenance
         self.backend = self._resolve_backend(index)
@@ -175,6 +184,26 @@ class QueryEngine:
             "long_enabled": self._long_enabled and sparse_top,
             "source": source,
         }
+
+    def _resolve_bulk_crossover(self, index) -> int:
+        """Batch size at which :meth:`query_bulk` leaves the fused path.
+
+        Same precedence as the rest of the config: explicit ctor kwarg >
+        tuned cache (``bulk_crossover`` measured by the Autotuner) >
+        analytic model.  The analytic fallback charges the bulk pass its
+        fixed per-dispatch cost — the shared chunk ladder is ~log2(c)
+        full passes over the ``capacity/c`` chunk grid, worth paying
+        once the batch is of the same order — and floors at 1024 so tiny
+        indexes never bulk-route micro-batches.
+        """
+        if self._bulk_crossover is not None:
+            return self._bulk_crossover
+        cfg = self._tuned_lookup(index)
+        if cfg is not None and getattr(cfg, "bulk_crossover", None):
+            return int(cfg.bulk_crossover)
+        plan = index.plan
+        rows = max(index.capacity // plan.c, 1)
+        return max(1024, rows * max(plan.c.bit_length() - 1, 1))
 
     def _configure_executors(self, backend: str) -> None:
         """(Re)build the executor table for ``backend`` — called at
@@ -276,6 +305,7 @@ class QueryEngine:
             # class — the planner and span executors never run.
             self.planner = None
             self.tuned = None
+            self.bulk_crossover = self._resolve_bulk_crossover(index)
             if self.distributed is None:
                 self.distributed = DistributedExecutor(
                     min_bucket=self._min_bucket,
@@ -292,6 +322,8 @@ class QueryEngine:
                 self.backend = backend
                 self._configure_executors(backend)
             resolved = self._resolve_config(index)
+            self.bulk_crossover = self._resolve_bulk_crossover(index)
+            resolved["bulk_crossover"] = self.bulk_crossover
             planner = QueryPlanner(
                 c=plan.c,
                 num_levels=plan.num_levels,
@@ -319,7 +351,7 @@ class QueryEngine:
             "n": live_length(index),
             **{k: resolved[k] for k in
                ("backend", "planner", "long_cutoff", "scan_chunks",
-                "long_enabled", "source")},
+                "long_enabled", "bulk_crossover", "source")},
         }
         if tuned == self.tuned:
             return
@@ -343,6 +375,54 @@ class QueryEngine:
                 "with_positions=True to serve RMQ_index queries"
             )
         return self._execute(ls, rs, INDEX)
+
+    def query_bulk(self, ls, rs, op: str = VALUE) -> jnp.ndarray:
+        """Offline bulk-analytics batch (``op`` = ``"value"``/``"index"``).
+
+        The execution strategy for the 10^6+-query regime: the batch is
+        sorted by ``(chunk(l), chunk(r))`` and answered in single
+        level-0-coalesced ``kernels/rmq_bulk`` dispatches that share
+        chunk reads across queries (:class:`BulkExecutor`), results
+        inverse-permuted back to submission order.  Bit-identical to
+        :meth:`query` / :meth:`query_index` — values and leftmost-tie
+        positions — at any batch size.
+
+        Batches below :attr:`bulk_crossover` (explicit kwarg > autotuned
+        cache > analytic model) take the standard fused path instead:
+        below the crossover the bulk pass's fixed ladder cost loses, and
+        dedup + the LRU still pay for themselves.  At and above it both
+        are skipped — per-query caching is pure overhead at bulk scale.
+        On a distributed index the endpoint sort also groups queries by
+        owning segment, so segment-contained spans run shard-locally
+        with zero collectives
+        (:meth:`~repro.qe.distributed.DistributedExecutor.run_bulk`).
+        """
+        if op not in (VALUE, INDEX):
+            raise ValueError(
+                f"op must be {VALUE!r} or {INDEX!r}, got {op!r}"
+            )
+        index = self._index
+        if op == INDEX and not index.with_positions:
+            raise ValueError(
+                "index was built without positions; rebuild it with "
+                "with_positions=True to serve RMQ_index queries"
+            )
+        n = live_length(index)
+        ls, rs = check_query_args(ls, rs, n)
+        ls = np.asarray(ls, np.int32).ravel()
+        rs = np.asarray(rs, np.int32).ravel()
+        if ls.shape[0] < self.bulk_crossover:
+            return self._execute(ls, rs, op)
+        self.batches += 1
+        self.queries_in += ls.shape[0]
+        if self.distributed is not None:
+            res = self.distributed.run_bulk(index, ls, rs, op)
+        else:
+            res = self._bulk.run(index.hierarchy, ls, rs, op)
+        out_dtype = (
+            np.int32 if op == INDEX else np.dtype(index.value_dtype)
+        )
+        return jnp.asarray(np.asarray(res).astype(out_dtype, copy=False))
 
     @property
     def supports_mixed(self) -> bool:
@@ -583,6 +663,8 @@ class QueryEngine:
         if self.distributed is not None:
             counts = dict(self.distributed.class_counts)
             executors = {"distributed": self.distributed.stats()}
+        if self._bulk.calls:
+            executors["bulk"] = self._bulk.stats()
         return {
             "backend": self.backend,
             "generation": self.generation,

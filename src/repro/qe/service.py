@@ -276,6 +276,29 @@ class QueryService:
             self.flush()
         return ticket
 
+    def submit_bulk(self, name: str, ls, rs, op: str = VALUE) -> int:
+        """Execute a bulk-analytics batch immediately; returns its ticket.
+
+        The offline counterpart of :meth:`submit`: admission checks are
+        shared (:meth:`validate_request`), but the request bypasses the
+        micro-batching queue entirely — coalescing exists to amortize
+        launch cost across *small* callers, and a 10^7-query batch IS
+        the launch.  Execution goes straight through
+        :meth:`QueryEngine.query_bulk` (endpoint-sorted coalesced sweep,
+        no per-query LRU or dedup above the crossover; small batches
+        still fall back to the fused path inside the engine).  The
+        result is stored immediately, so :meth:`take` can claim the
+        ticket without any :meth:`flush` — pending micro-batched
+        requests are untouched.
+        """
+        ls, rs = self.validate_request(name, ls, rs, op)
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self.requests += 1
+        res = self._engine(name).query_bulk(ls, rs, op)
+        self._store_result(name, ticket, res)
+        return ticket
+
     def snapshot(self, name: str):
         """The immutable index object currently serving ``name``.
 

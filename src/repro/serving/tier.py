@@ -194,6 +194,7 @@ class _Tenant:
         self.m_flush_size = m.counter("flushes_size")
         self.m_flush_mutation = m.counter("flushes_mutation")
         self.m_flush_forced = m.counter("flushes_forced")
+        self.m_bulk = m.counter("bulk_routed")
         self.m_failed = m.counter("failed_requests")
         self.m_mut_staged = m.counter("mutations_staged")
         self.m_mut_applied = m.counter("mutations_applied")
@@ -326,7 +327,23 @@ class ServingTier:
     def submit(self, name: str, ls, rs, op: str = VALUE,
                slo_ms: Optional[float] = None) -> Ticket:
         """Enqueue a read; non-blocking.  Raises :class:`Backpressure`
-        when the tenant's queue bound or quota rejects it."""
+        when the tenant's queue bound or quota rejects it.
+
+        Oversized read-only submissions — more queries than the
+        tenant's ``max_batch`` — cannot ride the deadline queue: they
+        would either be unadmittable forever (``m > max_queue``) or
+        monopolise a flush the SLO sized for interactive traffic.
+        They route to the engine's offline bulk path instead
+        (:meth:`QueryService.submit_bulk` →
+        :meth:`~repro.qe.engine.QueryEngine.query_bulk`): no
+        micro-batching, no LRU, one coalesced pass per sorted bucket.
+        The returned :class:`Ticket` is already resolved when this
+        returns (the bulk sweep runs inline on the caller's thread),
+        answered against the tenant's *current* front generation —
+        staged mutations keep waiting for the next flush, exactly as a
+        queued read admitted before the swap would.  Quota admission
+        still applies; only the queue bound is bypassed.
+        """
         tenant = self._tenant(name)
         tr = trace.current()
         sp = tr.begin("submit") if tr is not None else None
@@ -337,6 +354,7 @@ class ServingTier:
             m = int(ls.shape[0])
             now = self._clock()
             cfg = tenant.cfg
+            bulk = m > cfg.max_batch
             asp = tr.begin("admission") if tr is not None else None
             try:
                 with tenant.lock:
@@ -356,32 +374,69 @@ class ServingTier:
                                 (m - tenant.tokens) / cfg.quota_qps,
                             )
                         tenant.tokens -= m
-                    if tenant.queued_queries + m > cfg.max_queue:
-                        tenant.m_rejected_queue.inc()
-                        head = tenant.queue[0].ticket.deadline \
-                            if tenant.queue else now + cfg.slo_ms / 1e3
-                        raise Backpressure(
-                            name, "queue_full",
-                            max(head - now, 0.0) + 1e-4,
-                        )
+                    if not bulk:
+                        if tenant.queued_queries + m > cfg.max_queue:
+                            tenant.m_rejected_queue.inc()
+                            head = tenant.queue[0].ticket.deadline \
+                                if tenant.queue else now + cfg.slo_ms / 1e3
+                            raise Backpressure(
+                                name, "queue_full",
+                                max(head - now, 0.0) + 1e-4,
+                            )
                     deadline = now + (slo_ms if slo_ms is not None
                                       else cfg.slo_ms) / 1e3
                     ticket = Ticket(name, op, m, now, deadline)
-                    tenant.queue.append(_Queued(ticket, ls, rs))
-                    tenant.queued_queries += m
+                    if not bulk:
+                        tenant.queue.append(_Queued(ticket, ls, rs))
+                        tenant.queued_queries += m
                     depth = tenant.queued_queries
                 admitted = True
             finally:
                 if tr is not None:
-                    tr.end(asp, tenant=name, queries=m, admitted=admitted)
+                    tr.end(asp, tenant=name, queries=m,
+                           admitted=admitted, bulk=bulk)
             tenant.m_submits.inc()
             tenant.m_submitted_queries.inc(m)
             tenant.m_depth.record(depth)
-            self._wake.set()
+            if bulk:
+                self._execute_bulk(tenant, ticket, ls, rs)
+            else:
+                self._wake.set()
             return ticket
         finally:
             if tr is not None:
                 tr.end(sp, tenant=name, op=op, admitted=admitted)
+
+    def _execute_bulk(self, tenant: _Tenant, ticket: Ticket,
+                      ls: np.ndarray, rs: np.ndarray) -> None:
+        """Resolve one oversized read inline via the bulk path.
+
+        Bypasses the deadline queue and the flush cycle entirely.  The
+        snapshot pin brackets the service call so a concurrent flush's
+        generation swap cannot retire the index mid-read; the recorded
+        ``generation`` is the front the service is attached to —
+        ``flush_lock`` excludes the window inside a flush where the
+        slot has swapped but the service has not re-attached yet (same
+        lock order as :meth:`_flush_tenant`: flush, then service)."""
+        tenant.m_bulk.inc()
+        with tenant.flush_lock:
+            snap = tenant.slot.pin()
+            try:
+                with self._service_lock:
+                    st = self._service.submit_bulk(
+                        tenant.name, ls, rs, ticket.op)
+                    res = self._service.take(st)
+            except Exception as e:
+                ticket._future.set_exception(e)
+                tenant.m_failed.inc()
+                return
+            finally:
+                snap.release()
+        now = self._clock()
+        ticket.generation = snap.generation
+        ticket.completed_at = now
+        tenant.m_latency.record(now - ticket.submitted_at)
+        ticket._future.set_result(res)
 
     # -- mutation staging -------------------------------------------------
     def update(self, name: str, idxs, vals) -> None:

@@ -83,7 +83,10 @@ class TunedConfig:
     analytic ``2c·c^(L-2)`` default); ``scan_chunks``/``sparse_top``
     parameterize the :class:`repro.core.plan.LevelSplit` the config
     expands to.  ``ns_per_query`` is the winning measurement,
-    informational only.
+    informational only.  ``bulk_crossover`` is the *measured* batch size
+    at which ``QueryEngine.query_bulk``'s endpoint-sorted coalesced
+    sweep starts beating the fused per-query path (``None`` keeps the
+    engine's analytic model).
     """
 
     c: int
@@ -94,6 +97,7 @@ class TunedConfig:
     scan_chunks: int = 2
     sparse_top: bool = True
     ns_per_query: Optional[float] = None
+    bulk_crossover: Optional[int] = None
 
     def __post_init__(self):
         if self.c < 2 or (self.c & (self.c - 1)) != 0:
@@ -112,6 +116,10 @@ class TunedConfig:
             raise ValueError(
                 f"scan_chunks must be 1 or 2 (the rmq_short kernel scans "
                 f"at most two aligned chunks), got {self.scan_chunks}")
+        if self.bulk_crossover is not None and self.bulk_crossover < 1:
+            raise ValueError(
+                f"bulk_crossover must be positive, "
+                f"got {self.bulk_crossover}")
 
     def level_split(self):
         """The :class:`repro.core.plan.LevelSplit` this config implies."""
@@ -218,10 +226,16 @@ class TuningCache:
         }
 
     def save(self, path: str) -> None:
-        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-        with open(path, "w") as f:
+        """Write atomically (tmp + ``os.replace``): an interrupted save
+        must never leave a truncated cache for ``default_cache`` to
+        reject loudly on the next run."""
+        path = os.path.abspath(path)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
             json.dump(self.as_json(), f, indent=2)
             f.write("\n")
+        os.replace(tmp, path)
 
     @classmethod
     def from_json(cls, doc: dict, source: Optional[str] = None
@@ -274,6 +288,7 @@ class TuningCache:
                     scan_chunks=e["scan_chunks"],
                     sparse_top=e["sparse_top"],
                     ns_per_query=e.get("ns_per_query"),
+                    bulk_crossover=e.get("bulk_crossover"),
                 )
             except ValueError as err:
                 raise TuningCacheError(

@@ -188,6 +188,7 @@ class Autotuner:
                         best[mix] = (meas.ns_per_query, meas)
 
         winners: Dict[str, TunedConfig] = {}
+        bulk_by_geom: Dict[Tuple[int, int], Optional[int]] = {}
         for mix, (_, meas) in best.items():
             long_cutoff = None
             if meas.backend != "fused":
@@ -195,11 +196,18 @@ class Autotuner:
                 if geom not in crossover_geom.values():
                     crossover_geom[mix] = geom
                 long_cutoff = self.measure_crossover(n, meas.c, meas.t)
+            # The bulk crossover depends on geometry, not span mix, so
+            # mixes sharing a winning (c, t) share one measurement.
+            geom = (meas.c, meas.t)
+            if geom not in bulk_by_geom:
+                bulk_by_geom[geom] = self.measure_bulk_crossover(
+                    n, meas.c, meas.t)
             winners[mix] = TunedConfig(
                 c=meas.c, t=meas.t, backend=meas.backend,
                 planner="fused" if meas.backend == "fused" else "routed",
                 long_cutoff=long_cutoff,
                 ns_per_query=meas.ns_per_query,
+                bulk_crossover=bulk_by_geom[geom],
             )
         return winners, measurements, skipped
 
@@ -244,6 +252,46 @@ class Autotuner:
                 f"{t_top / self.m * 1e9:.0f} ns/q")
             if t_top < t_walk:
                 return span
+        return None
+
+    # -- the bulk-vs-fused batch-size crossover ----------------------------
+    def measure_bulk_crossover(self, n: int, c: int,
+                               t: int) -> Optional[int]:
+        """Smallest batch where the bulk coalesced sweep beats fused.
+
+        Races the fused per-query engine against a bulk-forced engine
+        (``bulk_crossover=1`` routes every batch through the
+        endpoint-sorted ``rmq_bulk`` pass) over geometrically spaced
+        batch sizes of the same mixed-span workload.  Returns the first
+        batch size bulk wins, or ``None`` when fused wins at every
+        probed size — the engine then keeps its analytic model, never a
+        mis-tuned early switch.
+        """
+        from repro.core.api import RMQ
+        from repro.qe import QueryEngine
+
+        x = make_input_array(n)
+        index = RMQ.build(x, c=c, t=t, backend="jax")
+        fused = QueryEngine(index, cache_size=0, backend="fused")
+        bulk = QueryEngine(index, cache_size=0, backend="fused",
+                           bulk_crossover=1)
+        sizes = sorted({
+            int(b) for b in np.geomspace(
+                self.m, 64 * self.m, self.crossover_points)
+        })
+        for m in sizes:
+            ls, rs = make_span_queries(n, m, self.reference_c(n),
+                                       "mixed", seed=self.seed + 3)
+            t_fused = time_fn(lambda: fused.query(ls, rs),
+                              repeats=self.repeats)
+            t_bulk = time_fn(lambda: bulk.query_bulk(ls, rs),
+                             repeats=self.repeats)
+            self._log(
+                f"bulk crossover n={n} c={c} t={t} m={m}: fused "
+                f"{t_fused / m * 1e9:.0f} vs bulk "
+                f"{t_bulk / m * 1e9:.0f} ns/q")
+            if t_bulk < t_fused:
+                return m
         return None
 
     # -- the full search ---------------------------------------------------

@@ -551,3 +551,170 @@ class TestFusedSeams:
             np.asarray(rmq_index_batch(r.hierarchy, lsj, rsj)),
         )
         assert engine.stats()["class_counts"][FUSED] > 0
+
+
+# ---------------------------------------------------------------------------
+# the bulk path folded into the differential harness (PR 9)
+# ---------------------------------------------------------------------------
+class TestBulkDifferential:
+    """``query_bulk`` — the endpoint-sorted, level-0-coalesced bucket
+    sweep — against the numpy oracle AND the fused per-query path:
+    values, leftmost-tie positions, mutation staleness, and the
+    sort/bucket layer's degenerate shapes.  Routing is forced to the
+    bulk executor with ``bulk_crossover=1`` except where the crossover
+    itself is under test."""
+
+    @pytest.mark.parametrize("kind", INDEX_KINDS)
+    def test_bulk_random_sequence(self, kind):
+        # same geometry policy as the main sweep: distributed keeps a
+        # 2-level local plan (3-level first-compiles are minutes on CPU)
+        if kind == "distributed":
+            geo = dict(n=257, c=8, t=8, cap=400)
+        else:
+            geo = dict(n=257, c=8, t=2, cap=400)
+        n, c, t, cap = geo["n"], geo["c"], geo["t"], geo["cap"]
+        rng = np.random.default_rng(40 + INDEX_KINDS.index(kind))
+        oracle = NumpyOracle(_tied_values(rng, n))
+        idx = _build_index(kind, "fused", oracle.x, c, t, cap)
+        engine = QueryEngine(idx, backend="fused", cache_size=0,
+                             bulk_crossover=1)
+        for step in range(3):
+            ls, rs = _random_spans(rng, oracle.n, 64)
+            # duplicate (l, r) pairs must come back duplicated in place
+            ls[5], rs[5] = ls[4], rs[4]
+            np.testing.assert_array_equal(
+                np.asarray(engine.query_bulk(ls, rs)),
+                oracle.query_value(ls, rs),
+            )
+            np.testing.assert_array_equal(
+                np.asarray(engine.query_bulk(ls, rs, op="index")),
+                oracle.query_index(ls, rs),
+            )
+            # bit-identity with the fused per-query path on the same batch
+            np.testing.assert_array_equal(
+                np.asarray(engine.query_bulk(ls, rs)),
+                np.asarray(engine.query(ls, rs)),
+            )
+            # mutate; the re-attached engine must serve the new state
+            # through the bulk path (no LRU to go stale, but the bucket
+            # executor binds per-hierarchy — staleness IS the seam here)
+            idxs = rng.integers(0, oracle.n, 8)
+            vals = _tied_values(rng, 8)
+            take = min(cap - oracle.n, 10)
+            tail = _tied_values(rng, take)
+            if kind == "hybrid":
+                oracle.update(idxs, vals)
+                oracle.append(tail)
+                idx = _mutate_index(kind, "fused", idx, oracle, c, t,
+                                    idxs, vals, tail)
+            else:
+                idx = _mutate_index(kind, "fused", idx, oracle, c, t,
+                                    idxs, vals, tail)
+                oracle.update(idxs, vals)
+                oracle.append(tail)
+            engine.attach(idx)
+
+    def test_bulk_bucket_seams(self):
+        """Degenerate batch shapes for the sort/bucket layer: every
+        query inside ONE chunk (maximal level-0 sharing), every query a
+        distinct (chunk(l), chunk(r)) pair (no sharing at all),
+        duplicate (l, r) pairs, and l == r runs — all inverse-permuted
+        back to submission order bit-exactly."""
+        rng = np.random.default_rng(50)
+        n, c = 520, 8
+        x = _tied_values(rng, n)
+        r = RMQ.build(x, c=c, t=2, with_positions=True, backend="fused",
+                      capacity=760)
+        engine = QueryEngine(r, cache_size=0, bulk_crossover=1)
+        oracle = NumpyOracle(x)
+
+        base = 3 * c
+        a = base + rng.integers(0, c, 32)
+        b = base + rng.integers(0, c, 32)
+        one_chunk = (np.minimum(a, b).astype(np.int32),
+                     np.maximum(a, b).astype(np.int32))
+
+        i = np.arange(16)
+        distinct_pairs = (
+            (2 * i * c + (i % c)).astype(np.int32),
+            np.minimum((2 * i + 1) * c + ((i * 3) % c), n - 1)
+            .astype(np.int32),
+        )
+
+        duplicates = (
+            np.array([7] * 16 + [100] * 16, np.int32),
+            np.array([300] * 16 + [101] * 16, np.int32),
+        )
+
+        pts = rng.integers(0, n, 32).astype(np.int32)
+        point_runs = (pts, pts.copy())
+
+        for name, (ls, rs) in {
+            "one_chunk": one_chunk,
+            "distinct_pairs": distinct_pairs,
+            "duplicates": duplicates,
+            "point_runs": point_runs,
+        }.items():
+            np.testing.assert_array_equal(
+                np.asarray(engine.query_bulk(ls, rs)),
+                oracle.query_value(ls, rs), err_msg=name,
+            )
+            np.testing.assert_array_equal(
+                np.asarray(engine.query_bulk(ls, rs, op="index")),
+                oracle.query_index(ls, rs), err_msg=name,
+            )
+
+    def test_bulk_crossover_routes_small_batches_to_fused(self):
+        """Below the crossover ``query_bulk`` is the fused path (one
+        ``rmq_fused`` launch, LRU included); at or above it, one
+        ``rmq_bulk`` launch per bucket.  Fresh-prime geometry keeps the
+        first-trace launch accounting honest."""
+        rng = np.random.default_rng(51)
+        n = 2221
+        x = _tied_values(rng, n)
+        r = RMQ.build(x, c=8, t=8, with_positions=True, backend="fused",
+                      capacity=2400)
+        engine = QueryEngine(r, cache_size=0, bulk_crossover=64)
+        oracle = NumpyOracle(x)
+        ls, rs = _random_spans(rng, n, 32)
+        with count_launches() as counts:
+            small = np.asarray(engine.query_bulk(ls, rs))
+        assert counts == {"rmq_fused": 1}, counts
+        np.testing.assert_array_equal(small, oracle.query_value(ls, rs))
+        lsb, rsb = _random_spans(rng, n, 128)
+        with count_launches() as counts:
+            big = np.asarray(engine.query_bulk(lsb, rsb))
+        assert counts == {"rmq_bulk": 1}, counts
+        np.testing.assert_array_equal(big, oracle.query_value(lsb, rsb))
+
+    def test_bulk_kernel_interpret_parity(self):
+        """The Pallas bulk kernel (interpret mode off-TPU) against the
+        production jnp ladder lowering and the shared branch-free
+        oracle: the conditional level-0 DMA reuse must not move a bit,
+        values or leftmost-tie positions."""
+        from repro.kernels.rmq_bulk.ops import rmq_bulk_batch
+        from repro.kernels.rmq_bulk.ref import rmq_bulk_batch_ref
+
+        rng = np.random.default_rng(52)
+        n, c, t = 520, 8, 2
+        x = _tied_values(rng, n)
+        h = RMQ.build(x, c=c, t=t, with_positions=True,
+                      backend="fused").hierarchy
+        ls, rs = _random_spans(rng, n, 64)
+        order = np.lexsort((rs // c, ls // c))   # the executor's sort
+        ls, rs = ls[order], rs[order]
+        for track in (False, True):
+            kv, kp = rmq_bulk_batch(h, ls, rs, track_pos=track,
+                                    interpret=True)
+            jv, jp = rmq_bulk_batch(h, ls, rs, track_pos=track)
+            rv, rp = rmq_bulk_batch_ref(
+                h.plan, h.base, h.upper,
+                h.upper_pos if track else None, ls, rs, track_pos=track,
+            )
+            np.testing.assert_array_equal(np.asarray(kv), np.asarray(rv))
+            np.testing.assert_array_equal(np.asarray(jv), np.asarray(rv))
+            if track:
+                np.testing.assert_array_equal(np.asarray(kp),
+                                              np.asarray(rp))
+                np.testing.assert_array_equal(np.asarray(jp),
+                                              np.asarray(rp))

@@ -307,6 +307,107 @@ class TestAdmission:
 
 
 # ---------------------------------------------------------------------------
+# oversized read-only submissions: bulk routing instead of rejection
+# ---------------------------------------------------------------------------
+class TestOversizedSubmissions:
+    def test_oversized_submission_resolves_via_bulk_not_backpressure(self):
+        """Regression: a read batch wider than ``max_queue`` used to be
+        unadmittable forever (queue_full with no queue state to drain).
+        It now routes through the engine's bulk path and comes back
+        already resolved, bit-identical to the per-span oracle."""
+        rng = np.random.default_rng(30)
+        n = 600
+        x = _tied_values(rng, n)
+        clock = FakeClock()
+        tier = ServingTier(clock=clock)
+        tier.register_tenant("a", _fused(x), max_queue=64, max_batch=32,
+                             bulk_crossover=1, cache_size=0)
+        m = 256                                 # > max_queue: old code
+        ls, rs = _random_spans(rng, n, m)       # rejected this forever
+        tk = tier.submit("a", ls, rs)
+        assert tk.done()                        # resolved inline
+        assert tk.generation == 0
+        np.testing.assert_array_equal(
+            np.asarray(tk.result(0)),
+            [x[l:r + 1].min() for l, r in zip(ls, rs)],
+        )
+        tk_i = tier.submit("a", ls, rs, INDEX)
+        np.testing.assert_array_equal(
+            np.asarray(tk_i.result(0)),
+            [l + int(np.argmin(x[l:r + 1])) for l, r in zip(ls, rs)],
+        )
+        t = tier.stats()["tenants"]["a"]
+        assert t["bulk_routed"] == 2
+        assert t["rejected_queue_full"] == 0
+        assert t["queued_queries"] == 0         # never touched the queue
+        assert t["flushes"] == 0                # and never forced a flush
+        assert t["latency_s"]["count"] == 2
+
+    def test_oversized_reads_current_generation_not_staged(self):
+        """Bulk bypass answers against the front generation; staged
+        mutations wait for the next flush — same semantics as a queued
+        read admitted before the swap."""
+        rng = np.random.default_rng(31)
+        n = 500
+        x = _tied_values(rng, n)
+        clock = FakeClock()
+        tier = ServingTier(clock=clock)
+        tier.register_tenant("a", _fused(x), max_batch=16,
+                             bulk_crossover=1, cache_size=0)
+        pos = int(np.argmin(x))
+        tier.update("a", np.array([pos], np.int32),
+                    np.array([99.0], np.float32))
+        ls = np.zeros(64, np.int32)
+        rs = np.full(64, n - 1, np.int32)
+        tk = tier.submit("a", ls, rs)           # staged, not applied
+        assert float(tk.result(0)[0]) == x.min()
+        assert tk.generation == 0
+        tier.drain("a")                         # swap applies the update
+        want = x.copy()
+        want[pos] = 99.0
+        tk2 = tier.submit("a", ls, rs)
+        assert float(tk2.result(0)[0]) == want.min()
+        assert tk2.generation == 1
+
+    def test_oversized_still_pays_quota(self):
+        """Only the queue bound is bypassed — the token bucket is rate
+        admission and still rejects an oversized burst."""
+        rng = np.random.default_rng(32)
+        x = _tied_values(rng, 300)
+        clock = FakeClock()
+        tier = ServingTier(clock=clock)
+        tier.register_tenant("a", _fused(x), max_batch=8,
+                             quota_qps=100.0, quota_burst=16.0)
+        ls, rs = _random_spans(rng, 300, 32)    # > max_batch AND > burst
+        with pytest.raises(Backpressure) as ei:
+            tier.submit("a", ls, rs)
+        assert ei.value.reason == "quota"
+        assert tier.stats()["tenants"]["a"]["bulk_routed"] == 0
+
+    def test_small_submissions_still_queue_alongside_bulk(self):
+        """Coexistence: an oversized bypass must not flush, reorder, or
+        starve the deadline queue it skipped."""
+        rng = np.random.default_rng(33)
+        n = 400
+        x = _tied_values(rng, n)
+        clock = FakeClock()
+        tier = ServingTier(clock=clock)
+        tier.register_tenant("a", _fused(x), slo_ms=5.0, max_batch=16,
+                             bulk_crossover=1, cache_size=0)
+        small = tier.submit("a", np.array([0]), np.array([n - 1]))
+        big_ls, big_rs = _random_spans(rng, n, 64)
+        big = tier.submit("a", big_ls, big_rs)
+        assert big.done() and not small.done()  # queue untouched
+        assert tier.stats()["tenants"]["a"]["queued_queries"] == 1
+        tier.step(clock.advance(0.006))         # deadline flush as usual
+        assert float(small.result(0)[0]) == x.min()
+        t = tier.stats()["tenants"]["a"]
+        assert t["flushes_deadline"] == 1
+        assert t["bulk_routed"] == 1
+        assert t["submits"] == 2
+
+
+# ---------------------------------------------------------------------------
 # snapshot isolation: the tentpole's correctness claim
 # ---------------------------------------------------------------------------
 class TestSnapshotIsolation:
