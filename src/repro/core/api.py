@@ -65,6 +65,8 @@ class RMQ:
         capacity: Optional[int] = None,
         tuning=None,
         span_mix: str = "mixed",
+        packed_pos: Optional[bool] = None,
+        summary_dtype: Optional[str] = None,
     ) -> "RMQ":
         """Build over ``x``; pass ``capacity > len(x)`` to allow appends.
 
@@ -76,6 +78,11 @@ class RMQ:
         bit-identical across backends, so this only changes which
         lowering answers queries).  A cache miss falls back to today's
         defaults (``c=128, t=64``, platform backend) bit-identically.
+
+        ``packed_pos`` / ``summary_dtype`` select the compact plane
+        layouts (bit-packed chunk-local positions, bf16 value summaries
+        with exact recovery — see ``make_plan``); ``None`` defers to the
+        tuning cache, then the classic layout.
         """
         x = px.coerce_values(x)
         if plan is not None and capacity is not None:
@@ -93,15 +100,23 @@ class RMQ:
             )
         if plan is None:
             if tuned_cfg is not None:
+                if packed_pos is None:
+                    packed_pos = getattr(tuned_cfg, "packed_pos", None)
+                if summary_dtype is None:
+                    summary_dtype = getattr(
+                        tuned_cfg, "summary_dtype", None
+                    )
                 plan = make_plan(
                     int(x.shape[0]), c=tuned_cfg.c, t=tuned_cfg.t,
                     capacity=capacity,
                     level_split=tuned_cfg.level_split(),
+                    packed_pos=packed_pos, summary_dtype=summary_dtype,
                 )
             else:
                 plan = make_plan(
                     int(x.shape[0]), c=128 if c == "auto" else c, t=t,
                     capacity=capacity,
+                    packed_pos=packed_pos, summary_dtype=summary_dtype,
                 )
         if backend == "auto" and tuned_cfg is not None:
             backend = tuned_cfg.backend
@@ -110,6 +125,51 @@ class RMQ:
             x, plan, with_positions=with_positions, backend=backend
         )
         return RMQ(hierarchy=h, backend=backend, length=plan.n)
+
+    @staticmethod
+    def build_out_of_core(
+        source,
+        n: int,
+        c: int = 128,
+        t: int = 64,
+        with_positions: bool = False,
+        capacity: Optional[int] = None,
+        segment_size: Optional[int] = None,
+        packed_pos: Optional[bool] = None,
+        summary_dtype: Optional[str] = None,
+        backend: str = "jax",
+    ) -> "RMQ":
+        """Build by streaming fixed-size segments through the fused kernel.
+
+        ``source`` is a sliceable array-like (numpy memmap, array) or a
+        callable ``source(start, stop) -> values`` of logical length
+        ``n`` — the input never has to exist as one device array during
+        level-1 construction
+        (:func:`repro.kernels.hierarchy_fused.ops.build_hierarchy_streamed`).
+        Under jax x64 mode, position-tracking builds past ``2**31``
+        elements store an int64 coordinate plane and queries route
+        through the int64-aware pure-JAX walk; without x64 they refuse
+        loudly.  Results are bit-identical to :meth:`build`.
+
+        ``backend`` selects the *query* lowering of the returned index
+        (default ``'jax'`` — the only walk that is coordinate-exact past
+        ``2**31``).
+        """
+        plan = make_plan(
+            n, c=c, t=t, capacity=capacity,
+            packed_pos=packed_pos, summary_dtype=summary_dtype,
+        )
+        from repro.kernels.hierarchy_fused.ops import (
+            build_hierarchy_streamed,
+        )
+
+        h = build_hierarchy_streamed(
+            source, plan, with_positions=with_positions,
+            segment_size=segment_size,
+        )
+        return RMQ(
+            hierarchy=h, backend=px.resolve_backend(backend), length=n
+        )
 
     # -- incremental maintenance ------------------------------------------
     def update(self, idxs, vals) -> "RMQ":

@@ -1,0 +1,265 @@
+"""Bit-packed chunk-relative position planes (the memory-footprint push).
+
+A position-tracking hierarchy historically stored ``upper_pos`` as one
+absolute int32 (int64 past 2^31) per summary entry — as many auxiliary
+bytes again as the value plane itself.  But an entry's minimum always
+comes from one of the ``c`` children it summarizes, so the *chunk-local
+offset* — ``log2(c)`` bits — determines the absolute position once the
+level below is known:
+
+* level 1: ``abs(e) = e*c + local(e)`` (children are level-0 indices);
+* level k: ``abs(e) = abs_{k-1}[e*c + local(e)]`` — resolved bottom-up.
+
+This module packs those offsets tightly into a uint32 word array (entry
+``e`` occupies bits ``[e*bits, (e+1)*bits)`` of the stream, little-endian
+within each word): at ``c = 128`` the position plane shrinks from 32 to
+7 bits per entry.  The packed words live directly in
+``Hierarchy.upper_pos`` when ``plan.packed_pos`` is set — the pytree
+shape is unchanged, and every query lowering unpacks on the fly inside
+its jitted program (:func:`resolve_positions`), reconstructing a plane
+bit-identical to the unpacked oracle's (leftmost ties and ``PAD_POS``
+padding included — the differential harness gates exactly that).
+
+Incremental updates rewrite fields in place with a wrapping-delta
+scatter-add (:func:`scatter_offsets`): a field's bits hold exactly its
+old value, so adding ``(new - old) << shift`` (mod 2^32, split across
+the at most two words a field straddles) replaces the field without
+carries escaping into neighbours — exact even when several entries
+share a word, because scatter-add accumulates and modular addition
+commutes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.constants import PAD_POS
+
+__all__ = [
+    "pos_bits",
+    "packed_words",
+    "pack_offsets",
+    "unpack_offsets",
+    "gather_offsets",
+    "scatter_offsets",
+    "gather_absolute",
+    "pack_plane_from_absolute",
+    "unpack_to_absolute",
+    "resolve_positions",
+]
+
+_WORD = 32
+
+
+def pos_bits(c: int) -> int:
+    """Bits per packed entry: a chunk-local offset in ``[0, c)``."""
+    return max(1, (c - 1).bit_length())
+
+
+def packed_words(n_entries: int, bits: int) -> int:
+    """uint32 words needed for ``n_entries`` fields of ``bits`` each."""
+    return (n_entries * bits + _WORD - 1) // _WORD
+
+
+def _field_coords(entry_ids, bits: int):
+    """(word index, in-word shift) of each entry's field start.
+
+    Bit offsets are computed in uint32 — exact while the plane holds
+    fewer than ``2**32 / bits`` entries (tens of billions of elements at
+    c = 128), far past any capacity the stack admits.
+    """
+    bitpos = entry_ids.astype(jnp.uint32) * jnp.uint32(bits)
+    w0 = (bitpos >> 5).astype(jnp.int32)
+    sh = bitpos & jnp.uint32(_WORD - 1)
+    return w0, sh
+
+
+def _split_contrib(value_u32, sh, bits: int):
+    """A field value as its (low word, straddling high word) contributions."""
+    lo = value_u32 << sh
+    # sh == 0 would shift by 32 (undefined); the straddle is empty there.
+    hi = jnp.where(
+        sh == 0,
+        jnp.uint32(0),
+        value_u32 >> (jnp.uint32(_WORD) - jnp.maximum(sh, jnp.uint32(1))),
+    )
+    return lo, hi
+
+
+def pack_offsets(local: jax.Array, bits: int) -> jax.Array:
+    """Pack per-entry chunk-local offsets (< 2**bits) into uint32 words.
+
+    Fields of distinct entries are disjoint bit ranges, so the
+    scatter-add over shared words is exactly a scatter-or.
+    """
+    n = local.shape[0]
+    e = jnp.arange(n, dtype=jnp.int32)
+    v = local.astype(jnp.uint32) & jnp.uint32((1 << bits) - 1)
+    w0, sh = _field_coords(e, bits)
+    lo, hi = _split_contrib(v, sh, bits)
+    words = jnp.zeros((packed_words(n, bits),), jnp.uint32)
+    words = words.at[w0].add(lo, mode="drop")
+    words = words.at[w0 + 1].add(hi, mode="drop")
+    return words
+
+
+def gather_offsets(words: jax.Array, entry_ids, bits: int) -> jax.Array:
+    """Read the packed fields at ``entry_ids`` (any shape) as int32."""
+    nwords = words.shape[0]
+    w0, sh = _field_coords(entry_ids, bits)
+    lo = words[w0] >> sh
+    hi = jnp.where(
+        sh == 0,
+        jnp.uint32(0),
+        words[jnp.minimum(w0 + 1, nwords - 1)]
+        << (jnp.uint32(_WORD) - jnp.maximum(sh, jnp.uint32(1))),
+    )
+    return ((lo | hi) & jnp.uint32((1 << bits) - 1)).astype(jnp.int32)
+
+
+def unpack_offsets(words: jax.Array, n_entries: int, bits: int) -> jax.Array:
+    """All ``n_entries`` packed fields, in entry order, as int32."""
+    return gather_offsets(
+        words, jnp.arange(n_entries, dtype=jnp.int32), bits
+    )
+
+
+def scatter_offsets(
+    words: jax.Array,
+    entry_ids: jax.Array,
+    new_local: jax.Array,
+    bits: int,
+    live=None,
+) -> jax.Array:
+    """Overwrite the fields at ``entry_ids`` with ``new_local``.
+
+    ``live`` (optional bool mask) turns lanes into no-ops — required for
+    the duplicate entry ids ``touched_chunk_ids``'s static-size dedupe
+    can emit, whose deltas would otherwise apply twice.  Within one call
+    distinct live entries may share words freely: each delta only moves
+    its own field's bits (see module docstring), and scatter-add
+    accumulates shared-word deltas exactly under mod-2^32 arithmetic.
+    """
+    mask = jnp.uint32((1 << bits) - 1)
+    old = gather_offsets(words, entry_ids, bits).astype(jnp.uint32)
+    new = new_local.astype(jnp.uint32) & mask
+    if live is not None:
+        new = jnp.where(live, new, old)
+    w0, sh = _field_coords(entry_ids, bits)
+    new_lo, new_hi = _split_contrib(new, sh, bits)
+    old_lo, old_hi = _split_contrib(old, sh, bits)
+    words = words.at[w0].add(new_lo - old_lo, mode="drop")
+    words = words.at[w0 + 1].add(new_hi - old_hi, mode="drop")
+    return words
+
+
+def gather_absolute(
+    words: jax.Array, plan, level: int, entry_ids: jax.Array, pos_dtype
+) -> jax.Array:
+    """Absolute level-0 positions of ``entry_ids`` within ``level``.
+
+    Descends one gather per level: an entry's field names the child
+    holding its minimum, the child's field names the grandchild, down to
+    the level-0 index.  Caller masks padding entries (their chains read
+    zero-filled fields and return in-range garbage).
+    """
+    bits = pos_bits(plan.c)
+    e = entry_ids.astype(pos_dtype)
+    for lvl in range(level, 0, -1):
+        off = plan.offsets[lvl - 1]
+        loc = gather_offsets(words, off + e, bits)
+        e = e * plan.c + loc.astype(pos_dtype)
+    return e
+
+
+def _plane_dtype(plan):
+    from repro.core.hierarchy import pos_dtype_for
+
+    return pos_dtype_for(plan.capacity, strict=False)
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def unpack_to_absolute(words: jax.Array, plan) -> jax.Array:
+    """The full absolute-position plane from a packed word array.
+
+    Bit-identical to the plane an unpacked build stores: live entries
+    reconstruct level by level (the selected child of a live entry is
+    itself live, so the chains never touch padding), padding entries are
+    forced to ``PAD_POS``.
+    """
+    c = plan.c
+    bits = pos_bits(c)
+    dtype = _plane_dtype(plan)
+    pad = jnp.array(PAD_POS, dtype)
+    out = jnp.full((plan.upper_size,), PAD_POS, dtype=dtype)
+    prev = None
+    for k in range(1, plan.num_levels):
+        off, padded = plan.level_slice(k)
+        loc = gather_offsets(
+            words, off + jnp.arange(padded, dtype=jnp.int32), bits
+        )
+        e = jnp.arange(padded, dtype=dtype)
+        child = e * c + loc.astype(dtype)
+        if k == 1:
+            abs_k = child
+        else:
+            abs_k = prev[jnp.minimum(child, prev.shape[0] - 1)]
+        abs_k = jnp.where(e < plan.level_lens[k], abs_k, pad)
+        out = jax.lax.dynamic_update_slice(out, abs_k, (off,))
+        prev = abs_k
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def pack_plane_from_absolute(abs_plane: jax.Array, plan) -> jax.Array:
+    """Packed words from an absolute-position plane (any backend's build).
+
+    Level 1 offsets are ``abs - e*c``; at level k the selected child is
+    the unique child whose absolute position equals the parent's (chunk
+    minima summarize disjoint ranges, so positions are distinct among a
+    parent's live children).  Padding entries pack as zero — they are
+    masked back to ``PAD_POS`` on unpack.
+    """
+    c = plan.c
+    bits = pos_bits(c)
+    locals_ = jnp.zeros((plan.upper_size,), jnp.int32)
+    for k in range(1, plan.num_levels):
+        off, padded = plan.level_slice(k)
+        cur = jax.lax.slice(abs_plane, (off,), (off + padded,))
+        e = jnp.arange(padded, dtype=jnp.int32)
+        if k == 1:
+            loc = (cur - e.astype(cur.dtype) * c).astype(jnp.int32)
+        else:
+            poff, ppadded = plan.level_slice(k - 1)
+            child = jax.lax.slice(abs_plane, (poff,), (poff + ppadded,))
+            win = child[
+                jnp.minimum(
+                    e[:, None] * c + jnp.arange(c, dtype=jnp.int32)[None, :],
+                    ppadded - 1,
+                )
+            ]
+            loc = jnp.argmax(win == cur[:, None], axis=1).astype(jnp.int32)
+        loc = jnp.where(e < plan.level_lens[k], loc, 0)
+        locals_ = jax.lax.dynamic_update_slice(locals_, loc, (off,))
+    return pack_offsets(locals_, bits)
+
+
+def resolve_positions(upper_pos, plan):
+    """The absolute-position plane a query lowering should consume.
+
+    Pass-through for unpacked planes and position-less builds; unpacks
+    packed planes on the fly (call from inside a jitted program — the
+    transient absolute plane then lives only for the launch).  Idempotent:
+    packed word arrays are uint32, absolute planes are signed, so an
+    already-resolved plane passes through unchanged.
+    """
+    if (
+        upper_pos is not None
+        and getattr(plan, "packed_pos", False)
+        and upper_pos.dtype == jnp.uint32
+    ):
+        return unpack_to_absolute(upper_pos, plan)
+    return upper_pos

@@ -39,10 +39,21 @@ reserves ``ceil(capacity / S)`` +inf-padded slots and element ``g`` lives
 in segment ``g // segment_capacity`` — appends land on the tail segments.
 
 The same code path runs on the production meshes via ``shard_map`` and on
-a single CPU device (1×1 mesh) for tests.  Query/position arithmetic is
-int32 (like the rest of the query stack), so ``build`` refuses total
-capacities at or past 2**31 — the same loud contract the batched engine
-enforces at ``attach`` — rather than letting bounds wrap silently.
+a single CPU device (1×1 mesh) for tests.  Query/position arithmetic runs
+in a *coordinate dtype* derived from the total capacity: int32 below
+2**31 (bit-identical to the historical stack), int64 past it **when jax
+x64 mode is on** — segment starts, globalized positions and combine
+sentinels all widen together, so the paper's index-space ceiling lifts
+with the memory ceiling.  Without x64, ``build`` refuses total
+capacities at or past 2**31 (the same loud
+``repro.core.protocol.check_capacity_limit`` contract the batched engine
+enforces at ``attach``) rather than letting bounds wrap silently.
+
+Compact layouts ride along: ``build(..., packed_pos=True)`` stores each
+segment's position plane as log2(c)-bit packed words and
+``summary_dtype='bfloat16'`` halves the upper value planes (the sharded
+walks carry the position plane even for value-only batches then — exact
+recovery re-reads level 0 through the stored positions).
 """
 
 from __future__ import annotations
@@ -57,7 +68,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import protocol as px
-from repro.core.constants import POS_INF_I32 as _POS_INF_I32
+from repro.core.hierarchy import pos_dtype_for
 from repro.core.plan import HierarchyPlan, make_plan
 from repro.core.query import _rmq_batch, check_query_args
 
@@ -104,6 +115,15 @@ def _build_fn(mesh: Mesh, seg: str, plan: HierarchyPlan,
     return jax.jit(build_local)
 
 
+def _need_pos_plane(plan: HierarchyPlan, track: bool) -> bool:
+    """Whether the sharded walk must carry the position plane.
+
+    bf16 summaries need it even for value-only batches: exact recovery
+    re-reads level 0 through the stored positions.
+    """
+    return track or plan.summary_dtype == "bfloat16"
+
+
 def _local_rmq(plan: HierarchyPlan, base_l, upper_l, pos_l, ls, rs,
                track: bool, backend: str):
     """Shard-local batched RMQ behind the sharded walks.
@@ -114,6 +134,7 @@ def _local_rmq(plan: HierarchyPlan, base_l, upper_l, pos_l, ls, rs,
     device and still no collective); every other backend takes the
     pure-JAX walk.  Results are bit-identical either way.
     """
+    need_pos = _need_pos_plane(plan, track)
     if backend == "fused":
         from repro.core.hierarchy import Hierarchy
         from repro.kernels.rmq_fused import ops as fused_ops
@@ -121,7 +142,7 @@ def _local_rmq(plan: HierarchyPlan, base_l, upper_l, pos_l, ls, rs,
         h = Hierarchy(
             base=base_l,
             upper=upper_l,
-            upper_pos=pos_l if track else None,
+            upper_pos=pos_l if need_pos else None,
             plan=plan,
         )
         m, p = fused_ops.rmq_fused_batch(h, ls, rs, track_pos=track)
@@ -129,7 +150,7 @@ def _local_rmq(plan: HierarchyPlan, base_l, upper_l, pos_l, ls, rs,
             p = jnp.zeros_like(ls)
         return m, p
     return _rmq_batch(
-        plan, base_l, upper_l, pos_l if track else None, ls, rs,
+        plan, base_l, upper_l, pos_l if need_pos else None, ls, rs,
         track_pos=track,
     )
 
@@ -140,6 +161,12 @@ def _allreduce_query_fn(mesh: Mesh, seg: str, qaxes: Tuple[str, ...],
     """The monolithic query path: every segment answers its intersection,
     one ``pmin`` over the segment axis combines."""
     n_local = plan.capacity
+    # Coordinate dtype of the GLOBAL index space: int64 past 2**31 under
+    # x64, int32 (the historical arithmetic, bit-identical) below.
+    coord = pos_dtype_for(n_local * mesh.shape[seg], strict=False)
+    ident = jnp.iinfo(coord).max
+    lcoord = pos_dtype_for(n_local, strict=False)
+    need_pos = _need_pos_plane(plan, track)
     qspec = P(qaxes)
 
     @functools.partial(
@@ -148,7 +175,7 @@ def _allreduce_query_fn(mesh: Mesh, seg: str, qaxes: Tuple[str, ...],
         in_specs=(
             P(seg),
             P(seg),
-            P(seg) if track else P(),
+            P(seg) if need_pos else P(),
             qspec,
             qspec,
         ),
@@ -157,22 +184,28 @@ def _allreduce_query_fn(mesh: Mesh, seg: str, qaxes: Tuple[str, ...],
     )
     def go(base_l, upper_l, pos_l, ls_l, rs_l):
         seg_idx = jax.lax.axis_index(seg)
-        seg_start = (seg_idx * n_local).astype(jnp.int32)
-        # Intersect each global range with this segment.
-        ll = jnp.clip(ls_l - seg_start, 0, n_local - 1)
-        rr = jnp.clip(rs_l - seg_start, 0, n_local - 1)
-        nonempty = (rs_l >= seg_start) & (ls_l < seg_start + n_local)
+        # Widen BEFORE the multiply: seg_idx * n_local wraps int32 past
+        # 2**31 even when every operand fits individually.
+        seg_start = seg_idx.astype(coord) * n_local
+        ls_c = ls_l.astype(coord)
+        rs_c = rs_l.astype(coord)
+        # Intersect each global range with this segment; clip in the
+        # global coordinate dtype, THEN narrow (a bare cast could wrap a
+        # far-away bound back into local range).
+        ll = jnp.clip(ls_c - seg_start, 0, n_local - 1).astype(lcoord)
+        rr = jnp.clip(rs_c - seg_start, 0, n_local - 1).astype(lcoord)
+        nonempty = (rs_c >= seg_start) & (ls_c < seg_start + n_local)
         m, p = _local_rmq(
             plan, base_l, upper_l, pos_l, ll, rr, track, backend
         )
         inf = jnp.array(jnp.inf, dtype=m.dtype)
         m = jnp.where(nonempty, m, inf)
         if track:
-            p = jnp.where(nonempty, p + seg_start, _POS_INF_I32)
+            p = jnp.where(nonempty, p.astype(coord) + seg_start, ident)
             # Combine (value, pos) lexicographically across segments so
             # ties stay leftmost: min on value, then min pos among argmin.
             mins = jax.lax.pmin(m, seg)
-            p = jnp.where(m == mins, p, _POS_INF_I32)
+            p = jnp.where(m == mins, p, ident)
             p = jax.lax.pmin(p, seg)
             return mins, p
         return jax.lax.pmin(m, seg), jnp.zeros_like(ls_l)
@@ -189,6 +222,8 @@ def _grouped_query_fn(mesh: Mesh, seg: str, plan: HierarchyPlan,
     all — this is the engine's fast path for spans contained in one
     segment."""
     n_local = plan.capacity
+    coord = pos_dtype_for(n_local * mesh.shape[seg], strict=False)
+    need_pos = _need_pos_plane(plan, track)
 
     @functools.partial(
         shard_map,
@@ -196,7 +231,7 @@ def _grouped_query_fn(mesh: Mesh, seg: str, plan: HierarchyPlan,
         in_specs=(
             P(seg),
             P(seg),
-            P(seg) if track else P(),
+            P(seg) if need_pos else P(),
             P(seg),
             P(seg),
         ),
@@ -205,12 +240,12 @@ def _grouped_query_fn(mesh: Mesh, seg: str, plan: HierarchyPlan,
     )
     def go(base_l, upper_l, pos_l, ls_l, rs_l):
         seg_idx = jax.lax.axis_index(seg)
-        seg_start = (seg_idx * n_local).astype(jnp.int32)
+        seg_start = seg_idx.astype(coord) * n_local
         m, p = _local_rmq(
             plan, base_l, upper_l, pos_l, ls_l[0], rs_l[0], track, backend
         )
         if track:
-            p = p + seg_start  # globalize leftmost positions
+            p = p.astype(coord) + seg_start  # globalize leftmost positions
         else:
             p = jnp.zeros_like(m, dtype=jnp.int32)
         return m[None, :], p[None, :]
@@ -228,6 +263,8 @@ def _mutate_fn(mesh: Mesh, seg: str, plan: HierarchyPlan, track: bool):
     from repro.streaming.updates import propagate_updates, scatter_base
 
     n_local = plan.capacity
+    coord = pos_dtype_for(n_local * mesh.shape[seg], strict=False)
+    lcoord = pos_dtype_for(n_local, strict=False)
 
     @functools.partial(
         shard_map,
@@ -248,8 +285,13 @@ def _mutate_fn(mesh: Mesh, seg: str, plan: HierarchyPlan, track: bool):
     )
     def go(base_l, upper_l, pos_l, idxs, vals):
         seg_idx = jax.lax.axis_index(seg)
-        seg_start = (seg_idx * n_local).astype(idxs.dtype)
-        local = idxs - seg_start
+        seg_start = seg_idx.astype(coord) * n_local
+        # Localize in the global coordinate dtype, clamp out-of-segment
+        # indices to the dropped sentinels BEFORE narrowing — a bare
+        # int64->int32 cast could wrap a foreign index back into range.
+        local = jnp.clip(
+            idxs.astype(coord) - seg_start, -1, n_local
+        ).astype(lcoord)
         # scatter_base drops local indices outside [0, n_local) — i.e.
         # every index another segment owns; propagate_updates routes their
         # chunk ids to an idempotent chunk-0 re-reduction, so each device
@@ -302,6 +344,8 @@ class DistributedRMQ:
         with_positions: bool = False,
         capacity: Optional[int] = None,
         backend: str = "auto",
+        packed_pos: Optional[bool] = None,
+        summary_dtype: Optional[str] = None,
     ) -> "DistributedRMQ":
         """Build over ``x``; pass ``capacity > len(x)`` to allow appends.
 
@@ -316,6 +360,11 @@ class DistributedRMQ:
         answers its (sub)batch in one ``kernels/rmq_fused`` dispatch
         under the same ``shard_map``.  Updates/appends are pure JAX on
         every backend.
+
+        ``packed_pos``/``summary_dtype`` select the compact per-segment
+        layouts (log2(c)-bit packed position planes, bf16 value
+        summaries with exact recovery) — same semantics as
+        ``make_plan``; ``None`` defers to the tuning cache.
         """
         x = px.coerce_values(x)
         n = int(x.shape[0])
@@ -326,18 +375,17 @@ class DistributedRMQ:
             raise ValueError(f"capacity {capacity} < n {n}")
         cap_local = -(-capacity // s)
         cap_padded = cap_local * s
-        # Bounds, positions and update indices all flow through int32
-        # (here and in the whole query stack); refuse loudly rather than
-        # wrap — mirrors the engine's attach-time guard.
-        if cap_padded >= 2**31:
-            raise ValueError(
-                f"total capacity {cap_padded} (= {s} segments x "
-                f"{cap_local}) exceeds the int32 query index space; "
-                "DistributedRMQ supports total capacity < 2**31"
-            )
+        # Bounds, positions and update indices flow through the
+        # coordinate dtype — int32 below 2**31, int64 past it under x64.
+        # Without x64 the shared guard refuses loudly rather than wrap
+        # (mirrors the engine's attach-time contract).
+        px.check_capacity_limit(cap_padded, allow_x64=True)
         if cap_padded != n:
             x = jnp.pad(x, (0, cap_padded - n), constant_values=jnp.inf)
-        local_plan = make_plan(cap_local, c=c, t=t)
+        local_plan = make_plan(
+            cap_local, c=c, t=t,
+            packed_pos=packed_pos, summary_dtype=summary_dtype,
+        )
 
         backend = px.resolve_backend(backend)
         x = jax.device_put(x, NamedSharding(mesh, P(segment_axis)))
@@ -361,7 +409,8 @@ class DistributedRMQ:
         """Run the sharded scatter + shard-local re-reduction."""
         track = self.with_positions
         repl = NamedSharding(self.mesh, P())
-        idxs = jax.device_put(jnp.asarray(idxs, jnp.int32), repl)
+        coord = pos_dtype_for(self.capacity, strict=False)
+        idxs = jax.device_put(jnp.asarray(idxs, coord), repl)
         vals = jax.device_put(jnp.asarray(vals), repl)
         pos_in = (
             self.upper_pos if track else jnp.zeros((), dtype=jnp.int32)
@@ -401,7 +450,8 @@ class DistributedRMQ:
         b = int(vals.shape[0])
         if b == 0:
             return self
-        idxs = self.n + jnp.arange(b, dtype=jnp.int32)
+        coord = pos_dtype_for(self.capacity, strict=False)
+        idxs = self.n + jnp.arange(b, dtype=coord)
         base, upper, pos = self._mutate(idxs, vals)
         return dataclasses.replace(
             self,
@@ -430,8 +480,9 @@ class DistributedRMQ:
         ls, rs = check_query_args(ls, rs, self.n)
         mesh = self.mesh
         qspec = P(self.query_axes)
-        ls = jnp.asarray(ls, dtype=jnp.int32)
-        rs = jnp.asarray(rs, dtype=jnp.int32)
+        coord = pos_dtype_for(self.capacity, strict=False)
+        ls = jnp.asarray(ls, dtype=coord)
+        rs = jnp.asarray(rs, dtype=coord)
         # The batch is sharded over the query axes, so its size must
         # divide evenly; pad with (0, 0) sentinels (valid on any
         # non-empty array) and slice the results back.
@@ -447,7 +498,7 @@ class DistributedRMQ:
         rs = jax.device_put(rs, NamedSharding(mesh, qspec))
         pos_in = (
             self.upper_pos
-            if track_pos
+            if _need_pos_plane(self.local_plan, track_pos)
             else jnp.zeros((0,), dtype=jnp.int32)
         )
         fn = _allreduce_query_fn(
@@ -487,7 +538,7 @@ class DistributedRMQ:
         rs_local = jax.device_put(rs_local, sh)
         pos_in = (
             self.upper_pos
-            if track_pos
+            if _need_pos_plane(self.local_plan, track_pos)
             else jnp.zeros((0,), dtype=jnp.int32)
         )
         fn = _grouped_query_fn(

@@ -39,6 +39,7 @@ __all__ = [
     "Hierarchy",
     "build_hierarchy",
     "build_many",
+    "finalize_compact",
     "make_plan",
     "pos_dtype_for",
 ]
@@ -47,21 +48,27 @@ __all__ = [
 _PAD_POS = PAD_POS
 
 
-def pos_dtype_for(n: int) -> jnp.dtype:
+def pos_dtype_for(n: int, strict: bool = True) -> jnp.dtype:
     """Position dtype for an array of length ``n``.
 
     int32 covers n < 2**31; larger arrays need int64, which JAX silently
-    downcasts to int32 unless x64 mode is enabled — raise loudly instead of
-    returning positions that wrap.
+    downcasts to int32 unless x64 mode is enabled.  ``strict`` (the
+    default, for build paths about to materialize positions) raises
+    loudly instead of returning positions that wrap; ``strict=False``
+    (for dtype *selection* at dispatch/trace time) returns int64 only
+    when x64 is actually on and otherwise falls back to int32 — the
+    build-side strict guard has already ruled out wrapping structures.
     """
     if n < 2**31:
         return jnp.int32
     if not jax.config.x64_enabled:
-        raise ValueError(
-            f"n={n} needs int64 positions, but jax x64 mode is disabled "
-            "(int64 would silently downcast to int32 and wrap); enable it "
-            'with jax.config.update("jax_enable_x64", True)'
-        )
+        if strict:
+            raise ValueError(
+                f"n={n} needs int64 positions, but jax x64 mode is disabled "
+                "(int64 would silently downcast to int32 and wrap); enable "
+                'it with jax.config.update("jax_enable_x64", True)'
+            )
+        return jnp.int32
     return jnp.int64
 
 
@@ -111,6 +118,45 @@ def _pad_to(x: jax.Array, length: int, fill) -> jax.Array:
     return jnp.pad(x, (0, pad), constant_values=fill)
 
 
+def _check_compact_build(plan: HierarchyPlan, with_positions: bool, dtype):
+    """Static validation of the compact-layout knobs before building."""
+    if plan.summary_dtype == "bfloat16":
+        if not with_positions:
+            raise ValueError(
+                "summary_dtype='bfloat16' requires with_positions=True: "
+                "exact queries re-compare bf16-tied candidates on level 0 "
+                "through the stored positions")
+        if dtype != jnp.float32:
+            raise ValueError(
+                "summary_dtype='bfloat16' supports float32 inputs only, "
+                f"got {jnp.dtype(dtype).name}")
+
+
+def finalize_compact(h: Hierarchy) -> Hierarchy:
+    """Apply the plan's compact layouts to a freshly built hierarchy.
+
+    Converts an absolute position plane to packed words when
+    ``plan.packed_pos`` (no-op if already uint32-packed) and casts the
+    value plane to bf16 when ``plan.summary_dtype == "bfloat16"``.  Safe
+    to call inside a jitted program; the Pallas/fused backends build in
+    the classic layout and run through here.
+    """
+    plan = h.plan
+    if (
+        plan.packed_pos
+        and h.upper_pos is not None
+        and h.upper_pos.dtype != jnp.uint32
+    ):
+        from repro.core import bitpack
+
+        h = dataclasses.replace(
+            h, upper_pos=bitpack.pack_plane_from_absolute(h.upper_pos, plan)
+        )
+    if plan.summary_dtype == "bfloat16" and h.upper.dtype != jnp.bfloat16:
+        h = dataclasses.replace(h, upper=h.upper.astype(jnp.bfloat16))
+    return h
+
+
 @functools.partial(jax.jit, static_argnames=("plan", "with_positions"))
 def build_hierarchy(
     x: jax.Array,
@@ -135,13 +181,19 @@ def build_hierarchy(
         raise ValueError(f"input must be rank-1, got shape {x.shape}")
     if x.shape[0] != plan.n:
         raise ValueError(f"plan is for n={plan.n}, input has n={x.shape[0]}")
+    _check_compact_build(plan, with_positions, x.dtype)
 
     c = plan.c
     cap = plan.capacity
     inf = jnp.array(jnp.inf, dtype=x.dtype)
     # Only position-tracking builds materialize indices, so only they
-    # need the int64/x64 guard.
+    # need the int64/x64 guard.  Packed builds store log2(c)-bit offsets,
+    # but queries still reconstruct absolute positions — the guard
+    # applies either way.
     pos_dtype = pos_dtype_for(cap) if with_positions else None
+    packed = with_positions and plan.packed_pos
+    if packed:
+        from repro.core import bitpack
 
     # Level 0 is stored at full capacity; the reserved tail is +inf so it
     # can never win a query and appends just overwrite it.
@@ -151,15 +203,24 @@ def build_hierarchy(
     # double as every level's padding (entries past a level's live length
     # are never written below).
     upper = jnp.full((plan.upper_size,), jnp.inf, dtype=x.dtype)
-    upper_pos = (
-        jnp.full((plan.upper_size,), PAD_POS, dtype=pos_dtype)
-        if with_positions
-        else None
-    )
+    if packed:
+        # Chunk-local offsets, packed at the end.  Each level's argmin
+        # *is* the local offset; no absolute chain is ever materialized.
+        upper_loc = jnp.zeros((plan.upper_size,), jnp.int32)
+        upper_pos = None
+    else:
+        upper_loc = None
+        upper_pos = (
+            jnp.full((plan.upper_size,), PAD_POS, dtype=pos_dtype)
+            if with_positions
+            else None
+        )
 
     cur_v = x
     cur_p = (
-        jnp.arange(cap, dtype=pos_dtype) if with_positions else None
+        jnp.arange(cap, dtype=pos_dtype)
+        if with_positions and not packed
+        else None
     )
     for k in range(1, plan.num_levels):
         # The reduction consumes ceil(len/c)*c entries; pad the current
@@ -170,7 +231,11 @@ def build_hierarchy(
         nxt_v = jnp.take_along_axis(v, idx[:, None], axis=1)[:, 0]
         off = plan.offsets[k - 1]
         upper = jax.lax.dynamic_update_slice(upper, nxt_v, (off,))
-        if with_positions:
+        if packed:
+            upper_loc = jax.lax.dynamic_update_slice(
+                upper_loc, idx.astype(jnp.int32), (off,)
+            )
+        elif with_positions:
             p = _pad_to(cur_p, want, jnp.array(PAD_POS, pos_dtype))
             p = p.reshape(-1, c)
             nxt_p = jnp.take_along_axis(p, idx[:, None], axis=1)[:, 0]
@@ -179,6 +244,11 @@ def build_hierarchy(
             )
             cur_p = nxt_p
         cur_v = nxt_v
+
+    if packed:
+        upper_pos = bitpack.pack_offsets(upper_loc, bitpack.pos_bits(c))
+    if plan.summary_dtype == "bfloat16":
+        upper = upper.astype(jnp.bfloat16)
 
     return Hierarchy(base=x, upper=upper, upper_pos=upper_pos, plan=plan)
 

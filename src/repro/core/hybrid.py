@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +63,8 @@ class HybridRMQ:
         t: int = 1024,
         with_positions: bool = False,
         backend: str = "auto",
+        packed_pos: Optional[bool] = None,
+        summary_dtype: Optional[str] = None,
     ) -> "HybridRMQ":
         """Note the default t is 16x the scan version's: the O(1) top
         makes large tops free at query time (paper §4.5 implication (1)),
@@ -69,12 +72,17 @@ class HybridRMQ:
 
         ``backend`` selects the hierarchy construction path (the shared
         ``'fused'``/``'pallas'``/``'jax'`` pipeline); the hybrid walk
-        itself is pure JAX regardless.
+        itself is pure JAX regardless.  ``packed_pos`` selects the
+        bit-packed position plane (the table top reads it through the
+        shared unpack helpers); ``summary_dtype='bfloat16'`` is refused
+        — the sparse-table top would compare quantized values.
         """
         from repro.core import protocol as px
 
         x = px.coerce_values(x)
-        plan = make_plan(int(x.shape[0]), c=c, t=t)
+        plan = make_plan(int(x.shape[0]), c=c, t=t,
+                         packed_pos=packed_pos,
+                         summary_dtype=summary_dtype)
         h = px.build_hierarchy_with_backend(
             x, plan, with_positions=with_positions,
             backend=px.resolve_backend(backend),
@@ -90,6 +98,12 @@ class HybridRMQ:
         value-only table (and ``query_index`` raises).
         """
         plan = h.plan
+        if h.upper.dtype != h.base.dtype:
+            raise ValueError(
+                "HybridRMQ does not support bf16 summaries: the sparse-"
+                "table top would compare quantized values; query bf16 "
+                "indexes through the exact-recovery walk/fused paths"
+            )
         if plan.num_levels == 1:
             top = h.base
             top_pos = (
@@ -100,11 +114,14 @@ class HybridRMQ:
         else:
             off, _ = plan.level_slice(plan.num_levels - 1)
             top = h.upper[off : off + plan.top_len]
-            top_pos = (
-                h.upper_pos[off : off + plan.top_len]
-                if h.with_positions
-                else None
-            )
+            if not h.with_positions:
+                top_pos = None
+            elif plan.packed_pos:
+                # The packed plane has no sliceable absolute view; walk
+                # the top entries' offset chains down to level 0.
+                top_pos = _packed_top_positions(h.upper_pos, plan)
+            else:
+                top_pos = h.upper_pos[off : off + plan.top_len]
         return HybridRMQ(
             hierarchy=h, top_table=SparseTable.build(top, positions=top_pos)
         )
@@ -179,9 +196,25 @@ class HybridRMQ:
     query_index_batch = query_index
 
 
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _packed_top_positions(words, plan):
+    """Absolute level-0 positions of the top level's live entries."""
+    from repro.core import bitpack
+    from repro.core.hierarchy import pos_dtype_for
+
+    coord = pos_dtype_for(plan.capacity, strict=False)
+    ids = jnp.arange(plan.top_len, dtype=jnp.int32)
+    return bitpack.gather_absolute(
+        words, plan, plan.num_levels - 1, ids, coord
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("plan", "track_pos"))
 def _hybrid_batch(plan, base, upper, upper_pos, top_table, top_pos, ls, rs,
                   track_pos):
+    from repro.core import bitpack
+
+    upper_pos = bitpack.resolve_positions(upper_pos, plan)
     return jax.vmap(
         lambda l, r: _hybrid_single(
             plan, base, upper, upper_pos, top_table, top_pos, l, r,

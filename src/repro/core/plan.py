@@ -95,6 +95,17 @@ class HierarchyPlan:
     level_split:  optional :class:`LevelSplit` routing levels across
                   execution engines (attached by the tuned build path);
                   ``None`` keeps every consumer's analytic defaults.
+    packed_pos:   store ``upper_pos`` as bit-packed chunk-local offsets
+                  (``log2(c)`` bits per entry in a uint32 word array —
+                  see ``repro.core.bitpack``) instead of absolute int32/
+                  int64 positions.  Bit-identical query results; the
+                  position plane shrinks by ``32 / log2(c)`` (~4.6x at
+                  ``c=128``).
+    summary_dtype: value dtype of the upper levels: ``"float32"`` (exact
+                  storage, the default) or ``"bfloat16"`` (half the value
+                  bytes; queries re-compare bf16-tied candidates against
+                  level 0 so results stay exact — requires a
+                  position-tracking build over float32 input).
     """
 
     n: int
@@ -105,10 +116,16 @@ class HierarchyPlan:
     offsets: Tuple[int, ...]
     capacity: int = 0  # 0 means "== n" (plans predating streaming support)
     level_split: Optional[LevelSplit] = None
+    packed_pos: bool = False
+    summary_dtype: str = "float32"
 
     def __post_init__(self):
         if self.capacity == 0:
             object.__setattr__(self, "capacity", self.n)
+        if self.summary_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"summary_dtype must be 'float32' or 'bfloat16', "
+                f"got {self.summary_dtype!r}")
 
     @property
     def num_levels(self) -> int:
@@ -159,6 +176,39 @@ class HierarchyPlan:
         """Auxiliary memory as a fraction of the input array."""
         return self.auxiliary_entries() / max(self.n, 1)
 
+    # -- byte accounting (paper §5.5 / Fig. 15 memory claims) ------------
+    def pos_bits(self) -> int:
+        """Bits per packed position entry (chunk-local offset < c)."""
+        return max(1, (self.c - 1).bit_length())
+
+    def input_bytes(self, value_itemsize: int = 4) -> int:
+        """Bytes of the stored level-0 plane (padded to capacity)."""
+        return self.capacity * value_itemsize
+
+    def value_plane_bytes(self) -> int:
+        """Bytes of the stored ``upper`` value plane under this plan."""
+        itemsize = 2 if self.summary_dtype == "bfloat16" else 4
+        return self.upper_size * itemsize
+
+    def position_plane_bytes(self) -> int:
+        """Bytes of the stored ``upper_pos`` plane for a
+        position-tracking build: packed uint32 words under
+        ``packed_pos``, else one absolute int32 (int64 past 2^31) per
+        entry."""
+        if self.upper_size == 0:
+            return 0
+        if self.packed_pos:
+            return ((self.upper_size * self.pos_bits() + 31) // 32) * 4
+        itemsize = 8 if self.capacity >= 2**31 else 4
+        return self.upper_size * itemsize
+
+    def auxiliary_bytes_planned(self, with_positions: bool = True) -> int:
+        """Total auxiliary bytes (value plane + optional position plane)."""
+        total = self.value_plane_bytes()
+        if with_positions:
+            total += self.position_plane_bytes()
+        return total
+
 
 def make_plan(
     n: int,
@@ -170,6 +220,8 @@ def make_plan(
     tuning=None,
     platform: Optional[str] = None,
     level_split: Optional[LevelSplit] = None,
+    packed_pos: Optional[bool] = None,
+    summary_dtype: Optional[str] = None,
 ) -> HierarchyPlan:
     """Compute the level geometry for an input of length ``n``.
 
@@ -190,6 +242,12 @@ def make_plan(
     winner's :class:`LevelSplit` to the plan.  A cache miss falls back to
     the numeric ``c``/``t`` passed here (i.e. today's defaults) with no
     split attached — tuning can never make a plan worse than untuned.
+
+    ``packed_pos`` / ``summary_dtype`` select the compact plane layouts
+    (see :class:`HierarchyPlan`); left at ``None`` they default to the
+    classic layout (``False`` / ``"float32"``), except that the tuned
+    path may adopt a cached winner's layout — an explicit value here
+    always outranks the cache.
     """
     if n <= 0:
         raise ValueError(f"n must be positive, got {n}")
@@ -205,8 +263,16 @@ def make_plan(
             c, t = cfg.c, cfg.t
             if level_split is None:
                 level_split = cfg.level_split()
+            if packed_pos is None:
+                packed_pos = getattr(cfg, "packed_pos", None)
+            if summary_dtype is None:
+                summary_dtype = getattr(cfg, "summary_dtype", None)
         elif c == "auto":
             c = 128  # cache miss: today's default geometry
+    if packed_pos is None:
+        packed_pos = False
+    if summary_dtype is None:
+        summary_dtype = "float32"
     if c < 2 or (c & (c - 1)) != 0:
         raise ValueError(f"chunk size c must be a power of two >= 2, got {c}")
     if t < 1:
@@ -236,4 +302,6 @@ def make_plan(
         offsets=tuple(offsets),
         capacity=capacity,
         level_split=level_split,
+        packed_pos=packed_pos,
+        summary_dtype=summary_dtype,
     )

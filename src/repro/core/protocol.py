@@ -48,7 +48,12 @@ from typing import Optional, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
-from repro.core.hierarchy import Hierarchy, build_hierarchy, build_many
+from repro.core.hierarchy import (
+    Hierarchy,
+    build_hierarchy,
+    build_many,
+    finalize_compact,
+)
 from repro.core.plan import HierarchyPlan
 from repro.core.query import _debug_checks_enabled
 from repro.obs import trace
@@ -63,6 +68,8 @@ __all__ = [
     "coerce_values",
     "build_hierarchy_with_backend",
     "build_many",
+    "capacity_limit_message",
+    "check_capacity_limit",
     "dispatch_query_value",
     "dispatch_query_index",
     "dispatch_update",
@@ -76,6 +83,39 @@ __all__ = [
 ]
 
 _VALUE_DTYPES = (jnp.float32, jnp.bfloat16, jnp.float64)
+
+
+# ---------------------------------------------------------------------------
+# the one capacity guard (previously four slightly-different copies)
+# ---------------------------------------------------------------------------
+def capacity_limit_message(capacity: int) -> str:
+    """The canonical int32-capacity error text, shared by every guard site.
+
+    Pinned byte-identical in ``test_protocol.py`` — the engine, the
+    distributed build, and both Pallas kernel packages must all raise
+    exactly this string (guard drift across those sites is how capacity
+    bugs hid before the guard was centralized).
+    """
+    return (
+        f"capacity {capacity} exceeds the int32 query index space; "
+        "capacities >= 2**31 need jax x64 mode and the int64-coordinate "
+        "jax path (DistributedRMQ or backend='jax' builds)"
+    )
+
+
+def check_capacity_limit(capacity: int, allow_x64: bool = False) -> None:
+    """Reject capacities past the int32 query index space.
+
+    ``allow_x64=True`` marks call sites that *can* serve int64
+    coordinates (the jax walk, the distributed coordinate plane): they
+    pass when x64 mode is enabled.  Strict sites (the Pallas kernels,
+    the batched engine) always reject — their lowerings index in int32.
+    """
+    if capacity < 2**31:
+        return
+    if allow_x64 and jax.config.x64_enabled:
+        return
+    raise ValueError(capacity_limit_message(capacity))
 
 
 # ---------------------------------------------------------------------------
@@ -243,19 +283,27 @@ def build_hierarchy_with_backend(
     * ``"pallas"`` — ``kernels/hierarchy_build``: one launch per level;
     * ``"jax"`` — the pure-JAX oracle (single fused pass into a
       preallocated buffer since the pipeline refactor).
+
+    Compact plane layouts (``plan.packed_pos`` / ``plan.summary_dtype``)
+    are applied uniformly: the jax oracle builds them natively; the
+    Pallas backends build the classic layout and run through
+    :func:`repro.core.hierarchy.finalize_compact`.
     """
+    from repro.core.hierarchy import _check_compact_build
+
+    _check_compact_build(plan, with_positions, x.dtype)
     if backend == "fused":
         from repro.kernels.hierarchy_fused import ops as fused_ops
 
-        return fused_ops.build_hierarchy_fused(
+        return finalize_compact(fused_ops.build_hierarchy_fused(
             x, plan, with_positions=with_positions
-        )
+        ))
     if backend == "pallas":
         from repro.kernels.hierarchy_build import ops as build_ops
 
-        return build_ops.build_hierarchy_pallas(
+        return finalize_compact(build_ops.build_hierarchy_pallas(
             x, plan, with_positions=with_positions
-        )
+        ))
     if backend == "jax":
         return build_hierarchy(x, plan, with_positions=with_positions)
     raise ValueError(f"unknown backend {backend!r}")

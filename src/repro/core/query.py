@@ -32,7 +32,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.hierarchy import Hierarchy
+from repro.core import bitpack
+from repro.core.hierarchy import Hierarchy, pos_dtype_for
 from repro.core.plan import HierarchyPlan
 
 __all__ = [
@@ -93,31 +94,56 @@ def _merge(m, p, m2, p2):
     return jnp.where(take2, m2, m), jnp.where(take2, p2, p)
 
 
-def _masked_window_scan(arr, pos_arr, start, lo, hi, window, track_pos):
+def _masked_window_scan(
+    arr, pos_arr, start, lo, hi, window, track_pos,
+    coord=jnp.int32, exact_src=None,
+):
     """min over ``arr[i]`` for ``i in [lo, hi) ∩ [start, start+window)``.
 
     ``start`` is clamped by ``dynamic_slice`` semantics; masking uses the
     *absolute* indices of the slice actually read, so clamping is safe.
-    Returns ``(min_value, min_position)`` with +inf / INT32_MAX identities.
+    Returns ``(min_value, min_position)`` with +inf / INTmax identities;
+    positions (and the scan coordinates) use dtype ``coord`` — int64 for
+    capacities past 2^31 under x64.
+
+    ``exact_src`` (the level-0 array) switches on bf16-summary recovery:
+    the window min over ``arr`` is then quantized, so every candidate
+    tied at the quantized min is re-read *exactly* from level 0 through
+    its stored position, and the exact values pick the winner — the true
+    minimum always survives into the tied set because bf16 rounding is
+    monotone.
     """
     n = arr.shape[0]
     window = min(window, n)
-    start = jnp.clip(start, 0, max(n - window, 0)).astype(jnp.int32)
+    start = jnp.clip(start, 0, max(n - window, 0)).astype(coord)
     vals = jax.lax.dynamic_slice(arr, (start,), (window,))
-    idx = start + jnp.arange(window, dtype=jnp.int32)
+    idx = start + jnp.arange(window, dtype=coord)
     mask = (idx >= lo) & (idx < hi)
-    inf = jnp.array(jnp.inf, dtype=arr.dtype)
-    masked = jnp.where(mask, vals, inf)
-    m = jnp.min(masked)
-    if track_pos:
-        if pos_arr is None:
-            pos = idx  # level 0: position is the index itself
+    ident = jnp.array(jnp.iinfo(coord).max, dtype=coord)
+    if exact_src is None:
+        inf = jnp.array(jnp.inf, dtype=arr.dtype)
+        masked = jnp.where(mask, vals, inf)
+        m = jnp.min(masked)
+        if track_pos:
+            if pos_arr is None:
+                pos = idx  # level 0: position is the index itself
+            else:
+                pos = jax.lax.dynamic_slice(pos_arr, (start,), (window,))
+            cand = jnp.where(mask & (masked == m), pos, ident)
+            p = jnp.min(cand).astype(coord)
         else:
-            pos = jax.lax.dynamic_slice(pos_arr, (start,), (window,))
-        cand = jnp.where(mask & (masked == m), pos, _POS_INF_I32)
-        p = jnp.min(cand).astype(jnp.int32)
-    else:
-        p = jnp.array(_POS_INF_I32, dtype=jnp.int32)
+            p = ident
+        return m, p
+    masked = jnp.where(mask, vals, jnp.array(jnp.inf, dtype=arr.dtype))
+    mq = jnp.min(masked)  # quantized (bf16) window minimum
+    pos = jax.lax.dynamic_slice(pos_arr, (start,), (window,))
+    tied = mask & (masked == mq)
+    safe = jnp.clip(pos, 0, exact_src.shape[0] - 1)
+    exact_inf = jnp.array(jnp.inf, dtype=exact_src.dtype)
+    ex = jnp.where(tied, exact_src[safe], exact_inf)
+    m = jnp.min(ex)
+    cand = jnp.where(tied & (ex == m), pos, ident)
+    p = jnp.min(cand).astype(coord)
     return m, p
 
 
@@ -132,16 +158,27 @@ def _rmq_single(
 ) -> Tuple[jax.Array, jax.Array]:
     """Answer a single RMQ; vmapped over the batch by the public API."""
     c = plan.c
+    # All scan coordinates, merge identities, and returned positions use
+    # the plan's position dtype — int32 everywhere except capacities past
+    # 2^31 under x64 (int32 plans are byte-identical to the historical
+    # hardcoded-int32 walk).
+    coord = pos_dtype_for(plan.capacity, strict=False)
+    ident = jnp.array(jnp.iinfo(coord).max, dtype=coord)
+    # bf16 summaries: upper-level scans re-compare their quantized-tied
+    # candidates against level 0 so results stay exact (positions are
+    # required and tracked internally even for value-only queries).
+    exact = upper.dtype != base.dtype and upper_pos is not None
+    track = track_pos or exact
     inf = jnp.array(jnp.inf, dtype=base.dtype)
     m = inf
-    p = jnp.array(_POS_INF_I32, dtype=jnp.int32)
-    l = l.astype(jnp.int32)
-    r = (r + 1).astype(jnp.int32)  # make exclusive, as in Listing 2
+    p = ident
+    l = l.astype(coord)
+    r = (r + 1).astype(coord)  # make exclusive, as in Listing 2
     done = jnp.array(False)
 
     def level_arrays(level: int):
         if level == 0:
-            return base, (None if upper_pos is None else None), plan.n
+            return base, None, plan.n
         off, padded = plan.level_slice(level)
         vals = jax.lax.slice(upper, (off,), (off + padded,))
         pos = (
@@ -154,6 +191,7 @@ def _rmq_single(
     for level in range(plan.num_levels):
         arr, pos_arr, _ = level_arrays(level)
         is_last = level == plan.num_levels - 1
+        ex_src = base if (exact and level > 0) else None
 
         if is_last:
             stop_here = ~done
@@ -163,27 +201,36 @@ def _rmq_single(
         # --- stop-level scan -------------------------------------------
         if is_last:
             # Scan the whole (small) top level, masked to [l, r).
-            idx = jnp.arange(arr.shape[0], dtype=jnp.int32)
+            idx = jnp.arange(arr.shape[0], dtype=coord)
             mask = stop_here & (idx >= l) & (idx < r)
-            masked = jnp.where(mask, arr, inf)
-            sm = jnp.min(masked)
-            if track_pos:
-                if pos_arr is None:
-                    pos = idx
-                else:
-                    pos = pos_arr
-                cand = jnp.where(mask & (masked == sm), pos, _POS_INF_I32)
-                sp = jnp.min(cand).astype(jnp.int32)
+            masked = jnp.where(mask, arr, jnp.array(jnp.inf, arr.dtype))
+            smq = jnp.min(masked)
+            if ex_src is not None:
+                tied = mask & (masked == smq)
+                safe = jnp.clip(pos_arr, 0, ex_src.shape[0] - 1)
+                ex = jnp.where(tied, ex_src[safe], inf)
+                sm = jnp.min(ex)
+                cand = jnp.where(tied & (ex == sm), pos_arr, ident)
+                sp = jnp.min(cand).astype(coord)
             else:
-                sp = jnp.array(_POS_INF_I32, dtype=jnp.int32)
+                sm = smq
+                if track:
+                    if pos_arr is None:
+                        pos = idx
+                    else:
+                        pos = pos_arr
+                    cand = jnp.where(mask & (masked == sm), pos, ident)
+                    sp = jnp.min(cand).astype(coord)
+                else:
+                    sp = ident
         else:
             # r - l <= 2c here, so a 2c window starting at l covers [l, r).
             sm, sp = _masked_window_scan(
                 arr, pos_arr, l, l, jnp.where(stop_here, r, l), 2 * c,
-                track_pos,
+                track, coord=coord, exact_src=ex_src,
             )
         m, p = _merge(m, p, jnp.where(stop_here, sm, inf),
-                      jnp.where(stop_here, sp, _POS_INF_I32))
+                      jnp.where(stop_here, sp, ident))
         done = done | stop_here
 
         if is_last:
@@ -197,17 +244,17 @@ def _rmq_single(
         # Left partial chunk: [l, next_l) ⊂ [next_l - c, next_l).
         lm, lp = _masked_window_scan(
             arr, pos_arr, next_l - c, l, jnp.where(advance, next_l, l),
-            c, track_pos,
+            c, track, coord=coord, exact_src=ex_src,
         )
         # Right partial chunk: [prev_r, r) ⊂ [prev_r, prev_r + c).
         rm, rp = _masked_window_scan(
             arr, pos_arr, prev_r, jnp.where(advance, prev_r, r), r,
-            c, track_pos,
+            c, track, coord=coord, exact_src=ex_src,
         )
         m, p = _merge(m, p, jnp.where(advance, lm, inf),
-                      jnp.where(advance, lp, _POS_INF_I32))
+                      jnp.where(advance, lp, ident))
         m, p = _merge(m, p, jnp.where(advance, rm, inf),
-                      jnp.where(advance, rp, _POS_INF_I32))
+                      jnp.where(advance, rp, ident))
 
         l = jnp.where(advance, next_l // c, l)
         r = jnp.where(advance, prev_r // c, r)
@@ -215,16 +262,30 @@ def _rmq_single(
     return m, p
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "track_pos"))
-def _rmq_batch(plan, base, upper, upper_pos, ls, rs, track_pos: bool = True):
+def _rmq_batch_impl(plan, base, upper, upper_pos, ls, rs, track_pos: bool):
+    """Un-jitted batch walk body (reused inside other jitted lowerings).
+
+    Packed position planes are unpacked once per batch, outside the
+    per-query vmap, so the transient absolute plane is shared by every
+    lane of the launch.
+    """
+    upper_pos = bitpack.resolve_positions(upper_pos, plan)
     fn = functools.partial(_rmq_single, plan, base, upper, upper_pos,
                            track_pos=track_pos)
     return jax.vmap(lambda l, r: fn(l=l, r=r))(ls, rs)
 
 
+@functools.partial(jax.jit, static_argnames=("plan", "track_pos"))
+def _rmq_batch(plan, base, upper, upper_pos, ls, rs, track_pos: bool = True):
+    return _rmq_batch_impl(plan, base, upper, upper_pos, ls, rs, track_pos)
+
+
 def rmq_value_batch(h: Hierarchy, ls: jax.Array, rs: jax.Array) -> jax.Array:
     """``RMQ_value`` for a batch of inclusive ranges."""
-    m, _ = _rmq_batch(h.plan, h.base, h.upper, None, ls, rs, track_pos=False)
+    # bf16 summaries need the position plane even for value queries (the
+    # exact re-compare reads level 0 through stored positions).
+    pos = h.upper_pos if h.upper.dtype != h.base.dtype else None
+    m, _ = _rmq_batch(h.plan, h.base, h.upper, pos, ls, rs, track_pos=False)
     return m
 
 

@@ -18,12 +18,23 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.hierarchy import Hierarchy, _pad_to, pos_dtype_for
-from repro.core.plan import HierarchyPlan
+from repro.core.constants import PAD_POS
+from repro.core.hierarchy import (
+    Hierarchy,
+    _check_compact_build,
+    _pad_to,
+    finalize_compact,
+    pos_dtype_for,
+)
+from repro.core.plan import HierarchyPlan, make_plan
 from repro.kernels import profiling
 from repro.kernels.hierarchy_fused import kernel as K
 
-__all__ = ["build_hierarchy_fused", "FUSED_VMEM_BUDGET_BYTES"]
+__all__ = [
+    "build_hierarchy_fused",
+    "build_hierarchy_streamed",
+    "FUSED_VMEM_BUDGET_BYTES",
+]
 
 # The upper buffer lives wholly in VMEM for the launch (~16 MiB/core on
 # current TPUs); leave headroom for the double-buffered input tile.  With
@@ -97,16 +108,18 @@ def build_hierarchy_fused(
     interpret: bool | None = None,
 ) -> Hierarchy:
     """Single-launch fused build (paper §4.1, all levels in one pass)."""
+    from repro.core.protocol import check_capacity_limit
+
     if interpret is None:
         interpret = not _on_tpu()
+    _check_compact_build(plan, with_positions, jnp.asarray(x).dtype)
     if plan.num_levels == 1:
-        return _single_level_jit(x, plan, with_positions)
-    if with_positions and plan.padded_lens[0] * plan.c >= 2**31:
-        # The kernel synthesizes absolute level-0 positions in int32.
-        raise NotImplementedError(
-            "the fused build supports position-tracking capacities < 2**31;"
-            " use backend='jax' for larger arrays"
-        )
+        return finalize_compact(_single_level_jit(x, plan, with_positions))
+    if with_positions:
+        # The kernel synthesizes absolute level-0 positions in int32 over
+        # the tile-aligned input extent; x64 does not help here — route
+        # larger arrays through backend='jax' or the streamed build.
+        check_capacity_limit(plan.padded_lens[0] * plan.c)
     x = jnp.asarray(x)
     tile_out = _pick_tile_out(plan.padded_lens[0])
     if not interpret:
@@ -123,4 +136,168 @@ def build_hierarchy_fused(
                 f"(budget {FUSED_VMEM_BUDGET_BYTES}); use the per-level "
                 "backend='pallas' for this geometry"
             )
-    return _fused_jit(x, plan, with_positions, tile_out, interpret)
+    return finalize_compact(
+        _fused_jit(x, plan, with_positions, tile_out, interpret)
+    )
+
+
+# --------------------------------------------------------------------------
+# Out-of-core construction: stream fixed-size segments through the fused
+# kernel, then finish the (tiny) levels >= 2 from the assembled level 1.
+# --------------------------------------------------------------------------
+
+
+def _segment_plan(segment_size: int, c: int) -> HierarchyPlan:
+    """A two-level plan covering exactly one ``segment_size`` slab.
+
+    ``t = ceil(S / c^2)`` makes level 1 (``S/c`` entries) the top level:
+    each fused launch reduces its slab to chunk minima and stops, so the
+    slab's VMEM footprint is ``S/c`` entries — independent of the full
+    array's size.
+    """
+    t = max(1, -(-segment_size // (c * c)))
+    seg = make_plan(segment_size, c=c, t=t)
+    if seg.num_levels != 2 or seg.level_lens[1] * c != segment_size:
+        raise AssertionError(
+            f"segment plan for S={segment_size}, c={c} is not a clean "
+            f"two-level reduction (levels={seg.num_levels})"
+        )
+    return seg
+
+
+def _read_segment(source, start: int, stop: int):
+    """One slab of input values: callable ``source(start, stop)`` or any
+    sliceable array-like (memmap, numpy, jax array)."""
+    if callable(source):
+        return jnp.asarray(source(start, stop))
+    return jnp.asarray(source[start:stop])
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "with_positions"))
+def _finish_from_level1(base, l1_vals, l1_pos, plan, with_positions):
+    """Replay the oracle's reduction loop from level 2 upward.
+
+    ``l1_vals``/``l1_pos`` are level 1's live entries (``level_lens[1]``
+    of them, positions absolute) exactly as the oracle would have stored
+    them; everything above is bit-for-bit the
+    :func:`repro.core.hierarchy.build_hierarchy` loop, so the streamed
+    build inherits the oracle's full parity contract (padding, leftmost
+    ties, compact finalization).
+    """
+    c = plan.c
+    inf = jnp.array(jnp.inf, base.dtype)
+    upper = jnp.full((plan.upper_size,), jnp.inf, dtype=base.dtype)
+    upper = jax.lax.dynamic_update_slice(upper, l1_vals, (plan.offsets[0],))
+    if with_positions:
+        pos_dtype = l1_pos.dtype
+        pad = jnp.array(PAD_POS, pos_dtype)
+        upper_pos = jnp.full((plan.upper_size,), PAD_POS, dtype=pos_dtype)
+        upper_pos = jax.lax.dynamic_update_slice(
+            upper_pos, l1_pos, (plan.offsets[0],)
+        )
+    else:
+        upper_pos = None
+    cur_v, cur_p = l1_vals, l1_pos
+    for k in range(2, plan.num_levels):
+        want = plan.level_lens[k] * c
+        v = _pad_to(cur_v, want, inf).reshape(-1, c)
+        idx = jnp.argmin(v, axis=1)
+        nxt_v = jnp.take_along_axis(v, idx[:, None], axis=1)[:, 0]
+        off = plan.offsets[k - 1]
+        upper = jax.lax.dynamic_update_slice(upper, nxt_v, (off,))
+        if with_positions:
+            p = _pad_to(cur_p, want, pad).reshape(-1, c)
+            nxt_p = jnp.take_along_axis(p, idx[:, None], axis=1)[:, 0]
+            upper_pos = jax.lax.dynamic_update_slice(
+                upper_pos, nxt_p, (off,)
+            )
+            cur_p = nxt_p
+        cur_v = nxt_v
+    return finalize_compact(
+        Hierarchy(base=base, upper=upper, upper_pos=upper_pos, plan=plan)
+    )
+
+
+def build_hierarchy_streamed(
+    source,
+    plan: HierarchyPlan,
+    with_positions: bool = False,
+    segment_size: int | None = None,
+    interpret: bool | None = None,
+) -> Hierarchy:
+    """Out-of-core fused construction: one slab at a time.
+
+    The monolithic fused build keeps the whole upper buffer VMEM-resident,
+    which caps the capacities it admits.  This path streams fixed-size
+    segments (``segment_size`` elements, a multiple of ``c``) through the
+    fused kernel — each launch's working set is one slab plus its ``S/c``
+    chunk minima — assembles the global level 1, and finishes the
+    geometrically smaller levels >= 2 with the pure-JAX oracle loop.
+
+    ``source`` is either a sliceable array-like (numpy memmap, array) or
+    a callable ``source(start, stop) -> values`` producing slabs on
+    demand, so the input never has to exist as one device array during
+    level-1 construction.  Under x64, position-tracking builds past
+    ``2**31`` elements get an int64 coordinate plane; without x64 they
+    raise (the strict ``pos_dtype_for`` guard).
+
+    The result is bit-identical to ``build_hierarchy(x, plan, ...)`` —
+    values, leftmost-tie positions, padding, and any compact layout
+    (``packed_pos`` / bf16 summaries) the plan selects.
+    """
+    c = plan.c
+    cap = plan.capacity
+    n = plan.n
+    if segment_size is None:
+        segment_size = min(c * 4096, -(-cap // c) * c)
+        segment_size = max(segment_size, 2 * c)
+    if segment_size % c != 0 or segment_size < 2 * c:
+        raise ValueError(
+            f"segment_size must be a multiple of c={c} and >= {2 * c}, "
+            f"got {segment_size}"
+        )
+    probe = _read_segment(source, 0, min(n, segment_size))
+    _check_compact_build(plan, with_positions, probe.dtype)
+    if plan.num_levels == 1:
+        # Pure-scan plans have no level 1 to assemble; the monolithic
+        # path is already out-of-core-trivial.
+        full = probe if probe.shape[0] >= n else _read_segment(source, 0, n)
+        return build_hierarchy_fused(
+            full, plan, with_positions, interpret=interpret,
+        )
+    # Strict: raises without x64 past 2**31 instead of wrapping silently.
+    coord = pos_dtype_for(cap) if with_positions else None
+    seg_plan = _segment_plan(segment_size, c)
+    m_seg = segment_size // c
+    l1_len = plan.level_lens[1]
+    inf = jnp.array(jnp.inf, probe.dtype)
+
+    nseg = -(-cap // segment_size)
+    base_parts, v_parts, p_parts = [], [], []
+    for i in range(nseg):
+        s0 = i * segment_size
+        stop = min(s0 + segment_size, n)
+        if i == 0:
+            seg = probe
+        elif s0 < n:
+            seg = _read_segment(source, s0, stop)
+        else:
+            seg = jnp.full((0,), jnp.inf, probe.dtype)
+        seg = _pad_to(seg.astype(probe.dtype), segment_size, inf)
+        h_seg = build_hierarchy_fused(
+            seg, seg_plan, with_positions=with_positions,
+            interpret=interpret,
+        )
+        base_parts.append(h_seg.base)
+        v_parts.append(h_seg.upper[:m_seg])
+        if with_positions:
+            # Segment positions are slab-local int32; globalize in the
+            # coordinate dtype BEFORE offsetting (no int32 wrap).
+            p_parts.append(h_seg.upper_pos[:m_seg].astype(coord) + s0)
+
+    base = jnp.concatenate(base_parts)[:cap]
+    l1_vals = jnp.concatenate(v_parts)[:l1_len]
+    l1_pos = (
+        jnp.concatenate(p_parts)[:l1_len] if with_positions else None
+    )
+    return _finish_from_level1(base, l1_vals, l1_pos, plan, with_positions)

@@ -36,13 +36,6 @@ def _propagate_pallas(
 ):
     c = plan.c
     cap = plan.capacity
-    if cap >= 2**31:
-        # The level-0 kernel synthesizes absolute positions in int32;
-        # such arrays must use the pure-JAX update path (x64).
-        raise NotImplementedError(
-            "Pallas hierarchy updates support capacity < 2**31; use "
-            "backend='jax' for larger arrays"
-        )
     track = upper_pos is not None
     idxs = idxs.astype(jnp.int32)
     # Same out-of-range sanitization as the pure-JAX oracle: dropped
@@ -120,6 +113,17 @@ def _append_jit(h, vals, start, interpret):
                      plan=h.plan)
 
 
+def _jax_path_only(h: Hierarchy) -> bool:
+    """Layouts the per-level kernel cannot re-reduce in place.
+
+    Packed planes store chunk-local bit fields (the kernel writes
+    absolute positions) and bf16 summaries need the exact level-0
+    recompare; both route through the pure-JAX oracle, which handles
+    them natively — same bit-identical contract, different lowering.
+    """
+    return bool(h.plan.packed_pos) or h.upper.dtype != h.base.dtype
+
+
 def update_hierarchy_pallas(
     h: Hierarchy,
     idxs: jax.Array,
@@ -127,6 +131,15 @@ def update_hierarchy_pallas(
     interpret: bool = None,
 ) -> Hierarchy:
     """Batched point updates with Pallas chunk re-reductions."""
+    from repro.core.protocol import check_capacity_limit
+
+    # The level-0 kernel synthesizes absolute positions in int32; larger
+    # capacities must use the pure-JAX update path (x64).
+    check_capacity_limit(h.plan.capacity)
+    if _jax_path_only(h):
+        from repro.streaming import updates as U
+
+        return U.update_hierarchy(h, idxs, vals)
     if interpret is None:
         interpret = not _on_tpu()
     return _update_jit(h, idxs, vals, interpret)
@@ -139,6 +152,13 @@ def append_hierarchy_pallas(
     interpret: bool = None,
 ) -> Hierarchy:
     """Append ``vals`` at ``start`` with Pallas chunk re-reductions."""
+    from repro.core.protocol import check_capacity_limit
+
+    check_capacity_limit(h.plan.capacity)
+    if _jax_path_only(h):
+        from repro.streaming import updates as U
+
+        return U.append_hierarchy(h, vals, start)
     if interpret is None:
         interpret = not _on_tpu()
     return _append_jit(h, vals, start, interpret)

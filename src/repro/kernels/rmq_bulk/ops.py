@@ -37,6 +37,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import bitpack
 from repro.core.baselines import SparseTable
 from repro.core.constants import POS_INF_I32 as _POS_INF_I32
 from repro.core.hierarchy import Hierarchy
@@ -80,6 +81,8 @@ def _bulk_jnp(base, upper, upper_pos, ls, rs, plan, track_pos):
     logc = c.bit_length() - 1  # c is a power of two
     inf = jnp.array(jnp.inf, dtype=base.dtype)
     pos_inf = jnp.int32(_POS_INF_I32)
+    # Packed planes unpack to absolute positions inside this same program.
+    upper_pos = bitpack.resolve_positions(upper_pos, plan)
 
     # -- the shared per-chunk sparse ladder (the one level-0 read) --------
     # ladder[j][row, i] = min(chunk_row[i : i + 2^j]) clipped to the chunk
@@ -233,6 +236,7 @@ def _run_kernel(base, upper, upper_pos, ls, rs, plan, qb, track_pos,
     if m_pad != m:
         ls = jnp.pad(ls, (0, m_pad - m))
         rs = jnp.pad(rs, (0, m_pad - m))
+    upper_pos = bitpack.resolve_positions(upper_pos, plan)
     upper2d = upper.reshape(-1, plan.c)
     upos2d = upper_pos.reshape(-1, plan.c) if track_pos else None
     offs = jnp.asarray(plan.offsets, jnp.int32)
@@ -276,6 +280,11 @@ def rmq_bulk_batch(
         raise ValueError(
             "hierarchy was built without positions; "
             "use build_hierarchy(..., with_positions=True)"
+        )
+    if h.upper.dtype != h.base.dtype:
+        raise ValueError(
+            "the bulk path does not support bf16 summaries; route bf16 "
+            "indexes through the engine's walk/fused paths instead"
         )
     plan = h.plan
     use_kernel = _kernel_applicable(plan) and (

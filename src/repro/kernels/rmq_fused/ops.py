@@ -33,10 +33,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import bitpack
 from repro.core.baselines import SparseTable
 from repro.core.hierarchy import Hierarchy
 from repro.core.hybrid import _hybrid_batch
 from repro.core.plan import HierarchyPlan
+from repro.core.query import _rmq_batch_impl
 from repro.kernels import profiling
 from repro.kernels.rmq_fused import kernel as K
 
@@ -67,6 +69,13 @@ def _fused_jnp(base, upper, upper_pos, ls, rs, plan, track_pos):
         operand_bytes=profiling.operand_bytes(
             base, upper, upper_pos, ls, rs),
     )
+    if upper.dtype != base.dtype:
+        # bf16 summaries: the hybrid algebra's sparse top would compare
+        # quantized values, so the one dispatch is the exact-recovery
+        # walk instead — same single-launch contract, exact results.
+        return _rmq_batch_impl(plan, base, upper, upper_pos, ls, rs,
+                               track_pos)
+    upper_pos = bitpack.resolve_positions(upper_pos, plan)
     if plan.num_levels == 1:
         top = base  # the plan is a pure scan; the top level IS level 0
         top_pos = (
@@ -109,6 +118,9 @@ def _run_kernel(base, upper, upper_pos, ls, rs, plan, qb, track_pos,
     if m_pad != m:
         ls = jnp.pad(ls, (0, m_pad - m))
         rs = jnp.pad(rs, (0, m_pad - m))
+    # Packed planes unpack to absolute positions inside this same
+    # program; the kernel always consumes the classic (rows, c) layout.
+    upper_pos = bitpack.resolve_positions(upper_pos, plan)
     upper2d = upper.reshape(-1, plan.c)
     upos2d = upper_pos.reshape(-1, plan.c) if track_pos else None
     offs = jnp.asarray(plan.offsets, jnp.int32)
@@ -154,7 +166,8 @@ def rmq_fused_batch(
             "use build_hierarchy(..., with_positions=True)"
         )
     plan = h.plan
-    use_kernel = _kernel_applicable(plan) and (
+    quantized = h.upper.dtype != h.base.dtype
+    use_kernel = _kernel_applicable(plan) and not quantized and (
         _on_tpu() if interpret is None else bool(interpret) or _on_tpu()
     )
     if use_kernel:
@@ -163,8 +176,11 @@ def rmq_fused_batch(
             h.base, h.upper, h.upper_pos if track_pos else None,
             ls, rs, plan, qb, track_pos, itp,
         )
+    # bf16 summaries need the position plane even for value-only batches
+    # (exact recovery reads level 0 through stored positions).
+    pos_plane = h.upper_pos if (track_pos or quantized) else None
     return _fused_jnp(
-        h.base, h.upper, h.upper_pos if track_pos else None,
+        h.base, h.upper, pos_plane,
         ls, rs, plan, track_pos,
     )
 

@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import bitpack
 from repro.core.hierarchy import Hierarchy
 from repro.core.query import rmq_index_batch, rmq_value_batch
 from repro.kernels import profiling
@@ -46,6 +47,9 @@ def _run(base, upper, upper_pos, ls, rs, plan, qb, track_pos, interpret):
     if m_pad != m:
         ls = jnp.pad(ls, (0, m_pad - m))
         rs = jnp.pad(rs, (0, m_pad - m))
+    # Packed planes unpack to absolute positions inside this same
+    # program; the kernel always consumes the classic (rows, c) layout.
+    upper_pos = bitpack.resolve_positions(upper_pos, plan)
     upper2d = upper.reshape(-1, plan.c)
     upos2d = (
         upper_pos.reshape(-1, plan.c) if track_pos else None
@@ -73,7 +77,9 @@ def rmq_value_batch_pallas(
     qb: int = K.DEFAULT_QUERY_BLOCK,
     interpret: bool | None = None,
 ) -> jax.Array:
-    if not _kernel_applicable(h):
+    if not _kernel_applicable(h) or h.upper.dtype != h.base.dtype:
+        # bf16 summaries need the exact-recovery walk; the scan kernel
+        # compares quantized values only.
         return rmq_value_batch(h, ls, rs)
     if interpret is None:
         interpret = not _on_tpu()
@@ -92,7 +98,7 @@ def rmq_index_batch_pallas(
 ) -> jax.Array:
     if not h.with_positions:
         raise ValueError("hierarchy built without positions")
-    if not _kernel_applicable(h):
+    if not _kernel_applicable(h) or h.upper.dtype != h.base.dtype:
         return rmq_index_batch(h, ls, rs)
     if interpret is None:
         interpret = not _on_tpu()

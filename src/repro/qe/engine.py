@@ -49,7 +49,12 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.protocol import is_distributed, live_length, runtime_backend
+from repro.core.protocol import (
+    check_capacity_limit,
+    is_distributed,
+    live_length,
+    runtime_backend,
+)
 from repro.core.query import check_query_args
 from repro.kernels.profiling import record_config
 from repro.obs import trace
@@ -68,6 +73,13 @@ from repro.qe.executors import (
 from repro.qe.planner import FUSED, LONG, MID, SHORT, QueryPlanner
 
 __all__ = ["QueryEngine"]
+
+
+def _quantized(index) -> bool:
+    """Does ``index`` store bf16 value summaries (exact-recovery walks)?"""
+    return (
+        getattr(index.plan, "summary_dtype", "float32") == "bfloat16"
+    )
 
 
 class QueryEngine:
@@ -176,12 +188,16 @@ class QueryEngine:
             long_cutoff = self._long_cutoff
             if source != "default":
                 source += "+override"
+        # bf16 summaries: the long-span hybrid's sparse-table top would
+        # compare quantized values (HybridRMQ refuses to build one);
+        # long spans route through the exact mid-span walk instead.
+        long_ok = not _quantized(index)
         return {
             "backend": self.backend,
             "planner": "fused" if self.backend == "fused" else "routed",
             "long_cutoff": long_cutoff,
             "scan_chunks": scan_chunks,
-            "long_enabled": self._long_enabled and sparse_top,
+            "long_enabled": self._long_enabled and sparse_top and long_ok,
             "source": source,
         }
 
@@ -289,17 +305,12 @@ class QueryEngine:
             self.cache.clear()
         plan = index.plan
         # Query bounds/positions flow through int32 index space (planner
-        # packing, the short kernel's iota, the hybrid top, and the core
-        # walk's window math alike).  Refuse loudly rather than wrap.
-        # ``capacity`` is the total addressable space — for sharded
-        # indices that is segments * per-segment capacity, not the
-        # (per-segment) plan's.
-        if index.capacity >= 2**31:
-            raise ValueError(
-                f"capacity {index.capacity} exceeds the int32 query index "
-                "space; the batched query engine (and the underlying "
-                "query kernels) support capacity < 2**31"
-            )
+        # packing, the short kernel's iota, and the bucket packing's
+        # numpy arithmetic alike — x64 does not lift this path).  Refuse
+        # loudly rather than wrap.  ``capacity`` is the total addressable
+        # space — for sharded indices that is segments * per-segment
+        # capacity, not the (per-segment) plan's.
+        check_capacity_limit(index.capacity)
         if is_distributed(index):
             # Sharded index: routing is by segment containment, not span
             # class — the planner and span executors never run.
@@ -411,7 +422,12 @@ class QueryEngine:
         ls, rs = check_query_args(ls, rs, n)
         ls = np.asarray(ls, np.int32).ravel()
         rs = np.asarray(rs, np.int32).ravel()
-        if ls.shape[0] < self.bulk_crossover:
+        if ls.shape[0] < self.bulk_crossover or (
+            self.distributed is None and _quantized(index)
+        ):
+            # bf16 summaries: the coalesced bulk sweep compares quantized
+            # level-1 values with no exact-recovery pass, so bf16 indexes
+            # always take the routed path (whose walks re-read level 0).
             return self._execute(ls, rs, op)
         self.batches += 1
         self.queries_in += ls.shape[0]

@@ -80,12 +80,18 @@ class StreamingRMQ:
         with_positions: bool = False,
         backend: str = "auto",
         plan: Optional[HierarchyPlan] = None,
+        packed_pos: Optional[bool] = None,
+        summary_dtype: Optional[str] = None,
     ) -> "StreamingRMQ":
         """Build over ``x``, reserving ``capacity`` slots for appends.
 
         Construction goes through the shared pipeline
         (``protocol.build_hierarchy_with_backend``): ``backend='fused'``
         builds the whole hierarchy in one kernel launch.
+
+        ``packed_pos`` / ``summary_dtype`` select the compact plane
+        layouts (see ``make_plan``); incremental updates/appends/retires
+        maintain both bit-identically to a fresh build.
         """
         x = px.coerce_values(x)
         n = int(x.shape[0])
@@ -95,7 +101,10 @@ class StreamingRMQ:
                 "supplying an explicit plan"
             )
         if plan is None:
-            plan = make_plan(n, c=c, t=t, capacity=capacity)
+            plan = make_plan(
+                n, c=c, t=t, capacity=capacity,
+                packed_pos=packed_pos, summary_dtype=summary_dtype,
+            )
         backend = px.resolve_backend(backend)
         h = px.build_hierarchy_with_backend(
             x, plan, with_positions=with_positions, backend=backend

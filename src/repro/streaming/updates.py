@@ -33,6 +33,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import bitpack
 from repro.core.constants import PAD_POS as _PAD_POS
 from repro.core.hierarchy import Hierarchy, pos_dtype_for
 from repro.core.plan import HierarchyPlan
@@ -43,13 +44,13 @@ __all__ = ["update_hierarchy", "append_hierarchy", "index_dtype_for"]
 def index_dtype_for(capacity: int) -> jnp.dtype:
     """Dtype able to address every element index below ``capacity``.
 
-    int64 only helps when x64 is enabled; without it an int64 request
-    would silently downcast, so stay on int32 (indices >= 2**31 cannot be
-    represented by the caller in that mode anyway).
+    Delegates to the canonical :func:`repro.core.hierarchy.pos_dtype_for`
+    in its non-strict mode: int64 only helps when x64 is enabled; without
+    it an int64 request would silently downcast, so stay on int32
+    (indices >= 2**31 cannot be represented by the caller in that mode
+    anyway).
     """
-    if capacity >= 2**31 and jax.config.x64_enabled:
-        return jnp.int64
-    return jnp.int32
+    return pos_dtype_for(capacity, strict=False)
 
 
 def scatter_base(
@@ -139,6 +140,31 @@ def touched_chunk_ids(
     return jnp.unique(ids, size=ids.shape[0], fill_value=0)
 
 
+def _exact_recompare(v: jax.Array, p_abs: jax.Array, live: jax.Array,
+                     base: jax.Array):
+    """Row-wise winner over quantized ``(B, c)`` windows, decided exactly.
+
+    ``v`` holds bf16 summaries, so its row argmin can pick the wrong
+    leftmost entry.  Every *live* lane tied at the quantized row min is
+    re-read exactly from level 0 through its absolute position; the exact
+    values (with position as tie-break, and lanes ascend in position)
+    pick the true leftmost minimum.  Returns ``(row_min_quantized,
+    winner_position, winner_lane)``.
+    """
+    inf_q = jnp.array(jnp.inf, dtype=v.dtype)
+    mq = jnp.min(jnp.where(live, v, inf_q), axis=1, keepdims=True)
+    tied = live & (v == mq)
+    safe = jnp.clip(p_abs, 0, base.shape[0] - 1)
+    ex = jnp.where(tied, base[safe], jnp.array(jnp.inf, dtype=base.dtype))
+    m = jnp.min(ex, axis=1, keepdims=True)
+    win = tied & (ex == m)
+    am = jnp.argmax(win, axis=1).astype(jnp.int32)  # leftmost winner
+    nv = mq[:, 0]
+    np_ = jnp.take_along_axis(p_abs, am[:, None].astype(p_abs.dtype),
+                              axis=1)[:, 0]
+    return nv, np_, am
+
+
 def propagate_updates(
     plan: HierarchyPlan,
     base: jax.Array,
@@ -148,7 +174,12 @@ def propagate_updates(
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Re-reduce every chunk on the root-to-leaf paths of ``idxs``.
 
-    ``base`` must already hold the new level-0 values.
+    ``base`` must already hold the new level-0 values.  Handles all four
+    plane layouts: classic (absolute positions, exact values), packed
+    positions (the per-level argmin *is* the chunk-local offset, written
+    back with a wrapping-delta field scatter), bf16 summaries (winners at
+    levels >= 2 are re-decided exactly against level 0 — see
+    :func:`_exact_recompare`), and both at once.
     """
     c = plan.c
     idxs = idxs.astype(index_dtype_for(plan.capacity))
@@ -158,16 +189,71 @@ def propagate_updates(
     # *different* level's region of the contiguous upper buffer).
     idxs = jnp.where((idxs >= 0) & (idxs < plan.capacity), idxs, 0)
     ids = idxs // c
+    packed = upper_pos is not None and plan.packed_pos
+    quantized = upper.dtype != base.dtype
+    if not packed and not quantized:
+        for level in range(1, plan.num_levels):
+            ids = touched_chunk_ids(ids, plan.level_lens[level])
+            v, p = _level_sources(plan, base, upper, upper_pos, level, ids)
+            nv, np_ = _reduce_windows(v, p)
+            off = plan.offsets[level - 1]
+            # ids are unique (apart from idempotent fill duplicates), so
+            # the scatter is conflict-free.
+            upper = upper.at[off + ids].set(nv)
+            if upper_pos is not None:
+                upper_pos = upper_pos.at[off + ids].set(np_)
+            ids = ids // c
+        return upper, upper_pos
+
+    bits = bitpack.pos_bits(c)
+    coord = pos_dtype_for(plan.capacity, strict=False)
+    lane_off = jnp.arange(c, dtype=jnp.int32)[None, :]
     for level in range(1, plan.num_levels):
         ids = touched_chunk_ids(ids, plan.level_lens[level])
-        v, p = _level_sources(plan, base, upper, upper_pos, level, ids)
-        nv, np_ = _reduce_windows(v, p)
         off = plan.offsets[level - 1]
-        # ids are unique (apart from idempotent fill duplicates), so the
-        # scatter is conflict-free.
-        upper = upper.at[off + ids].set(nv)
-        if upper_pos is not None:
-            upper_pos = upper_pos.at[off + ids].set(np_)
+        # Fill duplicates from the static-size dedupe are idempotent for
+        # plain value/position scatters but NOT for the packed delta
+        # scatter — mask every repeat of chunk 0 past lane 0 (a genuine 0
+        # sorts first in `jnp.unique`'s output; the dense arange fast
+        # path keeps its single 0 at lane 0).
+        lanes = jnp.arange(ids.shape[0], dtype=ids.dtype)
+        first = (ids != 0) | (lanes == 0)
+        gather = ids[:, None] * c + lane_off.astype(ids.dtype)
+        if level == 1:
+            # Level 0 is exact regardless of summary dtype.
+            v = jnp.take(base, gather, mode="fill", fill_value=float("inf"))
+            am = jnp.argmin(v, axis=1).astype(jnp.int32)
+            nv = jnp.take_along_axis(v, am[:, None], axis=1)[:, 0]
+            sel = jnp.take_along_axis(gather, am[:, None].astype(ids.dtype),
+                                      axis=1)[:, 0]
+            np_ = jnp.where(sel < plan.capacity, sel,
+                            _PAD_POS).astype(coord)
+        elif not quantized:
+            # Packed, exact values: argmin over exact summaries is the
+            # new chunk-local offset — no child positions needed.
+            v = jnp.take(upper, plan.offsets[level - 2] + gather)
+            am = jnp.argmin(v, axis=1).astype(jnp.int32)
+            nv = jnp.take_along_axis(v, am[:, None], axis=1)[:, 0]
+            np_ = None
+        else:
+            # bf16 summaries: re-decide the winner exactly.
+            poff = plan.offsets[level - 2]
+            v = jnp.take(upper, poff + gather)
+            live = gather < plan.level_lens[level - 1]
+            if packed:
+                p_abs = bitpack.gather_absolute(
+                    upper_pos, plan, level - 1, gather, coord
+                )
+            else:
+                p_abs = jnp.take(upper_pos, poff + gather)
+            nv, np_, am = _exact_recompare(v, p_abs, live, base)
+        upper = upper.at[off + ids].set(nv.astype(upper.dtype))
+        if packed:
+            upper_pos = bitpack.scatter_offsets(
+                upper_pos, off + ids, am, bits, live=first
+            )
+        else:
+            upper_pos = upper_pos.at[off + ids].set(np_.astype(coord))
         ids = ids // c
     return upper, upper_pos
 

@@ -46,7 +46,12 @@ __all__ = [
     "default_cache",
 ]
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+
+# Version 1 predates the compact-layout fields (``packed_pos``,
+# ``summary_dtype``); its entries load with the classic-layout defaults
+# and re-save as version 2.  Anything else fails loudly.
+_READABLE_VERSIONS = (1, SCHEMA_VERSION)
 
 SPAN_MIXES = ("short", "mid", "long", "mixed")
 
@@ -98,6 +103,13 @@ class TunedConfig:
     sparse_top: bool = True
     ns_per_query: Optional[float] = None
     bulk_crossover: Optional[int] = None
+    # schema v2: compact index-plane layouts — bit-packed chunk-local
+    # position planes and bf16 value summaries (see HierarchyPlan).
+    # ``make_plan(..., tuned=True)`` adopts them unless the caller passes
+    # explicit values; the classic-layout defaults keep v1 caches
+    # bit-identical.
+    packed_pos: bool = False
+    summary_dtype: str = "float32"
 
     def __post_init__(self):
         if self.c < 2 or (self.c & (self.c - 1)) != 0:
@@ -120,6 +132,13 @@ class TunedConfig:
             raise ValueError(
                 f"bulk_crossover must be positive, "
                 f"got {self.bulk_crossover}")
+        if not isinstance(self.packed_pos, bool):
+            raise ValueError(
+                f"packed_pos must be a bool, got {self.packed_pos!r}")
+        if self.summary_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"summary_dtype must be 'float32' or 'bfloat16', "
+                f"got {self.summary_dtype!r}")
 
     def level_split(self):
         """The :class:`repro.core.plan.LevelSplit` this config implies."""
@@ -251,10 +270,11 @@ class TuningCache:
                 f"{where}: tuning cache must be a JSON object, "
                 f"got {type(doc).__name__}")
         version = doc.get("schema_version")
-        if version != SCHEMA_VERSION:
+        if version not in _READABLE_VERSIONS:
             raise TuningCacheError(
                 f"{where}: unsupported tuning cache schema_version "
-                f"{version!r} (this build reads version {SCHEMA_VERSION}; "
+                f"{version!r} (this build reads versions "
+                f"{_READABLE_VERSIONS}; "
                 "regenerate with `python -m repro.tune`)")
         entries = doc.get("entries")
         if not isinstance(entries, list):
@@ -289,6 +309,10 @@ class TuningCache:
                     sparse_top=e["sparse_top"],
                     ns_per_query=e.get("ns_per_query"),
                     bulk_crossover=e.get("bulk_crossover"),
+                    # v1 entries predate the compact layouts: classic
+                    # defaults keep their behavior bit-identical.
+                    packed_pos=e.get("packed_pos", False),
+                    summary_dtype=e.get("summary_dtype", "float32"),
                 )
             except ValueError as err:
                 raise TuningCacheError(

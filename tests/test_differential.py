@@ -93,32 +93,37 @@ def _random_spans(rng, n, m):
 # ---------------------------------------------------------------------------
 # index adapters (build / mutate / query through one surface)
 # ---------------------------------------------------------------------------
-def _build_index(kind, backend, x, c, t, cap):
+def _build_index(kind, backend, x, c, t, cap,
+                 packed_pos=None, summary_dtype=None):
+    layout = dict(packed_pos=packed_pos, summary_dtype=summary_dtype)
     if kind == "rmq":
         return RMQ.build(x, c=c, t=t, with_positions=True,
-                         backend=backend, capacity=cap)
+                         backend=backend, capacity=cap, **layout)
     if kind == "streaming":
         return StreamingRMQ.from_array(x, c=c, t=t, with_positions=True,
-                                       backend=backend, capacity=cap)
+                                       backend=backend, capacity=cap,
+                                       **layout)
     if kind == "hybrid":
         # read-only: no capacity reservation; mutations rebuild (below)
         return HybridRMQ.build(x, c=c, t=t, with_positions=True,
-                               backend=backend)
+                               backend=backend, **layout)
     if kind == "distributed":
         mesh = jax.make_mesh((1, 1), ("data", "model"))
         return DistributedRMQ.build(np.asarray(x), mesh, c=c, t=t,
                                     with_positions=True, capacity=cap,
-                                    backend=backend)
+                                    backend=backend, **layout)
     raise ValueError(kind)
 
 
-def _mutate_index(kind, backend, idx, oracle, c, t, idxs, vals, tail):
+def _mutate_index(kind, backend, idx, oracle, c, t, idxs, vals, tail,
+                  packed_pos=None, summary_dtype=None):
     """Apply (update, append) to the index; hybrid rebuilds instead."""
     if kind == "hybrid":
         # the hybrid is read-only by design (a point update can move
         # top-level minima); its differential story is rebuild-per-step
         return HybridRMQ.build(oracle.x, c=c, t=t, with_positions=True,
-                               backend=backend)
+                               backend=backend, packed_pos=packed_pos,
+                               summary_dtype=summary_dtype)
     if idxs.shape[0]:
         idx = idx.update(idxs, vals)
     if tail.shape[0]:
@@ -137,16 +142,19 @@ def _check_parity(idx, oracle, ls, rs):
     )
 
 
-def _run_sequence(kind, backend, *, n, c, t, cap, seed, steps, m=48):
+def _run_sequence(kind, backend, *, n, c, t, cap, seed, steps, m=48,
+                  packed_pos=None, summary_dtype=None):
     """build → (update/append → queries)* against the numpy oracle."""
     rng = np.random.default_rng(seed)
     oracle = NumpyOracle(_tied_values(rng, n))
-    idx = _build_index(kind, backend, oracle.x, c, t, cap)
+    idx = _build_index(kind, backend, oracle.x, c, t, cap,
+                       packed_pos=packed_pos, summary_dtype=summary_dtype)
 
     ls, rs = _random_spans(rng, oracle.n, m)
     _check_parity(idx, oracle, ls, rs)
 
     headroom = cap - n
+    layout = dict(packed_pos=packed_pos, summary_dtype=summary_dtype)
     for step in range(steps):
         nn = oracle.n
         idxs = rng.integers(0, nn, 12)
@@ -160,10 +168,10 @@ def _run_sequence(kind, backend, *, n, c, t, cap, seed, steps, m=48):
             oracle.update(idxs, vals)
             oracle.append(tail)
             idx = _mutate_index(kind, backend, idx, oracle, c, t,
-                                idxs, vals, tail)
+                                idxs, vals, tail, **layout)
         else:
             idx = _mutate_index(kind, backend, idx, oracle, c, t,
-                                idxs, vals, tail)
+                                idxs, vals, tail, **layout)
             oracle.update(idxs, vals)
             oracle.append(tail)
         assert oracle.n == (idx.plan.n if kind == "hybrid"
@@ -235,6 +243,227 @@ class TestDifferentialSweep:
         its coverage is the fixed-geometry sweep above)."""
         _run_sequence(kind, backend, n=n, c=2 ** log_c, t=t,
                       cap=n + headroom, seed=seed, steps=2, m=24)
+
+
+# ---------------------------------------------------------------------------
+# compact plane layouts through the same harness (bit-packed positions,
+# bf16 summaries with exact recovery) — the PR's acceptance sweep
+# ---------------------------------------------------------------------------
+class TestCompactLayoutSweep:
+    """The identical random-op differential, but with the compact index
+    planes switched on: ``packed_pos=True`` (log2(c)-bit chunk-local
+    offsets), ``summary_dtype='bfloat16'`` (half-width upper values with
+    exact level-0 recovery), and both together.  Same oracle, same
+    bit-identical assertion on values AND leftmost-tie positions, same
+    post-update/append staleness coverage — compactness must never move
+    a bit.
+    """
+
+    LAYOUTS = {
+        "packed": dict(packed_pos=True),
+        "bf16": dict(summary_dtype="bfloat16"),
+        "packed_bf16": dict(packed_pos=True, summary_dtype="bfloat16"),
+    }
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("kind", INDEX_KINDS)
+    def test_packed_positions(self, kind, backend):
+        if kind == "distributed":
+            geo = dict(n=257, c=8, t=8, cap=400)
+        else:
+            geo = dict(n=257, c=8, t=2, cap=400)
+        seed = 60 + INDEX_KINDS.index(kind) * 11 + BACKENDS.index(backend)
+        _run_sequence(kind, backend, seed=seed, steps=2,
+                      packed_pos=True, **geo)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("kind", INDEX_KINDS)
+    def test_bf16_exact_recovery(self, kind, backend):
+        if kind == "hybrid":
+            # by design: the sparse-table top would compare quantized
+            # values — the refusal must be loud, not silently lossy
+            with pytest.raises(ValueError, match="bf16"):
+                HybridRMQ.build(np.zeros(300, np.float32), c=8, t=2,
+                                with_positions=True, backend=backend,
+                                summary_dtype="bfloat16")
+            return
+        if kind == "distributed":
+            geo = dict(n=257, c=8, t=8, cap=400)
+        else:
+            geo = dict(n=257, c=8, t=2, cap=400)
+        seed = 70 + INDEX_KINDS.index(kind) * 11 + BACKENDS.index(backend)
+        _run_sequence(kind, backend, seed=seed, steps=2,
+                      summary_dtype="bfloat16", **geo)
+
+    @pytest.mark.parametrize("kind",
+                             ("rmq", "streaming", "distributed"))
+    def test_packed_and_bf16_together(self, kind):
+        """Both compactions at once, on the coordinate-exact jax walk."""
+        if kind == "distributed":
+            geo = dict(n=257, c=8, t=8, cap=400)
+        else:
+            geo = dict(n=257, c=8, t=2, cap=400)
+        seed = 80 + INDEX_KINDS.index(kind)
+        _run_sequence(kind, "jax", seed=seed, steps=2,
+                      packed_pos=True, summary_dtype="bfloat16", **geo)
+
+    def test_packed_plane_is_bitwise_classic(self):
+        """Not just query parity: the packed plane must UNPACK to the
+        classic absolute plane word-for-word — after build and after
+        mutations."""
+        from repro.core import bitpack
+
+        rng = np.random.default_rng(90)
+        x = _tied_values(rng, 300)
+        classic = RMQ.build(x, c=8, t=2, with_positions=True,
+                            backend="jax", capacity=400)
+        packed = RMQ.build(x, c=8, t=2, with_positions=True,
+                           backend="jax", capacity=400, packed_pos=True)
+        assert packed.hierarchy.upper_pos.dtype == jnp.uint32
+        np.testing.assert_array_equal(
+            np.asarray(bitpack.resolve_positions(
+                packed.hierarchy.upper_pos, packed.plan)),
+            np.asarray(classic.hierarchy.upper_pos),
+        )
+        idxs = rng.integers(0, 300, 16).astype(np.int32)
+        vals = _tied_values(rng, 16)
+        tail = _tied_values(rng, 40)
+        classic = classic.update(idxs, vals).append(tail)
+        packed = packed.update(idxs, vals).append(tail)
+        np.testing.assert_array_equal(
+            np.asarray(bitpack.resolve_positions(
+                packed.hierarchy.upper_pos, packed.plan)),
+            np.asarray(classic.hierarchy.upper_pos),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(packed.hierarchy.upper),
+            np.asarray(classic.hierarchy.upper),
+        )
+
+    def test_bf16_plane_really_is_bf16(self):
+        """The compact build must actually store bf16 upper values (and
+        the packed plane must actually be smaller) — guards against a
+        silently-classic build passing the parity sweep."""
+        rng = np.random.default_rng(91)
+        x = _tied_values(rng, 700)
+        r = RMQ.build(x, c=8, t=2, with_positions=True, backend="jax",
+                      packed_pos=True, summary_dtype="bfloat16")
+        assert r.hierarchy.upper.dtype == jnp.bfloat16
+        assert r.hierarchy.base.dtype == jnp.float32  # level 0 stays exact
+        assert r.hierarchy.upper_pos.dtype == jnp.uint32
+        classic = RMQ.build(x, c=8, t=2, with_positions=True,
+                            backend="jax")
+        assert (r.hierarchy.upper_pos.size
+                < classic.hierarchy.upper_pos.size)
+        assert r.plan.auxiliary_bytes_planned(True) \
+            < classic.plan.auxiliary_bytes_planned(True)
+
+
+# ---------------------------------------------------------------------------
+# the 2^31 ceiling: plan accounting now, real builds under x64
+# ---------------------------------------------------------------------------
+class TestPast2Pow31:
+    """Plan-level accounting just past the int32 ceiling (pure host
+    math — no giant allocation), plus the x64-gated coordinate-dtype
+    story.  The actual multi-GiB build is env-gated
+    (``REPRO_RMQ_BIG=1``): CI asserts the plumbing, a workstation can
+    assert the build.
+    """
+
+    N_BIG = 2**31 + 4096
+
+    def test_plan_accounting_past_2pow31(self):
+        from repro.core.plan import make_plan
+
+        classic = make_plan(self.N_BIG, c=128, t=64)
+        packed = make_plan(self.N_BIG, c=128, t=64, packed_pos=True)
+        assert packed.pos_bits() == 7
+        # classic absolute positions widen to int64 past 2^31 …
+        assert classic.position_plane_bytes() \
+            == classic.upper_size * 8
+        # … while the packed plane stays at 7 bits/entry regardless
+        assert packed.position_plane_bytes() \
+            == ((packed.upper_size * 7 + 31) // 32) * 4
+        ratio = (classic.position_plane_bytes()
+                 / packed.position_plane_bytes())
+        assert ratio > 9.0, ratio
+        # the honest total: value plane + positions, still way under 30%
+        for plan in (classic, packed):
+            overhead = (plan.auxiliary_bytes_planned(True)
+                        / plan.input_bytes())
+            assert overhead < 0.30, (plan.packed_pos, overhead)
+
+    def test_x64_coordinate_dtype_selection(self):
+        """Under x64 the coordinate plane is int64 and the capacity
+        guard admits >= 2^31 on the jax path; without it both refuse
+        loudly.  Runs in a subprocess so the x64 flag never leaks into
+        this process (same discipline as the fake-mesh tests)."""
+        import subprocess
+        import sys
+
+        prog = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from repro.core import protocol as px
+from repro.core.hierarchy import pos_dtype_for
+
+N = 2**31 + 4096
+assert pos_dtype_for(N) == jnp.int64
+assert pos_dtype_for(N, strict=False) == jnp.int64
+px.check_capacity_limit(N, allow_x64=True)       # passes under x64
+try:
+    px.check_capacity_limit(N)                   # strict sites still refuse
+except ValueError as e:
+    assert "int32 query index space" in str(e)
+else:
+    raise AssertionError("strict guard must refuse regardless of x64")
+
+# small build under x64: coordinates widen, results do not move
+import numpy as np
+rng = np.random.default_rng(0)
+x = rng.integers(-4, 4, 515).astype(np.float32)
+from repro.core.api import RMQ
+r = RMQ.build(x, c=8, t=2, with_positions=True, backend="jax",
+              packed_pos=True)
+ls = rng.integers(0, 515, 64); rs = rng.integers(0, 515, 64)
+ls, rs = np.minimum(ls, rs), np.maximum(ls, rs)
+want_v = np.array([x[l:r+1].min() for l, r in zip(ls, rs)])
+want_p = np.array([l + np.argmin(x[l:r+1]) for l, r in zip(ls, rs)])
+assert np.array_equal(np.asarray(r.query(ls, rs)), want_v)
+assert np.array_equal(np.asarray(r.query_index(ls, rs)), want_p)
+
+import os
+if os.environ.get("REPRO_RMQ_BIG") == "1":
+    # the real thing: an out-of-core build just past the ceiling
+    # (needs ~10 GiB host RAM; not a CI job)
+    def source(a, b):
+        return np.zeros(b - a, np.float32)
+    big = RMQ.build_out_of_core(source, N, c=128, t=64,
+                                with_positions=True, packed_pos=True)
+    assert int(big.query_index(np.array([N - 10]),
+                               np.array([N - 1]))[0]) == N - 10
+print("X64_OK")
+"""
+        out = subprocess.run(
+            [sys.executable, "-c", prog],
+            capture_output=True, text=True, timeout=600,
+        )
+        assert out.returncode == 0, out.stderr
+        assert "X64_OK" in out.stdout
+
+    def test_without_x64_everything_refuses(self):
+        """This process has x64 off: every entry to >= 2^31 index space
+        must refuse loudly rather than wrap."""
+        from repro.core.hierarchy import pos_dtype_for
+        from repro.core import protocol as px
+
+        with pytest.raises(ValueError, match="x64"):
+            pos_dtype_for(2**31)
+        with pytest.raises(ValueError, match="int32 query index space"):
+            px.check_capacity_limit(2**31, allow_x64=True)
+        # strict=False is the query-side fallback: int32, never wraps up
+        assert pos_dtype_for(2**31, strict=False) == jnp.int32
 
 
 # ---------------------------------------------------------------------------

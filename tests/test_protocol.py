@@ -202,3 +202,98 @@ class TestValidationMessageParity:
         )
         assert len(set(msgs)) == 1, msgs
         assert "vals must be 1-D" in msgs[0]
+
+
+class TestCapacityGuardParity:
+    """Every int32-ceiling guard routes through the SHARED
+    ``protocol.check_capacity_limit`` — so the refusal text must be
+    *byte-identical* at every site (engine attach, distributed build,
+    the pallas update/append wrappers, the fused position build).  A
+    reintroduced private copy with drifting wording fails here, exactly
+    like the mutation-validator parity class above.
+    """
+
+    CAP = 2**31
+
+    def _forged(self):
+        """A tiny real index whose plan *claims* capacity = 2**31.
+
+        All guards fire on plan metadata before touching the arrays, so
+        no giant allocation happens.
+        """
+        import dataclasses as dc
+
+        # multi-level on purpose: a single-level (pure scan) plan would
+        # route the fused build through the scan branch, which guards via
+        # pos_dtype_for instead of the shared capacity guard under test
+        x = np.random.default_rng(3).random(4096).astype(np.float32)
+        rmq = RMQ.build(x, c=16, t=2, with_positions=True, backend="jax")
+        plan = dc.replace(rmq.plan, capacity=self.CAP)
+        return dc.replace(
+            rmq, hierarchy=dc.replace(rmq.hierarchy, plan=plan)
+        )
+
+    def _collect(self):
+        from repro.core.distributed import DistributedRMQ
+        from repro.kernels.hierarchy_update.ops import (
+            append_hierarchy_pallas,
+            update_hierarchy_pallas,
+        )
+        from repro.kernels.hierarchy_fused.ops import build_hierarchy_fused
+        from repro.qe import QueryEngine
+        import dataclasses as dc
+
+        forged = self._forged()
+        msgs = {}
+
+        with pytest.raises(ValueError) as ei:
+            px.check_capacity_limit(self.CAP)
+        msgs["protocol"] = str(ei.value)
+
+        with pytest.raises(ValueError) as ei:
+            QueryEngine(forged)
+        msgs["engine_attach"] = str(ei.value)
+
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        with pytest.raises(ValueError) as ei:
+            DistributedRMQ.build(
+                np.zeros(8, np.float32), mesh, c=16, t=4, capacity=self.CAP
+            )
+        msgs["distributed_build"] = str(ei.value)
+
+        with pytest.raises(ValueError) as ei:
+            update_hierarchy_pallas(
+                forged.hierarchy,
+                np.array([0], np.int32), np.array([0.0], np.float32),
+            )
+        msgs["pallas_update"] = str(ei.value)
+
+        with pytest.raises(ValueError) as ei:
+            append_hierarchy_pallas(
+                forged.hierarchy, np.array([0.0], np.float32), 64
+            )
+        msgs["pallas_append"] = str(ei.value)
+
+        # fused build guards on the synthesized level-0 extent
+        # (padded_lens[0] * c); forge it to the same 2**31 so the
+        # rendered message matches the other sites byte-for-byte
+        plan = forged.plan
+        fused_plan = dc.replace(
+            plan,
+            padded_lens=(self.CAP // plan.c,) + plan.padded_lens[1:],
+        )
+        with pytest.raises(ValueError) as ei:
+            build_hierarchy_fused(
+                np.zeros(64, np.float32), fused_plan, with_positions=True
+            )
+        msgs["fused_build"] = str(ei.value)
+        return msgs
+
+    def test_guard_message_byte_identical_everywhere(self):
+        msgs = self._collect()
+        assert msgs["protocol"] == px.capacity_limit_message(self.CAP)
+        assert len(set(msgs.values())) == 1, msgs
+        # the pinned substring older tests match against must survive
+        assert "int32 query index space" in msgs["protocol"]
+        # and the remedy must name the escape hatch
+        assert "x64" in msgs["protocol"]
